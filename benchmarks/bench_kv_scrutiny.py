@@ -1,0 +1,51 @@
+"""Beyond-paper: scrutinized serving-state checkpoints (KV-suffix saving).
+
+A decode engine mid-stream at position p has a cache sized max_len; the
+remaining program (N more decode steps) attends only to positions
+< p + N — every other slot gets a -inf bias, an exactly-zero softmax
+weight, and therefore an exactly-zero derivative.  scrutinize() (the
+paper's AD method) proves the suffix uncritical; sweeps p and reports the
+cache checkpoint reduction, plus recurrent-arch (constant-state) rows."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(out=print, max_len: int = 64, n_future: int = 2):
+    from repro.configs import get_config
+    from repro.core import ScrutinyConfig, scrutinize
+    from repro.models import init_params
+    from repro.serve.engine import Engine
+
+    out("== KV-cache scrutiny: engine-state checkpoint reduction ==")
+    out(f"(reduced configs, max_len={max_len}, resume horizon={n_future})")
+    out(f"{'arch':<22}{'pos':>5}{'cache elems':>13}{'uncritical':>12}{'saved':>8}")
+    for arch in ("phi4-mini-3.8b", "gemma2-27b", "recurrentgemma-2b",
+                 "xlstm-125m"):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, max_len)
+        for prompt_len in (8, 32):
+            toks = jax.random.randint(jax.random.PRNGKey(1), (2, prompt_len),
+                                      0, cfg.vocab)
+            batch = {"tokens": toks}
+            if cfg.enc_dec:
+                batch["frames"] = jnp.zeros((2, cfg.encoder_len, cfg.d_model))
+            state = eng.start(batch)
+            rep = scrutinize(eng.resume_fn(n_future), state,
+                             config=ScrutinyConfig(probes=2))
+            cache_leaves = [l for name, l in rep.leaves.items()
+                            if name.startswith("cache")]
+            total = sum(l.total for l in cache_leaves)
+            unc = sum(l.uncritical for l in cache_leaves)
+            out(f"{arch:<22}{prompt_len:>5}{total:>13}{unc:>12}"
+                f"{100.0*unc/max(total,1):>7.1f}%")
+    out("\nfull-attention caches shed the unwritten suffix; recurrent archs")
+    out("carry O(1) state (nothing to shed — already minimal).")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Checkpoint pack/unpack hot path: MXU-compaction kernel napkin math +
+host-measured oracle throughput + interpret-mode validation sweep.
+
+No TPU wall clock exists here; the kernel's roofline argument is:
+  per element: 8 B HBM read + ~8 B write  vs  BLOCK MACs on the MXU
+  at BLOCK=512: t_mxu = 512/197e12 = 2.6 ps < t_hbm = 16/819e9 = 19.5 ps
+⇒ the compaction matmul hides entirely under the memory stream."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(out=print):
+    from repro.kernels.mask_pack import ops as mp
+    from repro.kernels.mask_pack.kernel import BLOCK
+
+    out("== mask_pack: checkpoint compaction hot path ==")
+    t_mxu = BLOCK / 197e12
+    t_hbm = 16 / 819e9
+    out(f"BLOCK={BLOCK}: t_mxu/elem={t_mxu*1e12:.1f} ps  "
+        f"t_hbm/elem={t_hbm*1e12:.1f} ps  -> memory-bound "
+        f"(MXU util {100*t_mxu/t_hbm:.0f}% of the HBM window)")
+
+    rng = np.random.RandomState(0)
+    n = 1 << 20
+    vals = jnp.asarray(rng.randn(n), jnp.float32)
+    for frac in (0.148, 0.5, 0.9):
+        mask = jnp.asarray(rng.rand(n) < frac)
+        packed, counts = mp.pack(vals, mask, use_kernel=False)
+        jax.block_until_ready(packed)
+        t0 = time.time()
+        for _ in range(5):
+            packed, counts = mp.pack(vals, mask, use_kernel=False)
+            jax.block_until_ready(packed)
+        dt = (time.time() - t0) / 5
+        gbs = n * 4 / dt / 1e9
+        restored = mp.unpack(packed, mask, n=n, use_kernel=False)
+        okay = bool(jnp.all(jnp.where(mask, restored == vals,
+                                      restored == 0.0)))
+        out(f"critical={frac:4.0%}  host-oracle {gbs:6.2f} GB/s  "
+            f"roundtrip={'OK' if okay else 'FAIL'}")
+    out("(TPU kernel path validated in interpret mode by tests/test_kernels.py)")
+
+
+if __name__ == "__main__":
+    run()

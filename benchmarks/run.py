@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,table3,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ["table2", "table3", "kv_scrutiny", "pack", "roofline"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {BENCHES}")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else BENCHES
+
+    t0 = time.time()
+    if "table2" in wanted:
+        from benchmarks import table2_criticality
+        table2_criticality.run()
+        print()
+    if "table3" in wanted:
+        from benchmarks import table3_storage
+        table3_storage.run()
+        print()
+    if "kv_scrutiny" in wanted:
+        from benchmarks import bench_kv_scrutiny
+        bench_kv_scrutiny.run()
+        print()
+    if "pack" in wanted:
+        from benchmarks import bench_pack
+        bench_pack.run()
+        print()
+    if "roofline" in wanted:
+        from benchmarks import roofline_table
+        roofline_table.render(mesh="pod16x16")
+        print()
+    print(f"benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table II: per-variable uncritical counts on the NPB suite.
+
+Runs both engines (participation = the paper's reported semantics; AD vjp =
+the paper's method) and cross-checks against the published numbers."""
+
+from __future__ import annotations
+
+PAPER_TABLE2 = {
+    ("bt", "u"): (1500, 10140), ("sp", "u"): (1500, 10140),
+    ("mg", "u"): (7176, 46480), ("mg", "r"): (10543, 46480),
+    ("cg", "x"): (2, 1402),
+    ("lu", "qs"): (300, 2028), ("lu", "rsd"): (1500, 10140),
+    ("lu", "rho_i"): (300, 2028), ("lu", "u"): (1628, 10140),
+    ("ft", "y"): (4096, 266240),
+}
+
+
+def run(out=print):
+    from repro.npb.common import ALL_BENCHMARKS, get_benchmark
+
+    out("== Table II reproduction: uncritical/total per variable ==")
+    out(f"{'bench(var)':<16}{'paper':>16}{'participation':>16}{'AD (vjp)':>16}  match")
+    ok = True
+    for name in ALL_BENCHMARKS:
+        b = get_benchmark(name)
+        part = b.participation()
+        ad = b.scrutinize()
+        for var, leaf in sorted(part.leaves.items()):
+            paper = PAPER_TABLE2.get((name, var))
+            p = (leaf.uncritical, leaf.total)
+            a = (ad[var].uncritical, ad[var].total)
+            match = (paper is None) or (p == paper)
+            ok &= match
+            pstr = f"{paper[0]}/{paper[1]}" if paper else "—"
+            out(f"{name}({var})".ljust(16) + f"{pstr:>16}"
+                f"{f'{p[0]}/{p[1]}':>16}{f'{a[0]}/{a[1]}':>16}  "
+                f"{'OK' if match else 'MISMATCH'}")
+    out(f"\nall paper rows matched: {ok}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

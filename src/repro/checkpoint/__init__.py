@@ -1,0 +1,12 @@
+"""Scrutinized checkpoint/restart: region-packed, sharded, async,
+multi-level, partner-redundant, elastic."""
+
+from repro.checkpoint.manager import CheckpointManager, Level
+from repro.checkpoint.packing import PackedLeaf, pack_leaf, unpack_leaf
+from repro.checkpoint.store import (load_checkpoint, restore_state,
+                                    save_checkpoint)
+
+__all__ = [
+    "CheckpointManager", "Level", "PackedLeaf", "pack_leaf", "unpack_leaf",
+    "load_checkpoint", "restore_state", "save_checkpoint",
+]

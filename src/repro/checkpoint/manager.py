@@ -1,0 +1,139 @@
+"""Async, multi-level checkpoint manager with scrutinized reduction.
+
+- **Async**: saves run on a writer thread; the train loop only blocks if a
+  previous save of the same level is still in flight (double buffering) —
+  checkpoint I/O is off the critical path (straggler mitigation).
+- **Multi-level**: a list of (directory, interval) levels — e.g. node-RAM
+  (/dev/shm) every step, local disk every 10, global store every 100 —
+  restore picks the newest complete level.
+- **Scrutinized**: a CriticalityReport (from repro.core) reduces what is
+  written; re-scrutinize every ``rescrutinize_every`` saves (masks can
+  drift as control state evolves).
+- **Retention**: keep_n per level.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import load_checkpoint, restore_state, save_checkpoint
+from repro.core.criticality import CriticalityReport
+from repro.core.policy import PrecisionPolicy
+
+
+@dataclasses.dataclass
+class Level:
+    directory: str
+    interval: int = 1
+    keep_n: int = 2
+    shards: int = 1
+    parity: bool = False
+
+
+class CheckpointManager:
+    def __init__(self, levels: Sequence[Level],
+                 scrutiny_fn: Optional[Callable[[Any], CriticalityReport]] = None,
+                 precision: Optional[PrecisionPolicy] = None,
+                 rescrutinize_every: int = 0):
+        self.levels = list(levels)
+        for lv in self.levels:
+            os.makedirs(lv.directory, exist_ok=True)
+        self.scrutiny_fn = scrutiny_fn
+        self.precision = precision
+        self.rescrutinize_every = rescrutinize_every
+        self._report: Optional[CriticalityReport] = None
+        self._saves = 0
+        self._pool = cf.ThreadPoolExecutor(max_workers=2)
+        self._inflight: Dict[str, cf.Future] = {}
+        self._lock = threading.Lock()
+
+    # --- save ------------------------------------------------------------
+
+    def maybe_report(self, state) -> Optional[CriticalityReport]:
+        if self.scrutiny_fn is None:
+            return None
+        need = (self._report is None or
+                (self.rescrutinize_every and
+                 self._saves % self.rescrutinize_every == 0))
+        if need:
+            self._report = self.scrutiny_fn(state)
+        return self._report
+
+    def save(self, step: int, state, block: bool = False) -> List[cf.Future]:
+        """Snapshot to host memory, then write asynchronously per level."""
+        host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+        report = self.maybe_report(host_state)
+        self._saves += 1
+        futs = []
+        for lv in self.levels:
+            if step % lv.interval:
+                continue
+            prev = self._inflight.get(lv.directory)
+            if prev is not None:
+                prev.result()  # double buffer: at most one in flight/level
+
+            def write(lv=lv, host_state=host_state, report=report, step=step):
+                path = save_checkpoint(lv.directory, step, host_state,
+                                       report=report,
+                                       precision=self.precision,
+                                       shards=lv.shards, parity=lv.parity)
+                self._gc(lv)
+                return path
+
+            fut = self._pool.submit(write)
+            self._inflight[lv.directory] = fut
+            futs.append(fut)
+        if block:
+            for f in futs:
+                f.result()
+        return futs
+
+    def wait(self):
+        for f in list(self._inflight.values()):
+            f.result()
+
+    def _gc(self, lv: Level):
+        with self._lock:
+            steps = sorted(int(d.split("_")[1])
+                           for d in os.listdir(lv.directory)
+                           if d.startswith("step_"))
+            for s in steps[:-lv.keep_n]:
+                shutil.rmtree(os.path.join(lv.directory, f"step_{s}"),
+                              ignore_errors=True)
+
+    # --- restore -----------------------------------------------------------
+
+    def latest(self) -> Optional[Tuple[int, str]]:
+        best = None
+        for lv in self.levels:
+            try:
+                steps = [int(d.split("_")[1])
+                         for d in os.listdir(lv.directory)
+                         if d.startswith("step_")]
+            except FileNotFoundError:
+                continue
+            for s in steps:
+                if os.path.exists(os.path.join(lv.directory, f"step_{s}",
+                                               "manifest.json")):
+                    if best is None or s > best[0]:
+                        best = (s, lv.directory)
+        return best
+
+    def restore(self, state_like, shardings=None,
+                fill=0) -> Optional[Tuple[int, Any]]:
+        """Newest complete checkpoint across levels → (step, state); None if
+        nothing to restore.  Elastic: works on any mesh via shardings."""
+        found = self.latest()
+        if found is None:
+            return None
+        step, root = found
+        step, leaves = load_checkpoint(root, step, fill=fill)
+        return step, restore_state(state_like, leaves, shardings)

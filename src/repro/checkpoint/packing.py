@@ -1,0 +1,172 @@
+"""Leaf-level scrutinized packing: criticality mask → (payload, aux).
+
+Two aux encodings per leaf (the cheaper wins, recorded in the manifest):
+- ``regions``: the paper's (start, stop) int64 runs;
+- ``bitmap``: 1 bit/element (fragmented masks).
+
+Beyond-paper precision tiers (the paper's §VII future work): each critical
+*region* is assigned a storage dtype from the |∂out/∂x| quantiles of the
+leaf's sensitivity magnitudes — high-impact regions keep the native dtype,
+low-impact regions are stored in bf16/f8-like truncated floats.  Restart
+error bounds are validated in tests/test_precision_tiers.py.
+
+The device-side hot path (blocked compaction) is kernels/mask_pack; this
+module is the host-side format layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.criticality import LeafReport
+from repro.core.policy import PrecisionPolicy
+from repro.core.regions import mask_to_regions
+
+
+def _np_dtype(d) -> np.dtype:
+    return np.dtype(d) if not isinstance(d, str) else np.dtype(d)
+
+
+def _truncate_mantissa(x: np.ndarray, bits: int) -> np.ndarray:
+    """Keep ``bits`` mantissa bits of a float32 array (f8-like storage that
+    remains a real dtype on disk)."""
+    assert x.dtype == np.float32
+    u = x.view(np.uint32)
+    drop = 23 - bits
+    u = (u >> drop) << drop
+    return u.view(np.float32)
+
+
+@dataclasses.dataclass
+class PackedLeaf:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+    encoding: str                      # full | regions | bitmap
+    aux: bytes                         # regions int64 pairs or bitmap bits
+    num_regions: int
+    payload: bytes
+    checksum: int
+    # precision tiers: per-region dtype index into tier_dtypes
+    tier_dtypes: Tuple[str, ...] = ()
+    region_tiers: bytes = b""          # int8 per region
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload) + len(self.aux) + len(self.region_tiers)
+
+
+def pack_leaf(name: str, arr: np.ndarray, mask: Optional[np.ndarray],
+              magnitude: Optional[np.ndarray] = None,
+              precision: Optional[PrecisionPolicy] = None) -> PackedLeaf:
+    """arr: host array; mask: flat bool (None = checkpoint fully)."""
+    arr = np.asarray(arr)
+    flat = arr.reshape(-1)
+    tiering = (precision is not None and precision.enabled
+               and magnitude is not None
+               and np.issubdtype(flat.dtype, np.floating))
+    if mask is None or (mask.all() and not tiering):
+        payload = flat.tobytes()
+        return PackedLeaf(name=name, shape=tuple(arr.shape),
+                          dtype=str(arr.dtype), encoding="full", aux=b"",
+                          num_regions=1, payload=payload,
+                          checksum=zlib.crc32(payload))
+
+    regions = mask_to_regions(mask)
+    region_bytes = regions.astype(np.int64).tobytes()
+    bitmap = np.packbits(mask).tobytes()
+    if len(region_bytes) <= len(bitmap):
+        encoding, aux = "regions", region_bytes
+    else:
+        encoding, aux = "bitmap", bitmap
+
+    tiers: Tuple[str, ...] = ()
+    region_tiers = b""
+    if precision is not None and precision.enabled and len(regions) and \
+            magnitude is not None and np.issubdtype(flat.dtype, np.floating):
+        # subdivide regions so tier quantiles bite even on solid masks;
+        # tiers force the regions encoding (tier ids index these regions)
+        TIER_BLOCK = 256
+        sub = []
+        for s, e in regions:
+            for b0 in range(s, e, TIER_BLOCK):
+                sub.append((b0, min(b0 + TIER_BLOCK, e)))
+        regions = np.asarray(sub, np.int64)
+        encoding, aux = "regions", regions.tobytes()
+        # per-region sensitivity = max |grad| over the region's elements
+        sens = np.array([magnitude[s:e].max() for s, e in regions])
+        qs = np.concatenate([[np.inf],
+                             [np.quantile(sens, 1.0 - t.quantile)
+                              for t in precision.tiers]])
+        tier_of = np.zeros(len(regions), np.int8)
+        for ti, t in enumerate(precision.tiers):
+            tier_of[sens < qs[ti]] = ti
+        chunks = []
+        tiers = tuple(
+            "native" if t.dtype is None
+            else ("bf16t" if t.mantissa_bits is not None else "bf16")
+            for t in precision.tiers)
+        for (s, e), ti in zip(regions, tier_of):
+            seg = flat[s:e]
+            t = precision.tiers[ti]
+            if t.dtype is None:
+                chunks.append(seg.tobytes())
+            else:
+                seg32 = seg.astype(np.float32)
+                if t.mantissa_bits is not None:
+                    seg32 = _truncate_mantissa(seg32, t.mantissa_bits)
+                # bf16 on disk = upper 2 bytes of big-endian f32
+                bf = (seg32.view(np.uint32) >> 16).astype(np.uint16)
+                chunks.append(bf.tobytes())
+        payload = b"".join(chunks)
+        region_tiers = tier_of.tobytes()
+    else:
+        chunks = [flat[s:e].tobytes() for s, e in regions]
+        payload = b"".join(chunks)
+
+    return PackedLeaf(name=name, shape=tuple(arr.shape), dtype=str(arr.dtype),
+                      encoding=encoding, aux=aux, num_regions=len(regions),
+                      payload=payload, checksum=zlib.crc32(payload),
+                      tier_dtypes=tiers, region_tiers=region_tiers)
+
+
+def unpack_leaf(p: PackedLeaf, fill=0) -> np.ndarray:
+    dtype = _np_dtype(p.dtype)
+    n = int(np.prod(p.shape)) if p.shape else 1
+    if zlib.crc32(p.payload) != p.checksum:
+        raise IOError(f"checksum mismatch for leaf {p.name}")
+    if p.encoding == "full":
+        return np.frombuffer(p.payload, dtype=dtype).reshape(p.shape)
+
+    if p.encoding == "regions":
+        regions = np.frombuffer(p.aux, np.int64).reshape(-1, 2)
+    else:
+        bits = np.unpackbits(np.frombuffer(p.aux, np.uint8))[:n].astype(bool)
+        regions = mask_to_regions(bits)
+
+    out = np.full(n, fill, dtype=dtype)
+    off = 0
+    if p.region_tiers:
+        tier_of = np.frombuffer(p.region_tiers, np.int8)
+        for (s, e), ti in zip(regions, tier_of):
+            cnt = e - s
+            if p.tier_dtypes[ti].startswith("bf16"):
+                raw = np.frombuffer(p.payload, np.uint16,
+                                    count=cnt, offset=off)
+                vals = (raw.astype(np.uint32) << 16).view(np.float32)
+                out[s:e] = vals.astype(dtype)
+                off += 2 * cnt
+            else:
+                out[s:e] = np.frombuffer(p.payload, dtype, count=cnt,
+                                         offset=off)
+                off += dtype.itemsize * cnt
+    else:
+        for s, e in regions:
+            cnt = e - s
+            out[s:e] = np.frombuffer(p.payload, dtype, count=cnt, offset=off)
+            off += dtype.itemsize * cnt
+    return out.reshape(p.shape)

@@ -1,0 +1,53 @@
+"""repro.core — the paper's contribution: AD-based checkpoint criticality.
+
+Public API:
+    scrutinize(fn, state, config=...)  -> CriticalityReport
+    CriticalityReport / LeafReport
+    RegionTable, mask_to_regions, regions_to_mask
+    ScrutinyConfig, LeafPolicy, PrecisionPolicy
+    report.summary_table / storage_table / render_distribution
+"""
+
+from repro.core.criticality import (
+    CriticalityReport,
+    LeafReport,
+    scrutinize,
+    scrutinize_jaxpr_reads,
+)
+from repro.core.policy import (
+    LeafPolicy,
+    PrecisionPolicy,
+    PrecisionTier,
+    ScrutinyConfig,
+    TIERED_BF16,
+    default_leaf_policy,
+)
+from repro.core.regions import (
+    RegionTable,
+    mask_to_regions,
+    pack_with_regions,
+    regions_to_mask,
+    unpack_with_regions,
+)
+from repro.core.taint import participation
+from repro.core import report
+
+__all__ = [
+    "CriticalityReport",
+    "LeafReport",
+    "scrutinize",
+    "scrutinize_jaxpr_reads",
+    "participation",
+    "LeafPolicy",
+    "PrecisionPolicy",
+    "PrecisionTier",
+    "ScrutinyConfig",
+    "TIERED_BF16",
+    "default_leaf_policy",
+    "RegionTable",
+    "mask_to_regions",
+    "regions_to_mask",
+    "pack_with_regions",
+    "unpack_with_regions",
+    "report",
+]

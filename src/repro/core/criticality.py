@@ -1,0 +1,284 @@
+"""AD-based element criticality analysis (the paper's §III, in JAX).
+
+``scrutinize(fn, state)`` treats ``fn`` — *the rest of the program after the
+checkpoint* — as a function of the checkpointed state and computes, with
+reverse-mode AD, the derivative of the output w.r.t. every element of every
+state leaf.  Elements whose derivative is identically zero are **uncritical**
+and may be excluded from the checkpoint (paper's definition, §I).
+
+Differences from the paper's Enzyme pipeline (see DESIGN.md §7):
+
+- One reverse pass per *output cotangent* yields sensitivities for **all**
+  elements at once (the paper loops per element) — O(K·cost(f)) not
+  O(N·cost(f)).
+- K-probe union: we draw K dense random output cotangents (and optionally
+  jitter the primal inputs) and take the union of non-zero masks, so an
+  element is only declared uncritical if its gradient vanishes under every
+  probe.  A *used* element is misclassified only if random dense cotangents
+  repeatedly land on a measure-zero cancellation.
+- Integer/bool leaves are handled by an explicit policy (ALWAYS_CRITICAL by
+  default) instead of prose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import LeafPolicy, PrecisionPolicy, ScrutinyConfig
+from repro.core.regions import RegionTable
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        elif isinstance(p, jax.tree_util.FlattenedIndexKey):
+            parts.append(str(p.key))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts) if parts else "<root>"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafReport:
+    """Criticality verdict for one state leaf."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: Any
+    policy: LeafPolicy
+    mask: np.ndarray  # flat bool, True == critical
+    table: RegionTable
+    # max |∂out/∂x| over probes, flat; only kept when tiering is enabled.
+    magnitude: Optional[np.ndarray] = None
+
+    @property
+    def total(self) -> int:
+        return self.table.size
+
+    @property
+    def critical(self) -> int:
+        return self.table.critical_count
+
+    @property
+    def uncritical(self) -> int:
+        return self.table.uncritical_count
+
+    @property
+    def uncritical_rate(self) -> float:
+        return self.table.uncritical_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class CriticalityReport:
+    """scrutinize() result: one LeafReport per state leaf, + aggregates."""
+
+    leaves: Dict[str, LeafReport]
+
+    def __getitem__(self, name: str) -> LeafReport:
+        return self.leaves[name]
+
+    @property
+    def total_elements(self) -> int:
+        return sum(l.total for l in self.leaves.values())
+
+    @property
+    def uncritical_elements(self) -> int:
+        return sum(l.uncritical for l in self.leaves.values())
+
+    @property
+    def uncritical_rate(self) -> float:
+        t = self.total_elements
+        return self.uncritical_elements / t if t else 0.0
+
+    @property
+    def full_bytes(self) -> int:
+        return sum(l.table.full_bytes for l in self.leaves.values())
+
+    @property
+    def optimized_bytes(self) -> int:
+        return sum(l.table.optimized_bytes for l in self.leaves.values())
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(l.table.payload_bytes for l in self.leaves.values())
+
+    @property
+    def storage_saved(self) -> float:
+        """Engineering accounting (payload + aux structures)."""
+        fb = self.full_bytes
+        return 1.0 - self.optimized_bytes / fb if fb else 0.0
+
+    @property
+    def paper_storage_saved(self) -> float:
+        """Paper Table III accounting (payload only; aux not charged)."""
+        fb = self.full_bytes
+        return 1.0 - self.payload_bytes / fb if fb else 0.0
+
+    def masks(self) -> Dict[str, np.ndarray]:
+        return {k: v.mask for k, v in self.leaves.items()}
+
+    def summary_rows(self):
+        for name, l in sorted(self.leaves.items()):
+            yield (name, l.uncritical, l.total, l.uncritical_rate, l.policy.value)
+
+
+def _random_like_output(key, out_leaves):
+    """Dense random cotangents for the inexact output leaves."""
+    cts = []
+    for leaf in out_leaves:
+        key, sub = jax.random.split(key)
+        dtype = leaf.dtype
+        if jnp.issubdtype(dtype, jnp.complexfloating):
+            re = jax.random.normal(sub, leaf.shape, jnp.float64 if dtype == jnp.complex128 else jnp.float32)
+            key, sub = jax.random.split(key)
+            im = jax.random.normal(sub, leaf.shape, re.dtype)
+            cts.append((re + 1j * im).astype(dtype))
+        else:
+            cts.append(jax.random.normal(sub, leaf.shape, dtype))
+    return cts
+
+
+def _jitter_leaf(key, leaf, rel):
+    noise = jax.random.normal(key, leaf.shape, jnp.float32).astype(leaf.dtype)
+    scale = jnp.maximum(jnp.abs(leaf), jnp.asarray(1.0, leaf.dtype))
+    return leaf + rel * scale * noise
+
+
+def scrutinize(
+    fn: Callable[[Any], Any],
+    state: Any,
+    *,
+    config: ScrutinyConfig = ScrutinyConfig(),
+    key: Optional[jax.Array] = None,
+) -> CriticalityReport:
+    """Run the paper's AD criticality analysis on ``fn`` at ``state``.
+
+    ``fn``: checkpoint-state → program output (pytree; at least one inexact
+    leaf).  Must be jax-traceable and pure.
+    ``state``: pytree of arrays — the variables necessary for checkpointing.
+
+    Returns a CriticalityReport with one flat bool mask per state leaf.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
+    names = [_path_str(p) for p, _ in leaves_with_path]
+    leaves = [jnp.asarray(l) for _, l in leaves_with_path]
+    policies = [config.leaf_policy(l) for l in leaves]
+
+    ad_idx = [i for i, p in enumerate(policies) if p in (LeafPolicy.AD, LeafPolicy.HORIZON)]
+
+    # --- reverse-mode sweep over AD leaves -----------------------------
+    magnitudes: Dict[int, np.ndarray] = {}
+    if ad_idx:
+        keep_mag = True  # cheap; needed for precision tiers + report rendering
+
+        def g(diff_leaves):
+            full = list(leaves)
+            for i, leaf in zip(ad_idx, diff_leaves):
+                full[i] = leaf
+            out = fn(jax.tree_util.tree_unflatten(treedef, full))
+            out_leaves = [o for o in jax.tree_util.tree_leaves(out)
+                          if jnp.issubdtype(jnp.asarray(o).dtype, jnp.inexact)]
+            if not out_leaves:
+                raise ValueError(
+                    "scrutinize: fn produced no differentiable outputs; "
+                    "criticality via AD is undefined."
+                )
+            return out_leaves
+
+        diff_leaves = [leaves[i] for i in ad_idx]
+        accum = [np.zeros(int(np.prod(l.shape)) or 1, dtype=np.float64) for l in diff_leaves]
+
+        probe_key = key
+        primal = diff_leaves
+        vjp_fn = None
+        out_shape = None
+        for probe in range(max(1, config.probes)):
+            probe_key, ct_key, jit_key = jax.random.split(probe_key, 3)
+            if config.input_jitter > 0.0 and probe > 0:
+                jkeys = jax.random.split(jit_key, len(diff_leaves))
+                primal = [_jitter_leaf(k, l, config.input_jitter)
+                          for k, l in zip(jkeys, diff_leaves)]
+                vjp_fn = None  # primal changed → fresh linearization
+            if vjp_fn is None:
+                out_shape, vjp_fn = jax.vjp(g, primal)
+            cts = _random_like_output(ct_key, out_shape)
+            (grads,) = vjp_fn(cts)
+            for j, grad in enumerate(grads):
+                mag = np.abs(np.asarray(grad, dtype=np.complex128 if jnp.issubdtype(grad.dtype, jnp.complexfloating) else np.float64))
+                mag = np.asarray(np.abs(mag), dtype=np.float64).reshape(-1)
+                np.maximum(accum[j], mag, out=accum[j])
+
+        for j, i in enumerate(ad_idx):
+            magnitudes[i] = accum[j]
+
+    # --- assemble per-leaf reports --------------------------------------
+    reports: Dict[str, LeafReport] = {}
+    for i, (name, leaf, pol) in enumerate(zip(names, leaves, policies)):
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        if pol in (LeafPolicy.AD, LeafPolicy.HORIZON):
+            mask = magnitudes[i] > config.zero_tol
+        elif pol == LeafPolicy.ALWAYS_CRITICAL:
+            mask = np.ones(n, dtype=bool)
+        else:  # ALWAYS_UNCRITICAL
+            mask = np.zeros(n, dtype=bool)
+        table = RegionTable.from_mask(mask, itemsize=np.dtype(leaf.dtype).itemsize)
+        table.validate()
+        reports[name] = LeafReport(
+            name=name,
+            shape=tuple(leaf.shape),
+            dtype=np.dtype(leaf.dtype),
+            policy=pol,
+            mask=mask,
+            table=table,
+            magnitude=magnitudes.get(i),
+        )
+    return CriticalityReport(leaves=reports)
+
+
+def scrutinize_jaxpr_reads(fn: Callable[[Any], Any], state: Any) -> Dict[str, bool]:
+    """Cheap structural pre-pass: which *whole leaves* reach any output.
+
+    Complements the element-level AD sweep — a leaf that is dead in the jaxpr
+    is uncritical in toto without a backward pass.  Element-granular analysis
+    still requires AD (this is the paper's key point).
+    """
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
+    names = [_path_str(p) for p, _ in leaves_with_path]
+    closed = jax.make_jaxpr(lambda s: fn(s))(state)
+
+    used: Dict[str, bool] = {}
+    # jaxpr invars correspond 1:1 with flattened state leaves.
+    invars = closed.jaxpr.invars
+    live = _live_vars(closed.jaxpr)
+    for name, var in zip(names, invars):
+        used[name] = var in live
+    return used
+
+
+def _live_vars(jaxpr) -> set:
+    """Variables that (transitively) feed jaxpr outputs (conservative)."""
+    from jax.extend import core as jex_core
+
+    literal = jex_core.Literal
+    live = set(v for v in jaxpr.outvars if not isinstance(v, literal))
+    for eqn in reversed(jaxpr.eqns):
+        if any(v in live for v in eqn.outvars):
+            for v in eqn.invars:
+                if not isinstance(v, literal):
+                    live.add(v)
+    return live

@@ -1,0 +1,110 @@
+"""Per-leaf criticality policies.
+
+The paper (§III-A, §IV-B) treats differentiable floating-point state with AD
+and declares integer control state (loop indices, sort keys, verification
+counters) "obviously critical".  We encode that prose as explicit policies so
+the engine's behaviour on every dtype is auditable.
+
+Policies
+--------
+``AD``               – run the multi-probe vjp analysis (floating/complex).
+``ALWAYS_CRITICAL``  – skip AD, mark every element critical (default for
+                       integer / bool leaves: AD is undefined on them and they
+                       are control state — paper's `step`, `key_array`, …).
+``ALWAYS_UNCRITICAL``– skip AD, drop the leaf entirely (caller-asserted dead
+                       state, e.g. scratch buffers; used sparingly).
+``HORIZON``          – AD over the analysis window only; elements critical to
+                       *some longer* horizon may be misclassified.  Used for
+                       MoE cold-expert reporting; never a default.
+
+Precision tiers (beyond-paper, the paper's own future-work §VII)
+----------------------------------------------------------------
+``PrecisionPolicy`` maps |∂out/∂x| quantiles of *critical* elements onto
+storage dtypes, e.g. top 50 % sensitivity → keep dtype, next 45 % → bf16,
+last 5 % → truncated-mantissa bf16.  ``tiers=()`` disables tiering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class LeafPolicy(enum.Enum):
+    AD = "ad"
+    ALWAYS_CRITICAL = "always_critical"
+    ALWAYS_UNCRITICAL = "always_uncritical"
+    HORIZON = "horizon"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionTier:
+    """Storage tier for a sensitivity quantile band.
+
+    ``quantile``: upper |grad| quantile boundary in (0, 1]; tiers are applied
+    from most- to least-sensitive.  ``dtype``: storage dtype for the band.
+    ``mantissa_bits``: optionally truncate mantissa further (emulates fp8-ish
+    storage while staying a real jnp dtype on disk).
+    """
+
+    quantile: float
+    dtype: Any
+    mantissa_bits: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    tiers: Sequence[PrecisionTier] = ()
+
+    @property
+    def enabled(self) -> bool:
+        return len(self.tiers) > 0
+
+
+DEFAULT_PRECISION = PrecisionPolicy()
+
+# A reasonable beyond-paper default: half the critical elements keep native
+# precision, the rest are stored in bf16.  Restart-error is validated by
+# tests/test_precision_tiers.py before anyone should enable this in prod.
+TIERED_BF16 = PrecisionPolicy(
+    tiers=(
+        PrecisionTier(quantile=0.5, dtype=None),  # None == keep native dtype
+        PrecisionTier(quantile=1.0, dtype=jnp.bfloat16),
+    )
+)
+
+
+def default_leaf_policy(leaf: Any) -> LeafPolicy:
+    """Paper-faithful default: AD for inexact dtypes, critical otherwise."""
+    dtype = leaf.dtype if hasattr(leaf, "dtype") else np.result_type(type(leaf))
+    if jnp.issubdtype(dtype, jnp.inexact):
+        return LeafPolicy.AD
+    return LeafPolicy.ALWAYS_CRITICAL
+
+
+@dataclasses.dataclass(frozen=True)
+class ScrutinyConfig:
+    """Configuration for a scrutinize() run.
+
+    ``probes``: number of random output cotangents; the union of non-zero
+    gradient masks over probes is the critical set.  Probability that a
+    genuinely-used element is missed decays exponentially in ``probes``
+    (each probe's cotangent is dense-random, so cancellation must recur).
+    ``input_jitter``: optional relative perturbation applied to the state
+    between probes to move off gradient zero-crossings (ReLU-dead-zone
+    style false-uncriticals).
+    ``zero_tol``: |grad| ≤ zero_tol counts as zero.  The paper uses exact 0;
+    we default to exact 0 too, jitter + probes handle robustness.
+    ``leaf_policy``: dtype → LeafPolicy map (see default_leaf_policy).
+    ``precision``: beyond-paper sensitivity tiering of critical elements.
+    """
+
+    probes: int = 3
+    input_jitter: float = 0.0
+    zero_tol: float = 0.0
+    leaf_policy: Callable[[Any], LeafPolicy] = default_leaf_policy
+    precision: PrecisionPolicy = DEFAULT_PRECISION

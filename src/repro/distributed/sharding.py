@@ -1,0 +1,195 @@
+"""Per-arch PartitionSpec rules (DP / FSDP / TP / EP / SP).
+
+The mesh has axes (data, model) per pod, plus a leading ``pod`` axis in the
+multi-pod configuration.  Data parallelism runs over (pod, data); tensor
+parallelism over ``model``; experts (EP) shard their leading expert axis
+over ``model``; FSDP additionally shards large parameter matrices over the
+data axes (required for deepseek-v3 / qwen1.5-32b / gemma2-27b).
+
+Rules are name-based over the flattened param tree — auditable with
+``describe_shardings``.  GSPMD handles non-divisible dims by padding, so
+rules do not need divisibility checks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(cfg, mesh: Mesh, name: str, leaf) -> P:
+    """PartitionSpec for one parameter leaf (name = '/'-joined path)."""
+    dp = data_axes(mesh)
+    fs = dp if cfg.fsdp else None  # FSDP shard axis group (or None)
+    nd = len(leaf.shape)
+    last = name.rsplit("/", 1)[-1]
+    has_stack = "segments" in name or "blocks" in name  # leading scan dim
+
+    def spec(*dims):
+        """dims for the *logical* (unstacked) shape; prepend None if stacked."""
+        if has_stack:
+            return P(*((None,) + dims))
+        return P(*dims)
+
+    logical_nd = nd - 1 if has_stack else nd
+
+    # --- embeddings / head ---
+    if name == "embed":
+        return P("model", fs)              # vocab over TP, d over FSDP
+    if name == "lm_head":
+        return P(fs, "model")
+
+    # --- norms / scalars ---
+    if last in ("scale", "bias", "lambda") or logical_nd <= 1:
+        return spec(*(None,) * logical_nd)
+
+    # --- MoE experts: EP over the expert axis ---
+    if "/moe/" in name or name.endswith("/moe"):
+        if last == "router":
+            return spec(None, None)
+        if "shared" in name:
+            if last in ("wi", "wg"):
+                return spec(None, fs, "model")
+            return spec(None, "model", fs)
+        if last in ("wi", "wg"):       # (E, d, f)
+            return spec("model", fs, None)
+        if last == "wo":               # (E, f, d)
+            return spec("model", None, fs)
+
+    # --- attention / mixers ---
+    if last in ("wq", "wk", "wv", "wz", "wi", "wf", "wg",
+                "wq_b", "wk_b", "wv_b", "w_in", "w_gate"):
+        return spec(fs, "model")           # column parallel
+    if last in ("wo", "w_out"):
+        return spec("model", fs)           # row parallel
+    if last in ("wq_a", "wkv_a"):
+        return spec(fs, None)              # low-rank down-proj (small out dim)
+    if last in ("bq", "bk", "bv"):
+        return spec("model")
+    if last == "conv":
+        return spec(None, "model")
+    if last in ("w_a", "w_x"):             # (r, r) LRU gates
+        return spec(None, "model")
+    if last in ("rz", "ri", "rf", "ro"):   # (H, hd, hd) sLSTM recurrent
+        return spec("model", None, None)
+
+    return spec(*(None,) * logical_nd)
+
+
+def fit_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axes whose size does not divide the dim (jit in_shardings
+    require exact divisibility).  Handles tuple axis entries by keeping the
+    longest divisible prefix of the group."""
+    dims = list(spec)
+    dims = dims + [None] * (len(shape) - len(dims))
+    out = []
+    for d, n in zip(dims, shape):
+        if d is None:
+            out.append(None)
+            continue
+        axes = d if isinstance(d, tuple) else (d,)
+        kept = []
+        prod = 1
+        for a in axes:
+            sz = mesh.shape[a]
+            if n % (prod * sz) == 0:
+                kept.append(a)
+                prod *= sz
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+def params_shardings(cfg, mesh: Mesh, params_shape) -> Any:
+    """Map a params pytree (arrays or ShapeDtypeStructs) to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        p = param_spec(cfg, mesh, _path_str(path), leaf)
+        out.append(NamedSharding(mesh, fit_spec(mesh, p, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(cfg, mesh: Mesh, batch_shape, *, seq_shard: bool = False):
+    """Batch dim over (pod, data); optional SP shards the seq dim over
+    ``model`` (long-context training)."""
+    dp = data_axes(mesh)
+    sp = "model" if seq_shard else None
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if nd == 1:
+            spec = P(None)
+        elif nd == 2:   # (B, T)
+            spec = P(dp, sp)
+        else:           # (B, T, d) stub embeddings / (B, T, 3) positions
+            spec = P(dp, sp, *(None,) * (nd - 2))
+        return NamedSharding(mesh, fit_spec(mesh, spec, leaf.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def cache_shardings(cfg, mesh: Mesh, cache_shape):
+    """KV caches: batch over (pod, data), heads/latent dim over model."""
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        last = name.rsplit("/", 1)[-1]
+        nd = len(leaf.shape)
+        # stacked over a leading scan dim inside segments
+        stacked = "seg" in name
+        pre = (None,) if stacked else ()
+        lnd = nd - len(pre)
+        if last in ("k", "v", "xk", "xv") and lnd == 4:   # (B,S,K,hd)
+            spec = P(*pre, dp, None, "model", None)
+        elif last in ("c_kv", "k_pe") and lnd == 3:       # (B,S,R) MLA latent
+            spec = P(*pre, dp, None, None)
+        elif last == "C" and lnd == 4:                    # (B,H,hd,hd)
+            spec = P(*pre, dp, "model", None, None)
+        elif lnd >= 2:
+            spec = P(*pre, dp, *(None,) * (lnd - 1))
+        else:
+            spec = P(*pre, *(None,) * lnd)
+        return NamedSharding(mesh, fit_spec(mesh, spec, leaf.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def describe_shardings(cfg, mesh: Mesh, tree, shardings, limit=40) -> str:
+    flat_t = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat_s = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    lines = []
+    for (path, leaf), sh in list(zip(flat_t, flat_s))[:limit]:
+        lines.append(f"{_path_str(path):<60} {str(leaf.shape):<24} {sh.spec}")
+    return "\n".join(lines)

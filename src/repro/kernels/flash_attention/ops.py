@@ -1,0 +1,50 @@
+"""Public entry for flash attention: TPU kernel, interpret-mode on CPU."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "scale",
+                                             "attn_cap", "interpret"))
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *,
+                    window: Optional[int] = None, causal: bool = True,
+                    scale: Optional[float] = None,
+                    attn_cap: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    """Drop-in attention for the train/prefill contract (positions are
+    arange; ``q_pos``/``k_pos`` accepted for signature compatibility).
+
+    Pads T to the 128-block grid, dispatches to the Pallas kernel (interpret
+    mode off-TPU), unpads.  Falls back to the jnp oracle for shapes the
+    kernel does not serve (tiny T)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    B, Tq = q.shape[:2]
+    Tk = k.shape[1]
+    if Tq < 16 or Tk < 16:
+        return flash_attention_ref(q, k, v, window=window, causal=causal,
+                                   scale=scale, attn_cap=attn_cap)
+    bq = min(128, Tq)
+    bk = min(128, Tk)
+    pq = (-Tq) % bq
+    pk = (-Tk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    itp = (not _on_tpu()) if interpret is None else interpret
+    o = flash_attention_kernel(qp, kp, vp, scale=scale, causal=causal,
+                               window=window, attn_cap=attn_cap,
+                               block_q=bq, block_k=bk, interpret=itp)
+    return o[:, :Tq]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -2.3819763e38
+
+
+def flash_attention_ref(q, k, v, *, window: Optional[int] = None,
+                        causal: bool = True, scale: Optional[float] = None,
+                        attn_cap: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,Tq,H,D) k: (B,Tk,K,D) v: (B,Tk,K,Dv); positions are arange
+    (train/prefill contract).  Returns (B,Tq,H,Dv) in q.dtype."""
+    B, Tq, H, D = q.shape
+    Tk, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Tq, K, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qf, k.astype(jnp.float32))
+    if attn_cap is not None:
+        s = attn_cap * jnp.tanh(s / attn_cap)
+    qi = jnp.arange(Tq)[:, None]
+    ki = jnp.arange(Tk)[None, :]
+    ok = jnp.ones((Tq, Tk), bool)
+    if causal:
+        ok &= qi >= ki
+    if window is not None:
+        ok &= qi - ki < window
+    s = s + jnp.where(ok, 0.0, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, v.shape[-1]).astype(q.dtype)

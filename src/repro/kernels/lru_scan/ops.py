@@ -1,0 +1,28 @@
+"""Public entry for the LRU scan: kernel on TPU, interpret/oracle on CPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lru_scan.kernel import lru_scan_kernel
+from repro.kernels.lru_scan.ref import lru_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def lru_scan(a: jnp.ndarray, b: jnp.ndarray, h0=None, *,
+             use_kernel: bool | None = None) -> jnp.ndarray:
+    """h_t = a_t ⊙ h_{t-1} + b_t over axis 1; a, b: (B, T, R)."""
+    B, T, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), a.dtype)
+    uk = _on_tpu() if use_kernel is None else use_kernel
+    if not uk or T % 8 or R % 128:
+        return lru_scan_ref(a, b, h0)
+    return lru_scan_kernel(a, b, h0)

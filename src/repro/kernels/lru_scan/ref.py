@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the blocked linear-recurrence scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                 h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t, over axis 1.
+
+    a, b: (B, T, R); h0: (B, R) initial state (zeros if None).
+    Returns h: (B, T, R)."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), a.dtype)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

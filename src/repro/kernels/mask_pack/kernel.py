@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for blocked mask pack/unpack.
+
+TPU adaptation (DESIGN.md §2): TPUs have no scatter unit, so per-tile
+left-compaction is expressed as a **0/1 permutation matmul on the MXU**:
+
+    P[i, j] = (cumsum(mask)[j] - 1 == i) & mask[j]
+    packed  = P @ values          (pack)
+    values' = Pᵀ @ packed         (unpack)
+
+Each row of P has at most one 1, so the matmul is numerically exact.  At
+BLOCK = 512 the matmul adds 512 MACs per element — cheaper on the MXU than
+the 8-byte HBM traffic per element, so the pass stays memory-bound (the
+napkin math and measured roofline terms are in EXPERIMENTS.md §Perf).
+
+Grid: one program per tile; mask arrives as int8 (TPU-friendly lane type).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 512
+
+
+def _perm_matrix(m_i32):
+    """(BLOCK,) int32 0/1 mask → (BLOCK, BLOCK) f32 compaction matrix."""
+    block = m_i32.shape[0]
+    pos = jnp.cumsum(m_i32) - 1                                  # (BLOCK,)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    p = (rows == pos[None, :]) & (m_i32[None, :] > 0)
+    return p.astype(jnp.float32)
+
+
+def _pack_kernel(v_ref, m_ref, out_ref, cnt_ref):
+    v = v_ref[0, :].astype(jnp.float32)
+    m = m_ref[0, :].astype(jnp.int32)
+    p = _perm_matrix(m)
+    packed = jax.lax.dot_general(p, v[:, None], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)[:, 0]
+    out_ref[0, :] = packed.astype(out_ref.dtype)
+    cnt_ref[0] = m.sum().astype(jnp.int32)
+
+
+def _unpack_kernel(pk_ref, m_ref, fill_ref, out_ref):
+    pk = pk_ref[0, :].astype(jnp.float32)
+    m = m_ref[0, :].astype(jnp.int32)
+    p = _perm_matrix(m)
+    vals = jax.lax.dot_general(p, pk[:, None], (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)[:, 0]
+    fill = fill_ref[0]
+    out_ref[0, :] = jnp.where(m > 0, vals, fill).astype(out_ref.dtype)
+
+
+def pack_blocks_kernel(flat: jnp.ndarray, mask_i8: jnp.ndarray,
+                       block: int = BLOCK, interpret: bool = False):
+    """flat: (N,) float; mask_i8: (N,) int8; N % block == 0.
+    Returns (packed (N//block, block) in flat.dtype, counts (N//block,) i32)."""
+    n = flat.shape[0]
+    nb = n // block
+    vb = flat.reshape(nb, block)
+    mb = mask_i8.reshape(nb, block)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), flat.dtype),
+                   jax.ShapeDtypeStruct((nb,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(vb, mb)
+
+
+def unpack_blocks_kernel(packed: jnp.ndarray, mask_i8: jnp.ndarray,
+                         fill: float = 0.0, interpret: bool = False):
+    """packed: (nb, block); mask_i8: (nb*block,).  Returns (nb*block,)."""
+    nb, block = packed.shape
+    mb = mask_i8.reshape(nb, block)
+    fill_arr = jnp.full((nb,), fill, packed.dtype)
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), packed.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(packed, mb, fill_arr)
+    return out.reshape(-1)

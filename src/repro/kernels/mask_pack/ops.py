@@ -1,0 +1,68 @@
+"""Public pack/unpack entry: pads to BLOCK, dispatches kernel/oracle."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mask_pack.kernel import (BLOCK, pack_blocks_kernel,
+                                            unpack_blocks_kernel)
+from repro.kernels.mask_pack.ref import pack_blocks_ref, unpack_blocks_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel"))
+def pack(flat: jnp.ndarray, mask: jnp.ndarray, *, block: int = BLOCK,
+         use_kernel: bool | None = None):
+    """flat: (N,) any float dtype; mask: (N,) bool.
+    Returns (packed (ceil(N/block), block), counts (ceil(N/block),))."""
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    uk = _on_tpu() if use_kernel is None else use_kernel
+    if uk:
+        return pack_blocks_kernel(flat, mask.astype(jnp.int8), block=block)
+    return pack_blocks_ref(flat, mask, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "n", "use_kernel"))
+def unpack(packed: jnp.ndarray, mask: jnp.ndarray, *, n: int,
+           block: int = BLOCK, fill: float = 0.0,
+           use_kernel: bool | None = None):
+    """Inverse of :func:`pack`; returns (n,) restored flat array."""
+    total = packed.shape[0] * packed.shape[1]
+    pad = total - n
+    m = jnp.pad(mask, (0, pad)) if pad else mask
+    uk = _on_tpu() if use_kernel is None else use_kernel
+    if uk:
+        out = unpack_blocks_kernel(packed, m.astype(jnp.int8), fill=fill)
+    else:
+        out = unpack_blocks_ref(packed, m, fill=fill)
+    return out[:n]
+
+
+def pack_to_payload(packed: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Host-side: stream counts[i] leading elements of each tile into the
+    final contiguous payload (the I/O write path)."""
+    return np.concatenate([packed[i, :c] for i, c in enumerate(counts)]) \
+        if len(counts) else packed.reshape(-1)[:0]
+
+
+def payload_to_packed(payload: np.ndarray, counts: np.ndarray,
+                      block: int) -> np.ndarray:
+    """Host-side inverse of :func:`pack_to_payload`."""
+    nb = len(counts)
+    out = np.zeros((nb, block), payload.dtype)
+    off = 0
+    for i, c in enumerate(counts):
+        out[i, :c] = payload[off:off + c]
+        off += c
+    return out

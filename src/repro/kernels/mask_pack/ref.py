@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for blocked mask pack/unpack (checkpoint hot path).
+
+Format contract (shared with the Pallas kernel): the array is processed in
+fixed BLOCK-element tiles; each tile is left-compacted (critical elements
+first, in order) and the per-tile critical count is returned.  The
+checkpoint writer then streams ``counts[i]`` elements per tile — a single
+bandwidth-bound pass with static shapes on device.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 512
+
+
+def pack_blocks_ref(flat: jnp.ndarray, mask: jnp.ndarray, block: int = BLOCK):
+    """flat: (N,) values; mask: (N,) bool.  N % block == 0.
+    Returns (packed (N//block, block), counts (N//block,) int32)."""
+    n = flat.shape[0]
+    assert n % block == 0
+    vb = flat.reshape(-1, block)
+    mb = mask.reshape(-1, block)
+    pos = jnp.cumsum(mb, axis=1) - 1                       # target slot
+    idx = jnp.where(mb, pos, block - 1)
+    rows = jnp.arange(vb.shape[0])[:, None]
+    # non-critical elements contribute 0 to slot block-1 (add is exact:
+    # every slot receives at most one critical value)
+    packed = jnp.zeros_like(vb).at[rows, idx].add(jnp.where(mb, vb, 0))
+    counts = mb.sum(axis=1).astype(jnp.int32)
+    return packed, counts
+
+
+def unpack_blocks_ref(packed: jnp.ndarray, mask: jnp.ndarray, fill=0.0):
+    """Inverse of pack_blocks_ref: scatter compacted values back to their
+    positions; uncritical positions get ``fill``."""
+    nb, block = packed.shape
+    mb = mask.reshape(nb, block)
+    pos = jnp.cumsum(mb, axis=1) - 1
+    rows = jnp.arange(nb)[:, None]
+    vals = packed[rows, jnp.clip(pos, 0, block - 1)]
+    out = jnp.where(mb, vals, fill)
+    return out.reshape(-1)

@@ -1,0 +1,222 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init).  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch <id> --shape <cell>
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell produces experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, and parsed collective bytes — the §Roofline
+inputs."""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_arch_names, get_config
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        data_axes, fit_spec, params_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline, collective_bytes, model_flops
+from repro.launch.specs import SHAPES, input_specs, optimizer_kind
+from repro.models import decode_step, loss_fn, prefill
+from repro.train.optim import OptConfig
+from repro.train.step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def opt_shardings(cfg, mesh, params_sds, opt_sds, kind: str):
+    p_sh = params_shardings(cfg, mesh, params_sds)
+    rep = NamedSharding(mesh, P())
+    if kind == "adamw":
+        return {"mu": p_sh, "nu": p_sh, "step": rep}
+
+    # adafactor: vr drops the last dim of the param spec, vc the 2nd-to-last
+    def slot_sh(p_leaf_sh, slot):
+        spec = tuple(p_leaf_sh.spec)
+        out = {}
+        for k, v in slot.items():
+            nd = len(v.shape)
+            if k == "vr":
+                s = spec[:-1]
+            elif k == "vc":
+                s = spec[:-2] + spec[-1:]
+            else:
+                s = spec
+            s = tuple(s)[:nd]
+            s = s + (None,) * (nd - len(s))
+            out[k] = NamedSharding(mesh, fit_spec(mesh, P(*s), v.shape))
+        return out
+
+    flat_p = jax.tree_util.tree_leaves(
+        p_sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+    pdef = jax.tree_util.tree_structure(params_sds)
+    flat_slots = pdef.flatten_up_to(opt_sds["slots"])
+    slots = pdef.unflatten([slot_sh(s, sl)
+                            for s, sl in zip(flat_p, flat_slots)])
+    return {"slots": slots, "step": rep}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               seq_shard: bool = False, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch skips long_500k (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    bundle = input_specs(cfg, shape_name)
+    p_sh = params_shardings(cfg, mesh, bundle["params"])
+    b_sh = batch_shardings(cfg, mesh, bundle["batch"], seq_shard=seq_shard)
+
+    t0 = time.time()
+    with mesh:
+        if cell.kind == "train":
+            oc = OptConfig(kind=optimizer_kind(cfg))
+            step = make_train_step(cfg, oc)
+            o_sh = opt_shardings(cfg, mesh, bundle["params"], bundle["opt"],
+                                 oc.kind)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(bundle["params"], bundle["opt"],
+                                   bundle["batch"])
+        elif cell.kind == "prefill":
+            fn = lambda p, b: prefill(cfg, p, b, cell.seq_len)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(bundle["params"], bundle["batch"])
+        else:  # decode
+            c_sh = cache_shardings(cfg, mesh, bundle["cache"])
+            dp = data_axes(mesh)
+            t_shape = bundle["batch"]["tokens"].shape
+            t_sh = NamedSharding(mesh, fit_spec(mesh, P(dp, None), t_shape))
+            pos_sh = NamedSharding(mesh, P())
+            fn = lambda p, c, t, pos: decode_step(cfg, p, c, t, pos)
+            jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(bundle["params"], bundle["cache"],
+                                   bundle["batch"]["tokens"], bundle["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    from repro.launch.hlo_analysis import analyze
+    hla = analyze(hlo)  # loop-aware (cost_analysis counts loop bodies once)
+
+    mem_info = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_info[attr] = int(getattr(mem, attr))
+
+    # the SPMD module is per-device: scale to global for the roofline terms
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(hla["flops"]) * chips,
+        hlo_bytes=float(hla["hbm_bytes"]) * chips,
+        coll_bytes={k: int(v * chips) for k, v in hla["coll_bytes"].items()},
+        model_flops=model_flops(cfg, cell),
+        bytes_per_device=mem_info.get("temp_size_in_bytes"),
+    )
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": rl.hlo_flops, "bytes": rl.hlo_bytes,
+        "cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "collective_bytes": rl.coll_bytes, "memory": mem_info,
+        "n_whiles": hla["n_whiles"],
+        "model_flops": rl.model_flops,
+        "t_compute_ms": rl.t_compute * 1e3,
+        "t_memory_ms": rl.t_memory * 1e3,
+        "t_collective_ms": rl.t_collective * 1e3,
+        "dominant": rl.dominant,
+        "useful_fraction": rl.useful_fraction,
+        "roofline_fraction": rl.roofline_fraction,
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"comp={rl.t_compute*1e3:.2f}ms mem={rl.t_memory*1e3:.2f}ms "
+              f"coll={rl.t_collective*1e3:.2f}ms dom={rl.dominant} "
+              f"useful={rl.useful_fraction*100:.0f}% "
+              f"roofline={rl.roofline_fraction*100:.1f}% "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        if mem_info:
+            print(f"    memory_analysis: {mem_info}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="SP: shard the sequence dim over the model axis")
+    ap.add_argument("--sp-residual", action="store_true",
+                    help="sequence-parallel residual stream (perf iter 3)")
+    ap.add_argument("--paper-baseline", action="store_true",
+                    help="pre-hillclimb behaviour: global MoE dispatch, "
+                         "full remat, (B,T,T) attention bias at T<=4096")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    if args.sp_residual:
+        from repro.models.model import set_seq_shard_residual
+        set_seq_shard_residual(True)
+    if args.paper_baseline:
+        from repro.models import moe as moe_mod
+        from repro.models import attention as attn_mod
+        from repro.models.model import set_remat_policy
+        moe_mod.set_dispatch("global")
+        attn_mod.set_full_attention_threshold(4096)
+        set_remat_policy("full")
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    archs = all_arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{'pod2x16x16' if args.multi_pod else 'pod16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            res = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                             seq_shard=args.seq_shard)
+        except Exception as e:  # a cell failure is a bug in the system
+            failures += 1
+            res = {"arch": arch, "shape": shape, "status": "FAILED",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"[{arch} × {shape}] FAILED: {type(e).__name__}: {e}")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+    print(f"\n{len(cells) - failures}/{len(cells)} cells OK")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

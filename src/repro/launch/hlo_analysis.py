@@ -1,0 +1,398 @@
+"""Loop-aware HLO accounting (FLOPs / collective bytes / HBM traffic).
+
+``compiled.cost_analysis()`` on the CPU backend counts every while-loop
+body **once**; with scan-over-layers and chunked-attention scans that
+undercounts FLOPs by orders of magnitude (verified in EXPERIMENTS.md
+§Roofline notes).  This module re-derives the terms from the optimized HLO
+text with loop multiplication:
+
+1. split the module into named computations;
+2. per computation: sum dot FLOPs (2·|out|·K), collective result bytes,
+   and parameter/output bytes for fusions;
+3. build the call graph (``calls=``, ``to_apply=``, while ``body=``/
+   ``condition=``); while bodies multiply by a trip count parsed from the
+   loop condition's comparison constant (best-effort, defaults to 1);
+4. roll up from the entry computation.
+
+This is structural analysis of the compiled artifact — exactly what the
+dry-run has instead of a wall clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128|u1)\[([\d,]*)\]")
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _shape_elems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hbm_bytes: float = 0.0
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+# op-call position only: operands are %-prefixed var names (which reuse op
+# names, e.g. %all-reduce.178) and must not match
+_COLL_KIND_RE = re.compile(
+    r"(?<!%)\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_DOT_RE = re.compile(r"=\s*(?:\(?)([\w\[\],{}\s]+?)\s*dot\(")
+_TRIP_RE = re.compile(r"compare\([^)]*\)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$", s)
+        if m and ("{" in s) and ("=" not in s.split("{")[0]):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        m2 = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", s)
+        if cur is None and m2:
+            cur = m2.group(2)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _build_symtab(lines: List[str]) -> Dict[str, Tuple[str, List[int]]]:
+    """var name → (dtype, dims), from assignment lines + header params."""
+    tab: Dict[str, Tuple[str, List[int]]] = {}
+    for s in lines:
+        m = _DEF_RE.match(s)
+        if not m:
+            # computation headers carry 'name: f32[a,b]' params
+            for pm in re.finditer(r"%?([\w.\-]+):\s*"
+                                  r"(pred|[suf]\d+|bf16|c64|c128)"
+                                  r"\[([\d,]*)\]", s):
+                tab[pm.group(1)] = (pm.group(2),
+                                    [int(d) for d in pm.group(3).split(",")
+                                     if d])
+            continue
+        sh = _first_shape(s.split("=", 1)[1])
+        if sh:
+            tab[m.group(1)] = sh
+    return tab
+
+
+def _line_flops(s: str, symtab: Dict[str, List[int]]) -> float:
+    """FLOPs of one HLO line (dots dominate; elementwise ignored)."""
+    if " dot(" not in s:
+        return 0.0
+    res = _first_shape(s.split("=", 1)[1]) if "=" in s else None
+    if res is None:
+        return 0.0
+    _, out_dims = res
+    out_n = _shape_elems(out_dims)
+    # contraction size: product of lhs operand's contracting dims
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+    k = 1
+    inner = s.split(" dot(", 1)[1]
+    ops = _OPERAND_RE.findall(inner)
+    if mc and ops and ops[0] in symtab:
+        ldims = symtab[ops[0]][1]
+        for ci in mc.group(1).split(","):
+            if ci and int(ci) < len(ldims):
+                k *= ldims[int(ci)]
+    return 2.0 * out_n * k
+
+
+def _line_coll(s: str) -> Optional[Tuple[str, float]]:
+    if "=" not in s:
+        return None
+    rhs = s.split("=", 1)[1]
+    m = re.search(_COLL_KIND_RE, rhs)
+    if not m or m.group(2) == "-done":
+        return None
+    # result type(s) precede the op name on the rhs
+    b = _all_shapes_bytes(rhs.split(m.group(1))[0])
+    return m.group(1), float(b)
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    comps = split_computations(hlo)
+    stats: Dict[str, CompStats] = {}
+    whiles: List[Tuple[str, str, str]] = []  # (comp, cond, body)
+
+    # (?<!-) keeps 'dynamic-update-slice(' from matching as 'slice('
+    _SLICE_OPS = re.compile(r"\b(dynamic-slice|gather|(?<![\w-])slice)\(")
+    _PASS_OPS = re.compile(r"\b(bitcast|reshape|copy|convert|transpose|"
+                           r"broadcast)\(")
+
+    def _var_bytes(symtab, var) -> float:
+        if var not in symtab:
+            return 0.0
+        dt, dims = symtab[var]
+        return _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+
+    def _param_read_bytes(callee: str) -> Optional[List[Optional[float]]]:
+        """Per-parameter effective read bytes inside a fused computation.
+
+        Follows pass-through chains (bitcast/reshape/…) to eventual
+        slice/gather consumers: a parameter only read through slices costs
+        the slices' result bytes; a dynamic-update-slice target costs
+        2× the update; any heavier use costs the full parameter (None).
+        """
+        lines = comps.get(callee)
+        if lines is None:
+            return None
+        symtab = _build_symtab(lines)
+        params: Dict[int, str] = {}
+        defline: Dict[str, str] = {}
+        uses: Dict[str, List[Tuple[str, str]]] = {}
+        for s in lines:
+            m = _DEF_RE.match(s)
+            if not m:
+                continue
+            dvar = m.group(1)
+            defline[dvar] = s
+            pm = re.search(r"parameter\((\d+)\)", s)
+            if pm:
+                params[int(pm.group(1))] = dvar
+            inner = s.split("(", 1)[1] if "(" in s else ""
+            for op in _OPERAND_RE.findall(inner):
+                uses.setdefault(op, []).append((s, dvar))
+        if not params:
+            return None
+
+        memo: Dict[str, Optional[float]] = {}
+
+        def eff(var: str, depth: int = 0) -> Optional[float]:
+            """Effective read bytes of ``var`` (None = read fully)."""
+            if var in memo:
+                return memo[var]
+            if depth > 16:
+                return None
+            total = 0.0
+            for s, dvar in uses.get(var, ()):
+                inner_ops = _OPERAND_RE.findall(s.split("(", 1)[1]) \
+                    if "(" in s else []
+                if _SLICE_OPS.search(s) and inner_ops and \
+                        inner_ops[0] == var:
+                    sh = _first_shape(s.split("=", 1)[1])
+                    total += (_shape_elems(sh[1]) *
+                              _DTYPE_BYTES.get(sh[0], 4)) if sh else 0.0
+                elif " dynamic-update-slice(" in s and inner_ops and \
+                        inner_ops[0] == var:
+                    upd = inner_ops[1] if len(inner_ops) > 1 else None
+                    total += 2.0 * _var_bytes(symtab, upd) if upd else 0.0
+                elif _PASS_OPS.search(s):
+                    sub = eff(dvar, depth + 1)
+                    if sub is None:
+                        memo[var] = None
+                        return None
+                    total += min(sub, _var_bytes(symtab, dvar))
+                else:
+                    memo[var] = None
+                    return None
+            memo[var] = total
+            return total
+
+        out: List[Optional[float]] = [None] * (max(params) + 1)
+        for idx, var in params.items():
+            out[idx] = eff(var)
+        return out
+
+    _OPCODE_RE = re.compile(r"([\w\-]+)\(")
+    _BOOKKEEPING = {"get-tuple-element", "tuple", "parameter", "constant",
+                    "bitcast", "conditional", "call", "copy",
+                    "copy-start", "copy-done", "after-all", "custom-call",
+                    "partition-id", "replica-id", "optimization-barrier"}
+    # `copy` is loop double-buffering the runtime aliases/elides — charging
+    # it would claim TBs of phantom traffic per scan iteration.
+    _SLICE_LIKE = {"dynamic-slice", "gather", "slice", "broadcast", "iota",
+                   "reshape", "transpose", "convert", "reverse", "pad",
+                   "concatenate"}
+
+    trip: Dict[str, float] = {}
+    for name, lines in comps.items():
+        st = CompStats()
+        symtab = _build_symtab(lines)
+        for s in lines:
+            st.flops += _line_flops(s, symtab)
+            c = _line_coll(s)
+            if c:
+                st.coll_bytes[c[0]] = st.coll_bytes.get(c[0], 0.0) + c[1]
+            if "=" not in s:
+                continue
+            rhs = s.split("=", 1)[1]
+            mo = _OPCODE_RE.search(rhs)
+            opcode = mo.group(1) if mo else ""
+
+            if opcode == "while":
+                mw = re.search(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)",
+                               s)
+                if mw:
+                    whiles.append((name, mw.group(1), mw.group(2)))
+                    st.calls.append(("__while__" + mw.group(2), 1.0))
+                    st.calls.append((mw.group(1), 1.0))  # condition, ×1
+                    mt = re.search(r'known_trip_count..:..n.:.(\d+)', s)
+                    if mt:
+                        trip[mw.group(2)] = max(trip.get(mw.group(2), 1.0),
+                                                float(mt.group(1)))
+                continue
+
+            # call-graph edges: fusion calls=, reduce/sort to_apply=,
+            # conditional branch computations — strip metadata first so
+            # op_name strings never alias computation names
+            body_txt = rhs.split("metadata=")[0]
+            for cm in _OPERAND_RE.finditer(body_txt):
+                callee = cm.group(1)
+                if callee in comps and callee != name:
+                    st.calls.append((callee, 1.0))
+
+            # --- HBM traffic ≈ per top-level kernel ------------------------
+            if opcode in _BOOKKEEPING or not opcode:
+                continue
+            res_b = _all_shapes_bytes(rhs.split("(")[0])
+            if opcode in _SLICE_LIKE:
+                st.hbm_bytes += 2.0 * res_b
+                continue
+            if opcode == "dynamic-update-slice":
+                ops = _OPERAND_RE.findall(rhs.split("(", 1)[1])
+                upd = symtab.get(ops[1]) if len(ops) > 1 else None
+                if upd:
+                    st.hbm_bytes += 2.0 * _shape_elems(upd[1]) * \
+                        _DTYPE_BYTES.get(upd[0], 4)
+                    continue
+            per_param = None
+            b = res_b
+            if opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", s)
+                if fm:
+                    callee = fm.group(1)
+                    per_param = _param_read_bytes(callee)
+                    # in-place dus fusion: result aliases the input buffer —
+                    # the true write is the update slice (2×update charge
+                    # lives in per_param[0])
+                    fbody = "\n".join(comps.get(callee, ()))
+                    if " dynamic-update-slice(" in fbody and \
+                            per_param and per_param[0] is not None:
+                        b = 0.0
+            inner = body_txt.split("(", 1)[1] if "(" in body_txt else ""
+            for oi, op in enumerate(_OPERAND_RE.findall(inner)[:16]):
+                if op not in symtab:
+                    continue
+                dt, dims = symtab[op]
+                full = _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+                if per_param is not None and oi < len(per_param) and \
+                        per_param[oi] is not None:
+                    b += min(per_param[oi], full)
+                else:
+                    b += full
+            st.hbm_bytes += b
+        stats[name] = st
+
+    # fallback trip counts: largest comparison constant in the condition
+    for _, cond, body in whiles:
+        if body in trip:
+            continue
+        consts = [int(x) for m in comps.get(cond, ())
+                  for x in _CONST_RE.findall(m)]
+        trip[body] = float(max(consts)) if consts else 1.0
+
+    memo: Dict[str, Tuple[float, Dict[str, float], float]] = {}
+
+    def roll(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in stats:
+            return 0.0, {}, 0.0
+        st = stats[name]
+        f = st.flops
+        cb = dict(st.coll_bytes)
+        hb = st.hbm_bytes
+        for callee, mult in st.calls:
+            if callee.startswith("__while__"):
+                body = callee[len("__while__"):]
+                m = trip.get(body, 1.0)
+                bf, bcb, bhb = roll(body, depth + 1)
+                f += m * bf
+                hb += m * bhb
+                for k, v in bcb.items():
+                    cb[k] = cb.get(k, 0.0) + m * v
+            else:
+                bf, bcb, bhb = roll(callee, depth + 1)
+                f += bf
+                # fusion-internal traffic is VMEM-local: call-site counted
+                if not (callee.startswith("fused") or
+                        callee.startswith("wrapped")):
+                    hb += bhb
+                for k, v in bcb.items():
+                    cb[k] = cb.get(k, 0.0) + v
+        memo[name] = (f, cb, hb)
+        return memo[name]
+
+    # entry: the ENTRY-marked computation (fall back to uncalled roots)
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if em and em.group(1) in stats:
+        entries = [em.group(1)]
+    else:  # pragma: no cover - older text formats
+        called = set()
+        for st in stats.values():
+            for c, _ in st.calls:
+                called.add(c[len("__while__"):]
+                           if c.startswith("__while__") else c)
+        entries = [n for n in stats if n not in called]
+    f_tot, cb_tot, hb_tot = 0.0, {}, 0.0
+    for e in entries:
+        f, cb, hb = roll(e)
+        f_tot += f
+        hb_tot += hb
+        for k, v in cb.items():
+            cb_tot[k] = cb_tot.get(k, 0.0) + v
+    return {"flops": f_tot, "coll_bytes": cb_tot, "hbm_bytes": hb_tot,
+            "n_computations": len(comps), "n_whiles": len(whiles),
+            "trips": trip}

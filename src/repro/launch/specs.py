@@ -1,0 +1,88 @@
+"""Input/state ShapeDtypeStruct specs per (arch × shape) cell.
+
+Nothing here allocates: parameters/optimizer/caches come from
+``jax.eval_shape`` over the real init functions, inputs are synthesized
+ShapeDtypeStructs — the same pattern as a real AOT launcher."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, init_params
+from repro.models.layers import dtype_of
+
+N_PATCHES = 256     # vlm stub patches prepended to the text sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    B, T = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        specs = {"tokens": _sds((B, 1), jnp.int32)}
+        return specs
+    specs = {"tokens": _sds((B, T), jnp.int32)}
+    if cell.kind == "train":
+        specs["labels"] = _sds((B, T), jnp.int32)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = _sds((B, N_PATCHES, cfg.d_model), jnp.float32)
+        specs["positions"] = _sds((B, T + N_PATCHES, 3), jnp.int32)
+    if cfg.enc_dec:
+        specs["frames"] = _sds((B, cfg.encoder_len, cfg.d_model), jnp.float32)
+    return specs
+
+
+def params_specs(cfg):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg, cell: ShapeCell):
+    B = cell.global_batch
+    return jax.eval_shape(lambda: init_cache(cfg, B, cell.seq_len))
+
+
+def opt_specs(cfg, params_sds, kind: str):
+    from repro.train.optim import OptConfig, init_opt
+    oc = OptConfig(kind=kind)
+    return jax.eval_shape(functools.partial(init_opt, oc), params_sds)
+
+
+def optimizer_kind(cfg) -> str:
+    """Adafactor where AdamW state cannot fit (deepseek-scale / fsdp)."""
+    return "adafactor" if cfg.fsdp else "adamw"
+
+
+def input_specs(cfg, shape_name: str):
+    """The full spec bundle the dry-run lowers against."""
+    cell = SHAPES[shape_name]
+    p = params_specs(cfg)
+    out = {"cell": cell, "params": p, "batch": batch_specs(cfg, cell)}
+    if cell.kind == "train":
+        out["opt"] = opt_specs(cfg, p, optimizer_kind(cfg))
+    if cell.kind == "decode":
+        out["cache"] = cache_specs(cfg, cell)
+        out["pos"] = _sds((), jnp.int32)
+    return out

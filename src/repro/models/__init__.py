@@ -1,0 +1,16 @@
+"""Model substrate: one configurable stack for all assigned architectures."""
+
+from repro.models.model import (
+    count_params,
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.attention import set_attn_impl, get_attn_impl
+
+__all__ = [
+    "count_params", "decode_step", "init_cache", "init_params",
+    "loss_fn", "prefill", "set_attn_impl", "get_attn_impl",
+]

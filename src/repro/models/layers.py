@@ -1,0 +1,139 @@
+"""Shared model layers: norms, projections, embeddings, RoPE/M-RoPE, FFNs.
+
+Pure functions over nested-dict params (no NN framework): every ``init_*``
+is ``jax.eval_shape``-safe (no data-dependent shapes), every ``apply`` is
+jit/pjit-traceable.  Compute dtype and param dtype come from ArchConfig.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --- initializers ----------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --- norms -----------------------------------------------------------------
+
+def init_norm(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype_of(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg.param_dtype))
+    return p
+
+
+def apply_norm(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm (gemma-style: scale is a +1 offset)
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+        y = y * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# --- rotary embeddings -----------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, T, H, D); positions: (B, T) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int] = (2, 1, 1)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, T, H, D); positions3: (B, T, 3) — temporal/height/width position
+    ids.  Frequency channels are split across the three axes in proportion
+    ``sections`` (t gets half, h/w a quarter each by default).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)  # (half,)
+    total = sum(sections)
+    bounds = np.cumsum([half * s // total for s in sections])
+    chan_axis = np.zeros(half, np.int32)
+    chan_axis[bounds[0]:bounds[1]] = 1
+    chan_axis[bounds[1]:] = 2
+    # angle per channel uses the position id of its assigned axis
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),  # (B, T, 3)
+        jnp.broadcast_to(jnp.asarray(chan_axis)[None, None, :],
+                         positions3.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (B, T, half)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- FFN -------------------------------------------------------------------
+
+def init_ffn(cfg, key, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    pdt = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.ffn in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(k1, cfg.d_model, d_ff, pdt),
+            "wg": dense_init(k2, cfg.d_model, d_ff, pdt),
+            "wo": dense_init(k3, d_ff, cfg.d_model, pdt),
+        }
+    return {  # plain gelu MLP (whisper)
+        "wi": dense_init(k1, cfg.d_model, d_ff, pdt),
+        "wo": dense_init(k3, d_ff, cfg.d_model, pdt),
+    }
+
+
+def apply_ffn(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if cfg.ffn == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * h
+    elif cfg.ffn == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(dt), approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["wo"].astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Dispatch is the static-shape sort/gather/scatter formulation (no (N,E,C)
+one-hot tensors): tokens are argsorted by expert id, given a slot within
+their expert's capacity buffer, processed by a batched per-expert einsum
+(`ecd,edf->ecf` — EP-shardable over the leading expert axis), and combined
+back with router weights.  Overflow beyond capacity is dropped (classic
+capacity-factor straggler mitigation: step time never depends on the most
+oversubscribed expert).
+
+Shared experts (DeepSeek) run densely on every token.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+CAPACITY_FACTOR = 1.25
+
+_DISPATCH = "row"  # row (optimized, row-local sort) | global (paper baseline)
+
+
+def set_dispatch(mode: str) -> None:
+    global _DISPATCH
+    assert mode in ("row", "global")
+    _DISPATCH = mode
+
+
+def init_moe(cfg, key) -> Dict[str, Any]:
+    m = cfg.moe
+    pdt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    E, d, f = m.num_experts, cfg.d_model, m.d_expert
+
+    def stack(k, din, dout, n):
+        keys = jax.random.split(k, n)
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, pdt))(keys)
+
+    p = {
+        "router": dense_init(ks[0], d, E, pdt),
+        "wi": stack(ks[1], d, f, E),
+        "wg": stack(ks[2], d, f, E),
+        "wo": stack(ks[3], f, d, E),
+    }
+    if m.num_shared:
+        p["shared"] = {
+            "wi": stack(ks[4], d, f, m.num_shared),
+            "wg": stack(jax.random.fold_in(ks[4], 1), d, f, m.num_shared),
+            "wo": stack(jax.random.fold_in(ks[4], 2), f, d, m.num_shared),
+        }
+    return p
+
+
+def _experts_ffn(wi, wg, wo, x):  # x: (E, C, d)
+    h = jnp.einsum("ecd,edf->ecf", x, wi.astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", x, wg.astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, wo.astype(x.dtype))
+
+
+def apply_moe(cfg, p, x: jnp.ndarray, *, capacity_factor: float = CAPACITY_FACTOR):
+    """x: (B, T, d) → (out (B, T, d), aux_loss scalar).
+
+    Perf iteration (EXPERIMENTS.md §Perf/olmoe): dispatch is **row-local**.
+    A global argsort over B·T·K slots forces XLA to reshard the whole token
+    stream (multi-TB collective storms at pod scale); sorting each batch
+    row independently keeps every sort/scatter on the row's own data shard,
+    and the only cross-device movement left is the unavoidable EP
+    dispatch/combine of the (B, E, C, d) buffers between the data and
+    model(expert) axes.  Per-row capacity C = T·K/E·cf (slightly higher
+    drop variance than global capacity — straggler mitigation unchanged).
+    """
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    S = T * K                                             # slots per row
+
+    if _DISPATCH == "global":
+        return _apply_moe_global(cfg, p, x, capacity_factor)
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                # (B,T,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux loss (Switch-style) -------------------------
+    me = probs.mean((0, 1))                               # (E,)
+    rows = jnp.arange(B)[:, None]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (B * S)
+    aux = m.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # --- row-local sort-based dispatch ----------------------------------
+    C = max(1, int(S / E * capacity_factor))
+    flat_e = top_e.reshape(B, S)
+    order = jnp.argsort(flat_e, axis=1)                   # per-row, local
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_sorted = order // K                               # (B,S)
+    counts = jnp.zeros((B, E), jnp.int32).at[rows, flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts          # (B,E)
+    slot = jnp.arange(S)[None, :] - jnp.take_along_axis(starts, e_sorted, 1)
+    keep = slot < C
+
+    xs = jnp.take_along_axis(
+        x, tok_sorted[..., None], axis=1)                 # (B,S,d) row-local
+    buf = jnp.zeros((B, E, C, d), x.dtype)
+    buf = buf.at[rows[..., None].repeat(S, 1)[..., 0],
+                 jnp.where(keep, e_sorted, E - 1),
+                 jnp.where(keep, slot, C - 1)].set(
+        jnp.where(keep[..., None], xs, 0.0), mode="drop")
+
+    # EP compute: experts batched over (B, E) — B stays on the data axis,
+    # E on the model axis; the buf reshard is the EP all-to-all.
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(x.dtype))
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+
+    gathered = out_buf[rows[..., None].repeat(S, 1)[..., 0],
+                       e_sorted, jnp.clip(slot, 0, C - 1)]   # (B,S,d)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    inv = jnp.argsort(order, axis=1)                      # undo row sort
+    contrib = jnp.take_along_axis(gathered, inv[..., None], axis=1)
+    contrib = contrib.reshape(B, T, K, d)
+    out = jnp.einsum("btkd,btk->btd", contrib.astype(jnp.float32),
+                     top_w).astype(x.dtype)
+
+    if m.num_shared:
+        sh = p["shared"]
+        xf = x.reshape(B * T, d)
+        s = _experts_ffn(sh["wi"], sh["wg"], sh["wo"],
+                         jnp.broadcast_to(xf, (m.num_shared, B * T, d)))
+        out = out + s.sum(0).astype(x.dtype).reshape(B, T, d)
+
+    return out, aux
+
+
+def _apply_moe_global(cfg, p, x, capacity_factor):
+    """Baseline dispatch (perf-log 'before'): one global argsort over all
+    B·T·K slots — correct, but the global sort/scatter reshards the whole
+    token stream across the mesh (§Perf/olmoe)."""
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (N * K)
+    aux = m.aux_loss_coef * E * jnp.sum(me * ce)
+
+    C = max(1, int(N * K / E * capacity_factor))
+    flat_e = top_e.reshape(N * K)
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok_sorted = order // K
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(N * K) - starts[e_sorted]
+    keep = slot < C
+    xs = xf[tok_sorted]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[jnp.where(keep, e_sorted, E - 1),
+                 jnp.where(keep, slot, C - 1)].set(
+        jnp.where(keep[:, None], xs, 0.0), mode="drop")
+    out_buf = _experts_ffn(p["wi"], p["wg"], p["wo"], buf)
+    gathered = out_buf[e_sorted, jnp.clip(slot, 0, C - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    inv = jnp.argsort(order)
+    contrib = gathered[inv].reshape(N, K, d)
+    out = jnp.einsum("nkd,nk->nd", contrib.astype(jnp.float32),
+                     top_w).astype(x.dtype)
+    if m.num_shared:
+        sh = p["shared"]
+        s = _experts_ffn(sh["wi"], sh["wg"], sh["wo"],
+                         jnp.broadcast_to(xf, (m.num_shared, N, d)))
+        out = out + s.sum(0).astype(x.dtype)
+    return out.reshape(B, T, d), aux

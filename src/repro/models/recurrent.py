@@ -1,0 +1,272 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM + sLSTM (xLSTM).
+
+Training uses ``lax.associative_scan`` for the diagonal RG-LRU recurrence
+(log-depth, TPU-friendly; kernels/lru_scan is the blocked Pallas version)
+and ``lax.scan`` for the matrix/scalar LSTM cells.  Decode carries an
+explicit recurrent state — the constant-size serving cache whose
+scrutinized checkpoint is tiny (see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+_CONV_W = 4  # temporal conv width (griffin / xlstm)
+_LRU_C = 8.0
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (griffin) block
+# --------------------------------------------------------------------------
+
+def init_rglru(cfg, key) -> Dict[str, Any]:
+    pdt = dtype_of(cfg.param_dtype)
+    d, r = cfg.d_model, cfg.lru_dim or cfg.d_model
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = sigmoid(Λ)^(c) spreads over (0.9, 0.999)
+    lam = jnp.log(jnp.expm1(
+        jnp.linspace(0.9, 0.999, r) ** (1.0 / _LRU_C))).astype(pdt)
+    return {
+        "w_in": dense_init(ks[0], d, r, pdt),
+        "w_gate": dense_init(ks[1], d, r, pdt),
+        "conv": (jax.random.normal(ks[2], (_CONV_W, r), jnp.float32) * 0.1).astype(pdt),
+        "w_a": dense_init(ks[3], r, r, pdt),
+        "w_x": dense_init(ks[4], r, r, pdt),
+        "lambda": lam,
+        "w_out": dense_init(ks[5], r, d, pdt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, r), w: (W, r) depthwise causal conv."""
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for j in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[W - 1 - j]
+    return out
+
+
+def _lru_scan_assoc(log_a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t over axis 1, via associative scan."""
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_train(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    u = x @ p["w_in"].astype(dt)                       # (B,T,r)
+    u = _causal_conv(u, p["conv"].astype(dt))
+    r_gate = jax.nn.sigmoid((u @ p["w_a"].astype(dt)).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid((u @ p["w_x"].astype(dt)).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r_gate
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i_gate * u.astype(jnp.float32))
+    h = _lru_scan_assoc(log_a, b).astype(dt)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt), approximate=True)
+    return (h * gate) @ p["w_out"].astype(dt)
+
+
+def rglru_init_state(cfg, batch: int, dtype=None):
+    dt = dtype or dtype_of(cfg.dtype)
+    r = cfg.lru_dim or cfg.d_model
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, r), dt)}
+
+
+def rglru_decode(cfg, p, x: jnp.ndarray, state) -> Tuple[jnp.ndarray, Any]:
+    """x: (B, 1, d)."""
+    dt = x.dtype
+    u = (x @ p["w_in"].astype(dt))[:, 0]               # (B,r)
+    hist = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B,W,r)
+    w = p["conv"].astype(dt)
+    u_c = jnp.einsum("bwr,wr->br", hist, w)
+    r_gate = jax.nn.sigmoid((u_c @ p["w_a"].astype(dt)).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid((u_c @ p["w_x"].astype(dt)).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i_gate * u_c.astype(jnp.float32))
+    h = a * state["h"] + b
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"].astype(dt), approximate=True)
+    out = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    return out[:, None], {"h": h, "conv": hist[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# mLSTM (xLSTM) block — matrix memory, exponential gating with stabilizer
+# --------------------------------------------------------------------------
+
+def init_mlstm(cfg, key) -> Dict[str, Any]:
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or d) // H
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, pdt),
+        "wk": dense_init(ks[1], d, H * hd, pdt),
+        "wv": dense_init(ks[2], d, H * hd, pdt),
+        "wi": dense_init(ks[3], d, H, pdt),
+        "wf": dense_init(ks[4], d, H, pdt),
+        "wz": dense_init(ks[5], d, H * hd, pdt),   # output gate branch
+        "wo": dense_init(ks[6], H * hd, d, pdt),
+    }
+
+
+def _mlstm_qkvif(cfg, p, x):
+    dt = x.dtype
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or cfg.d_model) // H
+    q = (x @ p["wq"].astype(dt)).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (x @ p["wk"].astype(dt)).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (x @ p["wv"].astype(dt)).reshape(B, T, H, hd).astype(jnp.float32)
+    logi = (x @ p["wi"].astype(dt)).astype(jnp.float32)          # (B,T,H)
+    logf = jax.nn.log_sigmoid((x @ p["wf"].astype(dt)).astype(jnp.float32))
+    k = k / jnp.sqrt(jnp.float32(hd))
+    return q, k, v, logi, logf
+
+
+def _mlstm_step(carry, inp):
+    C, n, m = carry            # (B,H,hd,hd), (B,H,hd), (B,H)
+    q, k, v, logi, logf = inp  # (B,H,hd) ×3, (B,H) ×2
+    m_new = jnp.maximum(logf + m, logi)
+    i_p = jnp.exp(logi - m_new)[..., None]
+    f_p = jnp.exp(logf + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_p * n + i_p * k
+    h_num = jnp.einsum("bhij,bhj->bhi", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = h_num / h_den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_train(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or d) // H
+    q, k, v, logi, logf = _mlstm_qkvif(cfg, p, x)
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          logi.swapaxes(0, 1), logf.swapaxes(0, 1))
+    _, hs = jax.lax.scan(_mlstm_step, init, xs)
+    h = hs.swapaxes(0, 1).reshape(B, T, H * hd).astype(x.dtype)
+    z = jax.nn.silu(x @ p["wz"].astype(x.dtype))
+    return (h * z) @ p["wo"].astype(x.dtype)
+
+
+def mlstm_init_state(cfg, batch: int):
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or cfg.d_model) // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode(cfg, p, x, state):
+    q, k, v, logi, logf = _mlstm_qkvif(cfg, p, x)      # T = 1
+    carry = (state["C"], state["n"], state["m"])
+    carry, h = _mlstm_step(carry, (q[:, 0], k[:, 0], v[:, 0],
+                                   logi[:, 0], logf[:, 0]))
+    B = x.shape[0]
+    h = h.reshape(B, 1, -1).astype(x.dtype)
+    z = jax.nn.silu(x @ p["wz"].astype(x.dtype))
+    out = (h * z) @ p["wo"].astype(x.dtype)
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+# --------------------------------------------------------------------------
+# sLSTM (xLSTM) block — scalar memory with recurrent head mixing
+# --------------------------------------------------------------------------
+
+def init_slstm(cfg, key) -> Dict[str, Any]:
+    pdt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or d) // H
+    ks = jax.random.split(key, 9)
+    p = {"wo": dense_init(ks[8], H * hd, d, pdt)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = dense_init(ks[i], d, H * hd, pdt)
+        # recurrent mixing is block-diagonal per head
+        p[f"r{g}"] = (jax.random.normal(ks[4 + i], (H, hd, hd), jnp.float32)
+                      / jnp.sqrt(jnp.float32(hd))).astype(pdt)
+    return p
+
+
+def _slstm_step(p32, carry, inp):
+    c, n, m, h = carry          # all (B,H,hd)
+    xz, xi, xf, xo = inp
+
+    def rec(name, hh):
+        return jnp.einsum("bhj,hjk->bhk", hh, p32[name])
+
+    z = jnp.tanh(xz + rec("rz", h))
+    logi = xi + rec("ri", h)
+    logf = jax.nn.log_sigmoid(xf + rec("rf", h))
+    o = jax.nn.sigmoid(xo + rec("ro", h))
+    m_new = jnp.maximum(logf + m, logi)
+    i_p = jnp.exp(logi - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def _slstm_inputs(cfg, p, x):
+    dt = x.dtype
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or cfg.d_model) // H
+
+    def proj(name):
+        return (x @ p[name].astype(dt)).reshape(B, T, H, hd).astype(jnp.float32)
+
+    return proj("wz"), proj("wi"), proj("wf"), proj("wo")
+
+
+def slstm_train(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or d) // H
+    xz, xi, xf, xo = _slstm_inputs(cfg, p, x)
+    p32 = {k: p[k].astype(jnp.float32) for k in ("rz", "ri", "rf", "ro")}
+    init = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(3)) + (
+        jnp.zeros((B, H, hd), jnp.float32),)
+    init = (init[0], init[1], jnp.full((B, H, hd), -1e30, jnp.float32), init[3])
+    xs = tuple(a.swapaxes(0, 1) for a in (xz, xi, xf, xo))
+    _, hs = jax.lax.scan(lambda c, i: _slstm_step(p32, c, i), init, xs)
+    h = hs.swapaxes(0, 1).reshape(B, T, H * hd).astype(x.dtype)
+    return h @ p["wo"].astype(x.dtype)
+
+
+def slstm_init_state(cfg, batch: int):
+    H = cfg.n_heads
+    hd = (cfg.lru_dim or cfg.d_model) // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32),
+            "h": z}
+
+
+def slstm_decode(cfg, p, x, state):
+    xz, xi, xf, xo = _slstm_inputs(cfg, p, x)
+    p32 = {k: p[k].astype(jnp.float32) for k in ("rz", "ri", "rf", "ro")}
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, h = _slstm_step(p32, carry, (xz[:, 0], xi[:, 0], xf[:, 0], xo[:, 0]))
+    B = x.shape[0]
+    out = h.reshape(B, 1, -1).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}

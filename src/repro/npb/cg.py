@@ -1,0 +1,110 @@
+"""CG — Conjugate Gradient eigenvalue estimator (NPB class S shapes).
+
+Checkpoint variables (paper Table I): ``double x[1402]``, ``int it``.
+``x`` is allocated NA+2 = 1402 but only the first NA = 1400 entries
+participate (paper §IV-B / Fig 6) → expected 2 uncritical / 1402.
+
+The solver is genuine CG: each outer iteration solves A·z = x with 25 CG
+steps and applies inverse power iteration x ← z/‖z‖, ζ = SHIFT + 1/(xᵀz).
+A is a fixed SPD matrix standing in for NPB's makea() sparse operator
+(dense here — class S is 1400² which is small; sparsity does not affect
+element criticality of x).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+
+NA = 1400
+PAD = 2
+SHIFT = 10.0
+CGITMAX = 25
+TOTAL_ITERS = 8
+CKPT_ITER = 4
+
+
+def _make_A() -> np.ndarray:
+    """SPD stand-in for makea(): well-conditioned, deterministic."""
+    rng = np.random.RandomState(12345)
+    m = rng.randn(NA, 12)  # low-rank + identity => condition ~ O(10)
+    a = (m @ m.T) / 12.0 + np.eye(NA) * 2.0
+    return a
+
+
+def _conj_grad(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """25 CG iterations for A z = x, z0 = 0 (NPB conj_grad)."""
+    z0 = jnp.zeros_like(x)
+    r0 = x
+    p0 = r0
+    rho0 = jnp.dot(r0, r0)
+
+    def body(carry, _):
+        z, r, p, rho = carry
+        q = A @ p
+        alpha = rho / jnp.dot(p, q)
+        z = z + alpha * p
+        r = r - alpha * q
+        rho_new = jnp.dot(r, r)
+        beta = rho_new / rho
+        p = r + beta * p
+        return (z, r, p, rho_new), None
+
+    (z, r, p, rho), _ = jax.lax.scan(body, (z0, r0, p0, rho0), None, length=CGITMAX)
+    return z
+
+
+@register("cg")
+def make_cg() -> Benchmark:
+    A = jnp.asarray(_make_A())
+
+    def outer_iter(x_active):
+        z = _conj_grad(A, x_active)
+        zeta = SHIFT + 1.0 / jnp.dot(x_active, z)
+        x_new = z / jnp.linalg.norm(z)
+        return x_new, zeta
+
+    def run(x_active, n):
+        def body(x, _):
+            x_new, zeta = outer_iter(x)
+            return x_new, zeta
+
+        x_active, zetas = jax.lax.scan(body, x_active, None, length=n)
+        return x_active, zetas
+
+    def initial_x() -> np.ndarray:
+        x = np.ones(NA + PAD, dtype=np.float64)
+        x[NA:] = 7.0  # padding; never read
+        return x
+
+    def checkpoint_state():
+        x = jnp.asarray(initial_x())
+        x_active, _ = run(x[:NA], CKPT_ITER)
+        x = x.at[:NA].set(x_active)
+        return {"x": x, "it": jnp.asarray(CKPT_ITER, jnp.int32)}
+
+    def resume(state):
+        x_active = state["x"][:NA]  # the only read range of x (Fig 6)
+        x_active, zetas = run(x_active, TOTAL_ITERS - CKPT_ITER)
+        # NPB prints zeta every outer iteration — all post-restart zetas are
+        # program output.  (Power iteration is contractive, so the *final*
+        # zeta alone would hide finite corruption of x; see EXPERIMENTS.md.)
+        return {"zetas": zetas, "xnorm": jnp.linalg.norm(x_active)}
+
+    def reference():
+        x = jnp.asarray(initial_x())
+        x_active, zetas = run(x[:NA], TOTAL_ITERS)
+        return {"zetas": zetas[CKPT_ITER:], "xnorm": jnp.linalg.norm(x_active)}
+
+    return Benchmark(
+        name="cg",
+        total_iters=TOTAL_ITERS,
+        ckpt_iter=CKPT_ITER,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={"x": (2, 1402), "it": (0, 1)},
+    )

@@ -1,0 +1,152 @@
+"""NPB checkpoint-analysis harness (paper §IV).
+
+A benchmark is packaged as:
+
+- ``checkpoint_state()``: the state pytree at the checkpoint instant
+  (mid-run, after ``ckpt_iter`` of ``total_iters`` main-loop iterations) —
+  exactly the paper's Table-I "variables necessary for checkpointing",
+  with matching names.
+- ``resume(state)``: the rest of the program — remaining iterations plus the
+  verification computation.  ``scrutinize(resume, state)`` is the paper's AD
+  analysis.
+- ``reference()``: outputs of an uninterrupted full run.
+- ``verify(out, ref)``: the benchmark's own success criterion (§IV-C).
+- ``expected``: paper Table-II (uncritical, total) per variable, for
+  EXPERIMENTS.md cross-validation (None where the paper has no entry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CriticalityReport, ScrutinyConfig, scrutinize
+
+EPSILON = 1e-8  # NPB verification tolerance
+
+
+@dataclasses.dataclass
+class Benchmark:
+    name: str
+    total_iters: int
+    ckpt_iter: int
+    checkpoint_state: Callable[[], Any]
+    resume: Callable[[Any], Any]
+    reference: Callable[[], Any]
+    expected: Dict[str, Optional[Tuple[int, int]]]
+    rtol: float = EPSILON
+
+    def verify(self, out, ref) -> bool:
+        outs = jax.tree_util.tree_leaves(out)
+        refs = jax.tree_util.tree_leaves(ref)
+        for o, r in zip(outs, refs):
+            o = np.asarray(o, dtype=np.complex128 if np.iscomplexobj(o) else np.float64)
+            r = np.asarray(r, dtype=o.dtype)
+            denom = np.maximum(np.abs(r), 1.0)
+            if not (np.abs(o - r) / denom <= self.rtol).all():
+                return False
+        return True
+
+    def scrutinize(self, config: Optional[ScrutinyConfig] = None) -> CriticalityReport:
+        state = self.checkpoint_state()
+        return scrutinize(self.resume, state, config=config or ScrutinyConfig())
+
+    def participation(self, config: Optional[ScrutinyConfig] = None) -> CriticalityReport:
+        """Structural read-participation masks (paper Table II semantics)."""
+        from repro.core.taint import participation
+
+        state = self.checkpoint_state()
+        return participation(self.resume, state, config=config or ScrutinyConfig())
+
+
+def verify_restart(
+    bench: Benchmark,
+    report: CriticalityReport,
+    corrupt: Optional[str] = None,
+    seed: int = 0,
+) -> bool:
+    """Paper §IV-C: restart from a critical-elements-only checkpoint.
+
+    ``corrupt``:
+      None          – restore critical elements, zero-fill uncritical.
+      'uncritical'  – additionally overwrite every uncritical element with
+                      garbage; verification must still PASS.
+      'critical'    – corrupt a random critical float element; verification
+                      must FAIL (proves those elements really matter).
+    """
+    state = bench.checkpoint_state()
+    rng = np.random.RandomState(seed)
+
+    flat, treedef = jax.tree_util.tree_flatten(state)
+    # Names in the report follow the same flatten order.
+    names = [name for name, _ in sorted(report.leaves.items())]
+    # Re-derive masks by path so ordering is robust.
+    restored = []
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(state)[0]
+    from repro.core.criticality import _path_str
+
+    corrupted_any_critical = False
+    for (path, leaf) in leaves_with_path:
+        name = _path_str(path)
+        rep = report[name]
+        arr = np.array(leaf).reshape(-1)
+        mask = rep.mask
+        if corrupt == "uncritical":
+            garbage = rng.uniform(-1e6, 1e6, size=arr.shape)
+            if np.iscomplexobj(arr):
+                garbage = garbage + 1j * rng.uniform(-1e6, 1e6, size=arr.shape)
+            arr = np.where(mask, arr, garbage.astype(arr.dtype))
+        elif corrupt is None:
+            arr = np.where(mask, arr, np.zeros_like(arr))
+        elif corrupt == "critical":
+            crit_idx = np.nonzero(mask)[0]
+            if crit_idx.size and np.issubdtype(arr.dtype, np.inexact):
+                # Large multiplicative+additive corruption of several elements
+                # so it cannot hide below verification tolerance.
+                hit = rng.choice(crit_idx, size=min(8, crit_idx.size), replace=False)
+                arr = arr.copy()
+                arr[hit] = arr[hit] * 1e3 + 1e3
+                corrupted_any_critical = True
+        restored.append(jnp.asarray(arr.reshape(np.shape(leaf)), dtype=leaf.dtype))
+
+    if corrupt == "critical" and not corrupted_any_critical:
+        raise RuntimeError(f"{bench.name}: no float critical elements to corrupt")
+
+    state_r = jax.tree_util.tree_unflatten(treedef, restored)
+    out = bench.resume(state_r)
+    ref = bench.reference()
+    return bench.verify(out, ref)
+
+
+_REGISTRY: Dict[str, Callable[[], Benchmark]] = {}
+
+
+def register(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def get_benchmark(name: str) -> Benchmark:
+    _ensure_loaded()
+    return _REGISTRY[name]()
+
+
+def _ensure_loaded():
+    # Import benchmark modules lazily to avoid import cycles.
+    from repro.npb import bt, sp, lu, mg, cg, ft, ep, is_  # noqa: F401
+
+
+class _AllBenchmarks:
+    def __iter__(self):
+        _ensure_loaded()
+        return iter(sorted(_REGISTRY.keys()))
+
+
+ALL_BENCHMARKS = _AllBenchmarks()

@@ -1,0 +1,115 @@
+"""EP — Embarrassingly Parallel Gaussian-deviate tally (NPB, reduced size).
+
+Checkpoint variables (paper Table I): ``double sx``, ``double sy``,
+``double q[10]``, ``int k``.  The paper finds *no* uncritical elements in
+EP — every tally is read (write-after-read accumulation) — and so do we:
+expected uncritical = 0 for all four variables.
+
+Faithful mechanics: pairs of uniforms from the NPB ``randlc`` LCG
+(a = 5¹³, modulus 2⁴⁶, implemented exactly with the double-based split
+arithmetic of the original), Marsaglia polar acceptance x²+y² ≤ 1,
+Gaussian deviates scaled by sqrt(−2 ln t / t), per-annulus counts into q.
+Size is reduced from class S's 2²⁴ pairs to 2¹⁶ (chunked), which changes
+the tallies but not the criticality structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+
+M = 16  # 2^16 pairs (class S uses 2^24; reduced, same structure)
+CHUNK = 1024
+NCHUNKS = (1 << M) // CHUNK  # 64
+CKPT_CHUNK = NCHUNKS // 2
+NQ = 10
+
+_R23 = 2.0**-23
+_T23 = 2.0**23
+_R46 = 2.0**-46
+_T46 = 2.0**46
+_A = 1220703125.0  # 5^13
+_SEED = 271828183.0
+
+
+def _randlc_stream(n: int) -> np.ndarray:
+    """Exact NPB randlc: n uniforms in (0,1) from the 2^46 LCG."""
+    out = np.empty(n)
+    x = _SEED
+    a1 = int(_R23 * _A)
+    a2 = _A - _T23 * a1
+    for i in range(n):
+        t1 = _R23 * x
+        x1 = int(t1)
+        x2 = x - _T23 * x1
+        t1 = a1 * x2 + a2 * x1
+        t2 = int(_R23 * t1)
+        z = t1 - _T23 * t2
+        t3 = _T23 * z + a2 * x2
+        t4 = int(_R46 * t3)
+        x = t3 - _T46 * t4
+        out[i] = _R46 * x
+    return out
+
+
+_UNIFORMS = None
+
+
+def _uniforms() -> np.ndarray:
+    global _UNIFORMS
+    if _UNIFORMS is None:
+        _UNIFORMS = _randlc_stream(2 * (1 << M)).reshape(NCHUNKS, 2, CHUNK)
+    return _UNIFORMS
+
+
+def _chunk_tally(xu: jnp.ndarray, yu: jnp.ndarray):
+    """Gaussian tallies for one chunk of uniform pairs (NPB inner loop)."""
+    x = 2.0 * xu - 1.0
+    y = 2.0 * yu - 1.0
+    t = x * x + y * y
+    accept = t <= 1.0
+    tsafe = jnp.where(accept, t, 0.5)
+    fac = jnp.sqrt(-2.0 * jnp.log(tsafe) / tsafe)
+    xg = jnp.where(accept, x * fac, 0.0)
+    yg = jnp.where(accept, y * fac, 0.0)
+    l = jnp.minimum(jnp.floor(jnp.maximum(jnp.abs(xg), jnp.abs(yg))), NQ - 1).astype(jnp.int32)
+    counts = jnp.zeros(NQ).at[l].add(jnp.where(accept, 1.0, 0.0))
+    return jnp.sum(xg), jnp.sum(yg), counts
+
+
+@register("ep")
+def make_ep() -> Benchmark:
+    uni = _uniforms()
+
+    def run_chunks(sx, sy, q, start, stop):
+        for c in range(start, stop):
+            dx, dy, dq = _chunk_tally(jnp.asarray(uni[c, 0]), jnp.asarray(uni[c, 1]))
+            sx = sx + dx
+            sy = sy + dy
+            q = q + dq
+        return sx, sy, q
+
+    def checkpoint_state():
+        sx, sy, q = run_chunks(jnp.asarray(0.0), jnp.asarray(0.0), jnp.zeros(NQ), 0, CKPT_CHUNK)
+        return {"sx": sx, "sy": sy, "q": q, "k": jnp.asarray(CKPT_CHUNK, jnp.int32)}
+
+    def resume(state):
+        sx, sy, q = run_chunks(state["sx"], state["sy"], state["q"], CKPT_CHUNK, NCHUNKS)
+        return {"sx": sx, "sy": sy, "q": q, "gc": jnp.sum(q)}
+
+    def reference():
+        sx, sy, q = run_chunks(jnp.asarray(0.0), jnp.asarray(0.0), jnp.zeros(NQ), 0, NCHUNKS)
+        return {"sx": sx, "sy": sy, "q": q, "gc": jnp.sum(q)}
+
+    return Benchmark(
+        name="ep",
+        total_iters=NCHUNKS,
+        ckpt_iter=CKPT_CHUNK,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={"sx": (0, 1), "sy": (0, 1), "q": (0, NQ), "k": (0, 1)},
+    )

@@ -1,0 +1,119 @@
+"""FT — 3-D FFT PDE solver (NPB class S shapes).
+
+Checkpoint variables (paper Table I): ``dcomplex y[64][64][65]``,
+``dcomplex sums[6]``, ``int kt``.  The last dim is padded to NX+1 = 65;
+every read is ``y[:, :, :64]`` → the plane at index 64 (paper Fig 8's
+"top layer") is uncritical.  Expected: 4096 uncritical / 266240.
+
+``sums[t]`` stores the checksum of iteration t.  At a checkpoint taken after
+iteration ``kt``, AD marks ``sums[:kt]`` critical (those values are emitted
+into the final verification) and ``sums[kt:]`` uncritical (they are
+recomputed / overwritten after restart).  The paper asserts the whole array
+critical; the prefix/suffix split is the sharper AD answer — see
+EXPERIMENTS.md §Paper-validation for the discussion.
+
+The solver is genuine: y is the frequency-domain field, each iteration
+applies the evolution twiddle exp(−4απ²t·k̄²) and takes an inverse 3-D FFT,
+then a 1024-sample NPB-style checksum.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+
+NX, NY, NZ = 64, 64, 64
+XPAD = NX + 1  # 65
+NITER = 6
+CKPT_ITER = 3
+ALPHA = 1e-6
+
+
+def _twiddle_exponent() -> np.ndarray:
+    """-4 α π² (k̄x² + k̄y² + k̄z²) on the 64³ grid (signed frequencies)."""
+
+    def bar(n):
+        k = np.arange(n)
+        return np.where(k < n // 2, k, k - n) ** 2
+
+    kz = bar(NZ)[:, None, None]
+    ky = bar(NY)[None, :, None]
+    kx = bar(NX)[None, None, :]
+    return -4.0 * ALPHA * np.pi**2 * (kz + ky + kx)
+
+
+_CHK_IDX = None
+
+
+def _checksum_indices():
+    global _CHK_IDX
+    if _CHK_IDX is None:
+        j = np.arange(1, 1025)
+        q = j % NX
+        r = (3 * j) % NY
+        s = (5 * j) % NZ
+        _CHK_IDX = (jnp.asarray(s), jnp.asarray(r), jnp.asarray(q))
+    return _CHK_IDX
+
+
+def _checksum(x: jnp.ndarray) -> jnp.ndarray:
+    s, r, q = _checksum_indices()
+    return jnp.sum(x[s, r, q]) / float(NX * NY * NZ)
+
+
+def _initial_freq(seed: int) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    x0 = rng.randn(NZ, NY, NX) + 1j * rng.randn(NZ, NY, NX)
+    y = np.full((NZ, NY, XPAD), 7.0 + 7.0j, dtype=np.complex128)  # pad sentinel
+    y[:, :, :NX] = np.fft.fftn(x0)
+    return y
+
+
+@register("ft")
+def make_ft() -> Benchmark:
+    expo = jnp.asarray(_twiddle_exponent())
+
+    def iter_t(y: jnp.ndarray, t: int) -> jnp.ndarray:
+        """Checksum of iteration t (1-based).  Reads y[:, :, :64] only."""
+        freq = y[:, :, :NX]
+        w = freq * jnp.exp(expo * float(t))
+        x = jnp.fft.ifftn(w)
+        return _checksum(x)
+
+    def checkpoint_state():
+        y = jnp.asarray(_initial_freq(seed=4))
+        sums = jnp.full((NITER,), 7.0 + 7.0j, dtype=jnp.complex128)
+        for t in range(1, CKPT_ITER + 1):
+            sums = sums.at[t - 1].set(iter_t(y, t))
+        return {"y": y, "sums": sums, "kt": jnp.asarray(CKPT_ITER, jnp.int32)}
+
+    def resume(state):
+        y, sums = state["y"], state["sums"]
+        for t in range(CKPT_ITER + 1, NITER + 1):
+            sums = sums.at[t - 1].set(iter_t(y, t))
+        return {"sums": sums}
+
+    def reference():
+        y = jnp.asarray(_initial_freq(seed=4))
+        sums = jnp.full((NITER,), 7.0 + 7.0j, dtype=jnp.complex128)
+        for t in range(1, NITER + 1):
+            sums = sums.at[t - 1].set(iter_t(y, t))
+        return {"sums": sums}
+
+    return Benchmark(
+        name="ft",
+        total_iters=NITER,
+        ckpt_iter=CKPT_ITER,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={
+            "y": (4096, NZ * NY * XPAD),
+            # AD's sharper answer: suffix entries are overwritten post-restart.
+            "sums": (NITER - CKPT_ITER, NITER),
+            "kt": (0, 1),
+        },
+    )

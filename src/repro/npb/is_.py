@@ -1,0 +1,136 @@
+"""IS — Integer bucket Sort (NPB class S shapes).
+
+Checkpoint variables (paper Table I): ``int passed_verification``,
+``int key_array[65536]``, ``int bucket_ptrs[512]``, ``int iteration``.
+
+All four are integer state: AD is undefined on them and, as the paper notes,
+they are control state — loop index, sort keys, bucket offsets, verification
+counter — so the ALWAYS_CRITICAL dtype policy marks every element critical
+(expected uncritical = 0, matching the paper).
+
+The sort is genuine: per NPB rank(), each iteration plants
+``key_array[iter] = iter`` and ``key_array[iter+MAX_ITERATIONS] = MAX_KEY-iter``,
+bucket-counts all keys, builds ``bucket_ptrs`` as the bucket-offset prefix
+sum, computes key ranks, and partial-verifies five probe keys.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+
+N_KEYS = 1 << 16  # 65536
+MAX_KEY = 1 << 11  # 2048
+N_BUCKETS = 512
+SHIFT = 2  # log2(MAX_KEY / N_BUCKETS)
+MAX_ITERATIONS = 10
+CKPT_ITER = 5
+N_PROBES = 5
+
+
+def _initial_keys() -> np.ndarray:
+    rng = np.random.RandomState(314159)
+    # NPB uses randlc doubles; uniform ints preserve the sort structure.
+    return rng.randint(0, MAX_KEY, size=N_KEYS).astype(np.int32)
+
+
+_PROBE_IDX = np.array([2112, 16384, 30000, 48000, 60000])
+
+
+def _rank(key_array: jnp.ndarray, iteration: jnp.ndarray):
+    """One NPB rank() pass: plant keys, bucket-count, prefix, rank, probe."""
+    it = iteration.astype(jnp.int32)
+    key_array = key_array.at[it].set(it)
+    key_array = key_array.at[it + MAX_ITERATIONS].set(MAX_KEY - it)
+
+    buckets = key_array >> SHIFT
+    bucket_counts = jnp.zeros(N_BUCKETS, jnp.int32).at[buckets].add(1)
+    bucket_ptrs = jnp.cumsum(bucket_counts) - bucket_counts  # exclusive prefix
+
+    key_counts = jnp.zeros(MAX_KEY, jnp.int32).at[key_array].add(1)
+    key_ranks = jnp.cumsum(key_counts) - key_counts  # rank of first occurrence
+
+    probe_keys = key_array[jnp.asarray(_PROBE_IDX)]
+    probe_ranks = key_ranks[probe_keys]
+    return key_array, bucket_ptrs, probe_ranks
+
+
+@register("is")
+def make_is() -> Benchmark:
+    keys0 = _initial_keys()
+
+    # Reference probe ranks per iteration, from a clean run (stands in for
+    # NPB's hard-coded test_rank_array).
+    def _full_run():
+        ka = jnp.asarray(keys0)
+        pv = jnp.asarray(0, jnp.int32)
+        bp = jnp.zeros(N_BUCKETS, jnp.int32)
+        probes = []
+        for i in range(1, MAX_ITERATIONS + 1):
+            ka, bp, pr = _rank(ka, jnp.asarray(i))
+            probes.append(pr)
+        return ka, bp, probes
+
+    _, _, _REF_PROBES = _full_run()
+    ref_probes = [np.asarray(p) for p in _REF_PROBES]
+
+    def run(ka, pv, bp, start, stop):
+        for i in range(start, stop):
+            ka, bp, pr = _rank(ka, jnp.asarray(i))
+            ok = jnp.all(pr == jnp.asarray(ref_probes[i - 1]))
+            pv = pv + ok.astype(jnp.int32) * N_PROBES
+        return ka, pv, bp
+
+    def checkpoint_state():
+        ka, pv, bp = run(jnp.asarray(keys0), jnp.asarray(0, jnp.int32),
+                         jnp.zeros(N_BUCKETS, jnp.int32), 1, CKPT_ITER + 1)
+        return {
+            "passed_verification": pv,
+            "key_array": ka,
+            "bucket_ptrs": bp,
+            "iteration": jnp.asarray(CKPT_ITER, jnp.int32),
+        }
+
+    def resume(state):
+        ka, pv, bp = run(
+            state["key_array"],
+            state["passed_verification"],
+            state["bucket_ptrs"],
+            CKPT_ITER + 1,
+            MAX_ITERATIONS + 1,
+        )
+        # full_verify: the ranked sequence must be sorted.
+        key_counts = jnp.zeros(MAX_KEY, jnp.int32).at[ka].add(1)
+        sorted_keys = jnp.repeat(jnp.arange(MAX_KEY, dtype=jnp.int32), key_counts,
+                                 total_repeat_length=N_KEYS)
+        in_order = jnp.sum((sorted_keys[1:] >= sorted_keys[:-1]).astype(jnp.int32))
+        return {"passed_verification": pv, "in_order": in_order,
+                "bucket_ptr_tail": bp[-1]}
+
+    def reference():
+        ka, pv, bp = run(jnp.asarray(keys0), jnp.asarray(0, jnp.int32),
+                         jnp.zeros(N_BUCKETS, jnp.int32), 1, MAX_ITERATIONS + 1)
+        key_counts = jnp.zeros(MAX_KEY, jnp.int32).at[ka].add(1)
+        sorted_keys = jnp.repeat(jnp.arange(MAX_KEY, dtype=jnp.int32), key_counts,
+                                 total_repeat_length=N_KEYS)
+        in_order = jnp.sum((sorted_keys[1:] >= sorted_keys[:-1]).astype(jnp.int32))
+        return {"passed_verification": pv, "in_order": in_order,
+                "bucket_ptr_tail": bp[-1]}
+
+    return Benchmark(
+        name="is",
+        total_iters=MAX_ITERATIONS,
+        ckpt_iter=CKPT_ITER,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={
+            "passed_verification": (0, 1),
+            "key_array": (0, N_KEYS),
+            "bucket_ptrs": (0, N_BUCKETS),
+            "iteration": (0, 1),
+        },
+    )

@@ -1,0 +1,182 @@
+"""LU — Lower-Upper symmetric Gauss-Seidel solver (NPB class S shapes).
+
+Checkpoint variables (paper Table I): ``u[12][13][13][5]``,
+``rho_i[12][13][13]``, ``qs[12][13][13]``, ``rsd[12][13][13][5]``, ``istep``.
+
+Access ranges mirrored from the SNU-C source / paper §IV-B:
+- u components 0–3: read over the full [0,12)³ core (rhs sweeps + error_norm)
+  → Fig-3 pattern, 300 uncritical each.
+- u component 4 (energy): read only through the three directional flux
+  ranges u[1:11,1:11,0:12,4], u[1:11,0:12,1:11,4], u[0:12,1:11,1:11,4]
+  (Fig 7) → 428 uncritical.
+- rho_i, qs: read over [0,12)³ before being recomputed → 300 uncritical each.
+- rsd: read over the full core (SSOR relaxation + final residual rms)
+  → same distribution as BT's u, 1500 uncritical.
+
+Expected totals (Table II/paper text): u 1628/10140, rho_i 300/2028,
+qs 300/2028, rsd 1500/10140.  (The published Table II swaps the rho_i and
+rsd rows' sizes; we follow the paper's §IV-B text — see EXPERIMENTS.md.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+from repro.npb import bt as _bt
+
+GP = 12
+PAD = 13
+NCOMP = 5
+TOTAL_ITERS = 6
+CKPT_ITER = 3
+DT = 0.002
+OMEGA = 1.2  # SSOR over-relaxation factor
+
+_INT = slice(1, GP - 1)  # interior range [1, 11)
+
+
+def _lap_interior(core: jnp.ndarray) -> jnp.ndarray:
+    """Axis-aligned second differences evaluated on the interior."""
+    c = core
+    out = (
+        c[2:, _INT, _INT] + c[:-2, _INT, _INT]
+        + c[_INT, 2:, _INT] + c[_INT, :-2, _INT]
+        + c[_INT, _INT, 2:] + c[_INT, _INT, :-2]
+        - 6.0 * c[_INT, _INT, _INT]
+    )
+    return out
+
+
+def _make_step(mix5: np.ndarray, w5: np.ndarray):
+    mix_j = jnp.asarray(mix5)
+    w5_j = jnp.asarray(w5)
+
+    def step(state):
+        u, rho_i, qs, rsd = state["u"], state["rho_i"], state["qs"], state["rsd"]
+
+        # --- reads, at exactly the NPB ranges --------------------------
+        u0123 = u[:, :GP, :GP, :4]                 # full core, comps 0-3
+        fx = u[_INT, _INT, 0:GP, 4]                # (10,10,12) x-flux range
+        fy = u[_INT, 0:GP, _INT, 4]                # (10,12,10) y-flux range
+        fz = u[0:GP, _INT, _INT, 4]                # (12,10,10) z-flux range
+        r_core = rho_i[:, :GP, :GP]                # full core
+        q_core = qs[:, :GP, :GP]                   # full core
+        rsd_core = rsd[:, :GP, :GP, :]             # full core
+
+        # --- rhs: stencil + energy-flux divergence ----------------------
+        lap = jnp.stack(
+            [_lap_interior(u0123[..., m]) for m in range(4)], axis=-1
+        )  # (10,10,10,4)
+        div = (
+            (fx[:, :, 2:] - fx[:, :, :-2])
+            + (fy[:, 2:, :] - fy[:, :-2, :])
+            + (fz[2:, :, :] - fz[:-2, :, :])
+        )  # (10,10,10)
+        # global relaxation coefficient reads ALL of rho_i, qs cores
+        coeff = 1.0 + 0.01 * jnp.tanh(jnp.mean(r_core * q_core))
+
+        rhs = jnp.concatenate(
+            [lap @ mix_j[:4, :4], jnp.zeros(lap.shape[:-1] + (1,), lap.dtype)],
+            axis=-1,
+        ) + div[..., None] * w5_j  # (10,10,10,5)
+
+        # --- SSOR-flavored relaxation of rsd (interior write) ------------
+        new_rsd_int = (1.0 - OMEGA) * rsd_core[_INT, _INT, _INT, :] + OMEGA * coeff * rhs
+        rsd = rsd.at[_INT, _INT, _INT, :].set(new_rsd_int)
+
+        # --- u update from the fresh residual (interior write) ----------
+        u = u.at[_INT, _INT, _INT, :].add(DT * new_rsd_int)
+
+        # --- recompute auxiliaries from u (full-core write) --------------
+        u_new_core = u[:, :GP, :GP, :]
+        rho_new = 1.0 / (jnp.abs(u_new_core[..., 0]) + 2.0)
+        qs_new = 0.5 * (u_new_core[..., 1] ** 2 + u_new_core[..., 2] ** 2) * rho_new
+        rho_i = rho_i.at[:, :GP, :GP].set(rho_new)
+        qs = qs.at[:, :GP, :GP].set(qs_new)
+
+        return {"u": u, "rho_i": rho_i, "qs": qs, "rsd": rsd,
+                "istep": state["istep"]}
+
+    return step
+
+
+def _finalize(exact: np.ndarray):
+    exact_j = jnp.asarray(exact[..., :4])
+
+    def fin(state):
+        u, rsd = state["u"], state["rsd"]
+        # error_norm over comps 0-3 only (comp 4 is read via fluxes in-step).
+        add = u[:, :GP, :GP, :4] - exact_j
+        rms_u = jnp.sqrt(jnp.sum(add * add, axis=(0, 1, 2)) / float(GP**3))
+        # final residual norm reads the FULL rsd core (all 5 comps).
+        r = rsd[:, :GP, :GP, :]
+        rms_r = jnp.sqrt(jnp.sum(r * r, axis=(0, 1, 2)) / float(GP**3))
+        return {"rms_u": rms_u, "rms_r": rms_r}
+
+    return fin
+
+
+@register("lu")
+def make_lu() -> Benchmark:
+    exact = _bt._exact_solution()
+    rng = np.random.RandomState(3)
+    mix5 = _bt._mixing_matrix(seed=3)
+    w5 = rng.uniform(0.1, 0.3, size=(NCOMP,))
+    # Single jitted executable for all paths → bitwise-faithful restart.
+    step = jax.jit(_make_step(mix5, w5))
+    fin = _finalize(exact)
+
+    def initial_state():
+        # Fresh seeded generator: checkpoint_state() and reference() must see
+        # the *same* initial field (a shared generator would advance between
+        # calls and silently desynchronize resume vs reference).
+        rng_init = np.random.RandomState(31)
+        u = _bt._initial_u(exact, seed=3)
+        rho = np.full((GP, PAD, PAD), 7.0)
+        q = np.full((GP, PAD, PAD), 7.0)
+        rho[:, :GP, :GP] = 1.0 / (np.abs(u[:, :GP, :GP, 0]) + 2.0)
+        q[:, :GP, :GP] = 0.5 * (u[:, :GP, :GP, 1] ** 2 + u[:, :GP, :GP, 2] ** 2) * rho[:, :GP, :GP]
+        rsd = np.full((GP, PAD, PAD, NCOMP), 7.0)
+        rsd[:, :GP, :GP, :] = 0.01 * rng_init.randn(GP, GP, GP, NCOMP)
+        return {
+            "u": jnp.asarray(u),
+            "rho_i": jnp.asarray(rho),
+            "qs": jnp.asarray(q),
+            "rsd": jnp.asarray(rsd),
+            "istep": jnp.asarray(0, jnp.int32),
+        }
+
+    def run(state, n):
+        for _ in range(n):
+            state = step(state)
+        return state
+
+    def checkpoint_state():
+        s = run(initial_state(), CKPT_ITER)
+        s["istep"] = jnp.asarray(CKPT_ITER, jnp.int32)
+        return s
+
+    def resume(state):
+        return fin(run(state, TOTAL_ITERS - CKPT_ITER))
+
+    def reference():
+        return fin(run(initial_state(), TOTAL_ITERS))
+
+    return Benchmark(
+        name="lu",
+        total_iters=TOTAL_ITERS,
+        ckpt_iter=CKPT_ITER,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={
+            "u": (1628, 10140),
+            "rho_i": (300, 2028),
+            "qs": (300, 2028),
+            "rsd": (1500, 10140),
+            "istep": (0, 1),
+        },
+    )

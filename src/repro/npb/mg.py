@@ -1,0 +1,243 @@
+"""MG — V-cycle multigrid Poisson solver (NPB class S shapes).
+
+Checkpoint variables (paper Table I): ``double u[46480]``, ``double
+r[46480]``, ``int it``.  Both buffers hold all five grid levels
+(34³, 18³, 10³, 6³, 4³ = 46416 elements) plus 64 elements of allocator
+padding, exactly the SNU-C memory layout.
+
+Criticality mechanics mirrored from the source (paper §IV-B, Figs 4-5):
+- ``u``: coarse levels are zeroed (``zero3``) inside every V-cycle before
+  use and the padding is never touched → only the finest 34³ prefix is
+  critical (the fine level is read by the interp-add / resid / psinv chain
+  before comm3 refreshes its faces).  Expected: 7176 uncritical / 46480.
+- ``r``: the first resumed operation is the ``rprj3`` restriction chain,
+  which reads the fine level at indices [1, 34) per dim (the 33³ pattern of
+  Fig 5); coarse levels are overwritten by rprj3 before any read.
+  Expected: 46480 − 33³ = 10543 uncritical (Table II; the §IV-B text says
+  10479 — the paper is internally inconsistent, we match its Table II).
+
+The V-cycle itself is genuine NPB: 27-point stencils with distance-class
+coefficients, full-weighting restriction, trilinear interpolation, periodic
+``comm3`` boundary exchange.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+
+LT = 5  # number of levels; level index 0 = coarsest (4³) … 4 = finest (34³)
+SIZES = [2 ** (k + 1) + 2 for k in range(LT)]  # [4, 6, 10, 18, 34]
+OFFSETS: List[int] = []
+_off = 0
+for m in reversed(SIZES):  # finest first in the flat buffer (NPB layout)
+    OFFSETS.append(_off)
+    _off += m**3
+OFFSETS = list(reversed(OFFSETS))  # OFFSETS[k] for level k (coarse→fine)
+BUF = 46480  # paper's allocation; 46416 used + 64 padding
+assert _off == 46416
+
+TOTAL_ITERS = 4
+CKPT_ITER = 2
+
+# NPB stencil coefficients by Manhattan distance (class S "smoother" c).
+A_COEF = (-8.0 / 3.0, 0.0, 1.0 / 6.0, 1.0 / 12.0)
+C_COEF = (-3.0 / 8.0, 1.0 / 32.0, -1.0 / 64.0, 0.0)
+
+_OFFS3 = [(dz, dy, dx) for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
+
+
+def _stencil27(x: jnp.ndarray, coef) -> jnp.ndarray:
+    """27-point stencil on the interior; reads the full cube incl. corners."""
+    m = x.shape[0]
+    acc = None
+    for dz, dy, dx in _OFFS3:
+        c = coef[abs(dz) + abs(dy) + abs(dx)]
+        if c == 0.0:
+            continue
+        term = c * x[1 + dz : m - 1 + dz, 1 + dy : m - 1 + dy, 1 + dx : m - 1 + dx]
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def _comm3(x: jnp.ndarray) -> jnp.ndarray:
+    """Periodic boundary exchange (NPB comm3), axis by axis."""
+    m = x.shape[0]
+    for ax in range(3):
+        lo = jax.lax.index_in_dim(x, m - 2, axis=ax, keepdims=True)
+        hi = jax.lax.index_in_dim(x, 1, axis=ax, keepdims=True)
+        idx_lo = [slice(None)] * 3
+        idx_lo[ax] = slice(0, 1)
+        idx_hi = [slice(None)] * 3
+        idx_hi[ax] = slice(m - 1, m)
+        x = x.at[tuple(idx_lo)].set(lo)
+        x = x.at[tuple(idx_hi)].set(hi)
+    return x
+
+
+def _set_interior(x: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    m = x.shape[0]
+    return x.at[1 : m - 1, 1 : m - 1, 1 : m - 1].set(val)
+
+
+def _rprj3(rf: jnp.ndarray, mc: int) -> jnp.ndarray:
+    """Full-weighting restriction; reads fine indices [1, m) per dim."""
+    m = rf.shape[0]
+    acc = None
+    w = (1.0 / 8.0, 1.0 / 16.0, 1.0 / 32.0, 1.0 / 64.0)
+    for dz, dy, dx in _OFFS3:
+        c = w[abs(dz) + abs(dy) + abs(dx)]
+        term = c * rf[2 + dz : m - 1 + dz : 2, 2 + dy : m - 1 + dy : 2, 2 + dx : m - 1 + dx : 2]
+        acc = term if acc is None else acc + term
+    rc = jnp.zeros((mc, mc, mc), rf.dtype)
+    rc = _set_interior(rc, acc)
+    return _comm3(rc)
+
+
+def _interp_add(uf: jnp.ndarray, zc: jnp.ndarray) -> jnp.ndarray:
+    """Trilinear prolongation ADDED into the fine grid (NPB interp).
+
+    Writes fine indices [0, m-1) per dim via read-modify-write — this is the
+    read that makes the entire checkpointed fine u critical.
+    """
+    mc = zc.shape[0]
+    for bz in (0, 1):
+        for by in (0, 1):
+            for bx in (0, 1):
+                contrib = None
+                norm = 2.0 ** -(bz + by + bx)
+                for sz in range(bz + 1):
+                    for sy in range(by + 1):
+                        for sx in range(bx + 1):
+                            t = zc[sz : sz + mc - 1, sy : sy + mc - 1, sx : sx + mc - 1]
+                            contrib = t if contrib is None else contrib + t
+                uf = uf.at[
+                    bz : bz + 2 * (mc - 1) : 2,
+                    by : by + 2 * (mc - 1) : 2,
+                    bx : bx + 2 * (mc - 1) : 2,
+                ].add(norm * contrib)
+    return uf
+
+
+def _psinv(r: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    u = u.at[1:-1, 1:-1, 1:-1].add(_stencil27(r, C_COEF))
+    return _comm3(u)
+
+
+def _resid(u: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """r = rhs − A·u on the interior, then comm3."""
+    m = u.shape[0]
+    r = jnp.zeros_like(u)
+    r = _set_interior(r, rhs[1 : m - 1, 1 : m - 1, 1 : m - 1] - _stencil27(u, A_COEF))
+    return _comm3(r)
+
+
+def _mg3p(u: List[jnp.ndarray], r: List[jnp.ndarray], v: jnp.ndarray):
+    """One V-cycle (NPB mg3P).  Levels: 0 coarsest … LT-1 finest."""
+    # down: restrict residuals
+    for k in range(LT - 1, 0, -1):
+        r[k - 1] = _rprj3(r[k], SIZES[k - 1])
+    # bottom solve
+    u[0] = jnp.zeros_like(u[0])
+    u[0] = _psinv(r[0], u[0])
+    # up
+    for k in range(1, LT - 1):
+        u[k] = jnp.zeros_like(u[k])
+        u[k] = _interp_add(u[k], u[k - 1])
+        r[k] = _resid(u[k], r[k])
+        u[k] = _psinv(r[k], u[k])
+    # top level: interp ADDS into the persistent fine u
+    k = LT - 1
+    u[k] = _interp_add(u[k], u[k - 1])
+    r[k] = _resid(u[k], v)
+    u[k] = _psinv(r[k], u[k])
+    return u, r
+
+
+def _unpack(buf: jnp.ndarray) -> List[jnp.ndarray]:
+    out = []
+    for k in range(LT):
+        m = SIZES[k]
+        out.append(jax.lax.dynamic_slice(buf, (OFFSETS[k],), (m**3,)).reshape(m, m, m))
+    return out
+
+
+def _pack(levels: List[jnp.ndarray], buf_like: jnp.ndarray) -> jnp.ndarray:
+    buf = jnp.zeros_like(buf_like)
+    for k in range(LT):
+        buf = jax.lax.dynamic_update_slice(buf, levels[k].reshape(-1), (OFFSETS[k],))
+    return buf
+
+
+def _make_v() -> np.ndarray:
+    """NPB zran3-style RHS: ±1 charges at fixed pseudo-random fine cells."""
+    m = SIZES[-1]
+    rng = np.random.RandomState(31415)
+    v = np.zeros((m, m, m))
+    interior = rng.randint(1, m - 1, size=(20, 3))
+    for idx, (z, y, x) in enumerate(interior):
+        v[z, y, x] = 1.0 if idx < 10 else -1.0
+    return v
+
+
+@register("mg")
+def make_mg() -> Benchmark:
+    v = jnp.asarray(_make_v())
+
+    def one_iter(u_levels, r_levels):
+        u_levels, r_levels = _mg3p(u_levels, r_levels, v)
+        r_levels[LT - 1] = _resid(u_levels[LT - 1], v)
+        return u_levels, r_levels
+
+    def initial_levels():
+        u0 = [jnp.zeros((m, m, m), jnp.float64) for m in SIZES]
+        r0 = [jnp.zeros((m, m, m), jnp.float64) for m in SIZES]
+        r0[LT - 1] = _resid(u0[LT - 1], v)  # initial residual = v (u = 0)
+        return u0, r0
+
+    def run(u_levels, r_levels, n):
+        for _ in range(n):  # n is tiny and static; unrolled
+            u_levels, r_levels = one_iter(u_levels, r_levels)
+        return u_levels, r_levels
+
+    def checkpoint_state():
+        u_l, r_l = initial_levels()
+        u_l, r_l = run(u_l, r_l, CKPT_ITER)
+        zero = jnp.zeros(BUF, jnp.float64)
+        return {
+            "u": _pack(u_l, zero),
+            "r": _pack(r_l, zero),
+            "it": jnp.asarray(CKPT_ITER, jnp.int32),
+        }
+
+    def resume(state):
+        u_l = _unpack(state["u"])
+        r_l = _unpack(state["r"])
+        u_l, r_l = run(u_l, r_l, TOTAL_ITERS - CKPT_ITER)
+        rf = r_l[LT - 1]
+        m = SIZES[-1]
+        rnm2 = jnp.sqrt(jnp.sum(rf[1:-1, 1:-1, 1:-1] ** 2) / float((m - 2) ** 3))
+        return {"rnm2": rnm2}
+
+    def reference():
+        u_l, r_l = initial_levels()
+        u_l, r_l = run(u_l, r_l, TOTAL_ITERS)
+        rf = r_l[LT - 1]
+        m = SIZES[-1]
+        rnm2 = jnp.sqrt(jnp.sum(rf[1:-1, 1:-1, 1:-1] ** 2) / float((m - 2) ** 3))
+        return {"rnm2": rnm2}
+
+    return Benchmark(
+        name="mg",
+        total_iters=TOTAL_ITERS,
+        ckpt_iter=CKPT_ITER,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={"u": (7176, BUF), "r": (10543, BUF), "it": (0, 1)},
+    )

@@ -1,0 +1,82 @@
+"""SP — Scalar Pentadiagonal solver (NPB class S shapes).
+
+Identical checkpoint variables and access ranges to BT (paper §IV-B: "SP
+invokes the same function error_norm ... exactly the same critical-uncritical
+distribution").  The solver sweep differs: SP's scalar pentadiagonal factor
+is modeled with an added 4th-order (pentadiagonal-stencil) dissipation term,
+still reading only u[:, :12, :12, :].
+
+Expected criticality (Table II): 1500 uncritical / 10140.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.npb.common import Benchmark, register
+from repro.npb import bt as _bt
+
+GP = _bt.GP
+PAD = _bt.PAD
+NCOMP = _bt.NCOMP
+TOTAL_ITERS = 8
+CKPT_ITER = 4
+DT = 0.003
+
+
+def _biharmonic(core: jnp.ndarray) -> jnp.ndarray:
+    """Periodic 4th-difference per axis — the pentadiagonal stencil."""
+    out = jnp.zeros_like(core)
+    for ax in range(3):
+        out = out + (
+            jnp.roll(core, 2, axis=ax)
+            - 4.0 * jnp.roll(core, 1, axis=ax)
+            + 6.0 * core
+            - 4.0 * jnp.roll(core, -1, axis=ax)
+            + jnp.roll(core, -2, axis=ax)
+        )
+    return out
+
+
+@register("sp")
+def make_sp() -> Benchmark:
+    exact = _bt._exact_solution()
+    mix = _bt._mixing_matrix(seed=2)
+    mix_j = jnp.asarray(mix)
+    error_norm = _bt.make_error_norm(exact)
+
+    @jax.jit
+    def step(u: jnp.ndarray) -> jnp.ndarray:
+        core = u[:, :GP, :GP, :]
+        rhs = _bt._lap3(core) @ mix_j - 0.05 * _biharmonic(core)
+        return u.at[:, :GP, :GP, :].set(core + DT * rhs)
+
+    def run_from(u, n_steps):
+        u = jnp.asarray(u)
+        for _ in range(n_steps):
+            u = step(u)
+        return u
+
+    def checkpoint_state():
+        u = run_from(_bt._initial_u(exact, seed=2), CKPT_ITER)
+        return {"u": u, "step": jnp.asarray(CKPT_ITER, jnp.int32)}
+
+    def resume(state):
+        u = run_from(state["u"], TOTAL_ITERS - CKPT_ITER)
+        return {"rms": error_norm(u)}
+
+    def reference():
+        u = run_from(_bt._initial_u(exact, seed=2), TOTAL_ITERS)
+        return {"rms": error_norm(u)}
+
+    return Benchmark(
+        name="sp",
+        total_iters=TOTAL_ITERS,
+        ckpt_iter=CKPT_ITER,
+        checkpoint_state=checkpoint_state,
+        resume=resume,
+        reference=reference,
+        expected={"u": (1500, 10140), "step": (0, 1)},
+    )

@@ -1,0 +1,72 @@
+"""Batched decode engine with a scrutinizable, checkpointable state.
+
+The engine state {cache, pos, tokens} is exactly the paper's "variables
+necessary for checkpointing" for serving: restarting a long decode from a
+mid-stream failure.  ``resume_fn`` exposes "the rest of the program"
+(N more decode steps) to scrutinize()/participation(), which prove that
+cache slots beyond ``pos`` are uncritical — the KV-suffix saving reported
+in EXPERIMENTS.md §Beyond-paper."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: Any
+    params: Any
+    max_len: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: prefill(self.cfg, p, b, self.max_len))
+        self._step = jax.jit(
+            lambda p, c, t, pos: decode_step(self.cfg, p, c, t, pos))
+
+    def start(self, batch) -> Dict[str, Any]:
+        logits, cache = self._prefill(self.params, batch)
+        tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return {"cache": cache,
+                "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32),
+                "tokens": tokens}
+
+    def step(self, state) -> Tuple[Dict[str, Any], jnp.ndarray]:
+        logits, cache = self._step(self.params, state["cache"],
+                                   state["tokens"], state["pos"])
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return ({"cache": cache, "pos": state["pos"] + 1, "tokens": nxt},
+                nxt[:, 0])
+
+    def generate(self, batch, n_tokens: int):
+        state = self.start(batch)
+        out = [state["tokens"][:, 0]]
+        for _ in range(n_tokens - 1):
+            state, tok = self.step(state)
+            out.append(tok)
+        return jnp.stack(out, axis=1), state
+
+    # --- checkpoint integration ---------------------------------------
+
+    def resume_fn(self, n_steps: int):
+        """(engine state) → decode outputs; the scrutiny target."""
+
+        def fn(state):
+            s = dict(state)
+            logits_all = []
+            for _ in range(n_steps):
+                logits, cache = decode_step(self.cfg, self.params,
+                                            s["cache"], s["tokens"], s["pos"])
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                s = {"cache": cache, "pos": s["pos"] + 1, "tokens": tok}
+                logits_all.append(logits)
+            return {"logits": jnp.stack(logits_all)}
+
+        return fn

@@ -1,0 +1,150 @@
+"""Optimizers: AdamW and Adafactor (factored second moments — required to
+fit deepseek-v3-671b), plus global-norm clipping.  Pure pytree functions;
+optimizer state inherits the parameter shardings (FSDP shards it too)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"           # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: Optional[float] = 1.0
+    warmup: int = 100
+    decay_steps: int = 10_000
+
+
+def schedule(oc: OptConfig, step):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, oc.warmup))
+    prog = jnp.clip((s - oc.warmup) / max(1, oc.decay_steps - oc.warmup), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(oc: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(oc, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - oc.b1 ** t
+    bc2 = 1 - oc.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = oc.b1 * mu + (1 - oc.b1) * g32
+        nu = oc.b2 * nu + (1 - oc.b2) * g32 * g32
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + oc.eps)
+        u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments over the trailing two dims)
+# --------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor_init(params):
+    def slot(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"slots": jax.tree_util.tree_map(
+        slot, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(oc: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(oc, step)
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, slot):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if _factored(p):
+            vr = beta * slot["vr"] + (1 - beta) * g2.mean(-1)
+            vc = beta * slot["vc"] + (1 - beta) * g2.mean(-2)
+            denom = vr.mean(-1, keepdims=True)[..., None]
+            v = (vr[..., None] * vc[..., None, :]) / jnp.maximum(denom, 1e-30)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta * slot["v"] + (1 - beta) * g2
+            new_slot = {"v": v}
+        u = g32 * jax.lax.rsqrt(v + 1e-30)
+        # update clipping (RMS <= 1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_slot
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    slots_def = jax.tree_util.tree_structure(params)
+    flat_s = slots_def.flatten_up_to(state["slots"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_s = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return new_p, {"slots": new_s, "step": step}
+
+
+def init_opt(oc: OptConfig, params):
+    return adamw_init(params) if oc.kind == "adamw" else adafactor_init(params)
+
+
+def apply_opt(oc: OptConfig, params, grads, state):
+    if oc.kind == "adamw":
+        return adamw_update(oc, params, grads, state)
+    return adafactor_update(oc, params, grads, state)

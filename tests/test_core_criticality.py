@@ -1,0 +1,190 @@
+"""Unit + property tests for the AD criticality engine (paper §III-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LeafPolicy,
+    ScrutinyConfig,
+    scrutinize,
+    scrutinize_jaxpr_reads,
+)
+
+
+def test_slice_pattern_bt_style():
+    """Padding planes written-but-never-read must be uncritical (paper Fig 3)."""
+
+    def f(state):
+        u = state["u"]
+        return jnp.sum(u[:, :4, :4, :] ** 2)
+
+    u = jnp.ones((4, 5, 5, 3), jnp.float32)
+    rep = scrutinize(f, {"u": u})
+    m = rep["u"].mask.reshape(4, 5, 5, 3)
+    assert m[:, :4, :4, :].all()
+    assert not m[:, 4, :, :].any()
+    assert not m[:, :, 4, :].any()
+
+
+def test_write_before_read_is_uncritical():
+    """The KV-cache pattern: slots overwritten before being read."""
+
+    def f(state):
+        cache = state["cache"]
+        new = jnp.arange(4, dtype=jnp.float32)
+        cache = jax.lax.dynamic_update_slice(cache, new, (8,))
+        return jnp.sum(cache)  # reads everything, but [8:12) was overwritten
+
+    cache = jnp.ones(16, jnp.float32)
+    rep = scrutinize(f, {"cache": cache})
+    m = rep["cache"].mask
+    assert m[:8].all() and m[12:].all()
+    assert not m[8:12].any()
+
+
+def test_integer_state_always_critical():
+    def f(state):
+        return jnp.sum(state["x"]) * 1.0
+
+    rep = scrutinize(f, {"x": jnp.ones(3), "step": jnp.asarray(5, jnp.int32),
+                         "flags": jnp.zeros(4, jnp.bool_)})
+    assert rep["step"].policy == LeafPolicy.ALWAYS_CRITICAL
+    assert rep["step"].critical == 1
+    assert rep["flags"].critical == 4
+
+
+def test_multiplicative_zero_vs_structural_zero():
+    """x*0 has zero grad (AD says uncritical) — the paper's semantics, since
+    such an element indeed cannot influence the output at this state."""
+
+    def f(state):
+        x = state["x"]
+        w = jnp.array([1.0, 0.0, 2.0], jnp.float32)
+        return jnp.sum(x * w)
+
+    rep = scrutinize(f, {"x": jnp.ones(3, jnp.float32)})
+    np.testing.assert_array_equal(rep["x"].mask, [True, False, True])
+
+
+def test_probe_union_defeats_single_cotangent_cancellation():
+    """With 2 outputs o0 = x0, o1 = -x0, a single crafted cotangent (1, 1)
+    would cancel.  Random multi-probe cotangents must keep x0 critical."""
+
+    def f(state):
+        x = state["x"]
+        return {"a": x[0], "b": -x[0], "c": x[1]}
+
+    rep = scrutinize(f, {"x": jnp.ones(2, jnp.float32)},
+                     config=ScrutinyConfig(probes=3))
+    assert rep["x"].mask.all()
+
+
+def test_complex_leaf_ft_style():
+    def f(state):
+        y = state["y"]
+        used = y[:, :, :4]  # plane k=4 unused (paper FT: k=64 plane)
+        return jnp.sum(jnp.abs(used) ** 2)
+
+    y = (jnp.ones((3, 3, 5)) + 1j * jnp.ones((3, 3, 5))).astype(jnp.complex64)
+    rep = scrutinize(f, {"y": y})
+    m = rep["y"].mask.reshape(3, 3, 5)
+    assert m[:, :, :4].all()
+    assert not m[:, :, 4].any()
+    assert rep["y"].uncritical == 9
+
+
+def test_through_control_flow_scan():
+    """Criticality flows through lax.scan (the iterative main loops of NPB)."""
+
+    def f(state):
+        def body(carry, _):
+            return carry * 1.01 + state["bias"][:2].sum(), None
+
+        out, _ = jax.lax.scan(body, state["x0"], None, length=5)
+        return out
+
+    rep = scrutinize(f, {"x0": jnp.asarray(1.0), "bias": jnp.ones(4)})
+    assert rep["x0"].mask.all()
+    np.testing.assert_array_equal(rep["bias"].mask, [True, True, False, False])
+
+
+def test_jaxpr_reads_prepass():
+    def f(state):
+        return state["a"].sum()
+
+    used = scrutinize_jaxpr_reads(f, {"a": jnp.ones(3), "dead": jnp.ones(2)})
+    assert used["a"] is True
+    assert used["dead"] is False
+
+
+def test_magnitudes_kept_for_tiering():
+    def f(state):
+        x = state["x"]
+        return 100.0 * x[0] + 0.001 * x[1] + 0.0 * x[2]
+
+    rep = scrutinize(f, {"x": jnp.ones(3, jnp.float32)})
+    mag = rep["x"].magnitude
+    assert mag is not None
+    assert mag[0] > mag[1] > 0
+    assert mag[2] == 0
+
+
+@given(
+    n=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_masked_sum_criticality(n, seed):
+    """For f(x) = sum(x[sel]), criticality == sel, for random boolean sel."""
+    rng = np.random.RandomState(seed)
+    sel = rng.rand(n) > 0.5
+    sel_j = jnp.asarray(sel)
+
+    def f(state):
+        return jnp.sum(jnp.where(sel_j, state["x"], 0.0) ** 2)
+
+    x = jnp.asarray(rng.randn(n).astype(np.float32)) + 3.0  # keep away from 0
+    rep = scrutinize(f, {"x": x})
+    np.testing.assert_array_equal(rep["x"].mask, sel)
+
+
+@given(
+    n=st.integers(min_value=4, max_value=48),
+    cut=st.data(),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_prefix_read(n, cut):
+    """f reads a prefix [0, k) — regions must be exactly one run [0, k)."""
+    k = cut.draw(st.integers(min_value=1, max_value=n))
+
+    def f(state):
+        return jnp.sum(state["x"][:k] ** 2 + state["x"][:k])
+
+    rep = scrutinize(f, {"x": jnp.ones(n, jnp.float32)})
+    t = rep["x"].table
+    assert t.num_regions == 1
+    np.testing.assert_array_equal(t.regions[0], [0, k])
+
+
+def test_no_differentiable_output_raises():
+    def f(state):
+        return {"count": jnp.asarray(3, jnp.int32)}
+
+    with pytest.raises(ValueError, match="no differentiable outputs"):
+        scrutinize(f, {"x": jnp.ones(2)})
+
+
+def test_input_jitter_runs():
+    def f(state):
+        return jnp.sum(jax.nn.relu(state["x"]))
+
+    # x at exactly 0 is in relu's dead zone; jitter probes move off it.
+    rep = scrutinize(
+        f, {"x": jnp.zeros(4, jnp.float32)},
+        config=ScrutinyConfig(probes=4, input_jitter=0.1),
+    )
+    # relu grad at jittered positive points is 1 — at least some become critical.
+    assert rep["x"].mask.any()

@@ -1,0 +1,93 @@
+"""Property tests for the region (auxiliary-file) encoding — paper §III-B."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regions import (
+    RegionTable,
+    mask_to_regions,
+    pack_with_regions,
+    regions_to_mask,
+    unpack_with_regions,
+)
+
+
+@given(st.lists(st.booleans(), min_size=0, max_size=2000))
+@settings(max_examples=200, deadline=None)
+def test_region_roundtrip(bits):
+    mask = np.array(bits, dtype=bool)
+    regions = mask_to_regions(mask)
+    back = regions_to_mask(regions, mask.size)
+    np.testing.assert_array_equal(mask, back)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=500))
+@settings(max_examples=200, deadline=None)
+def test_regions_are_canonical(bits):
+    mask = np.array(bits, dtype=bool)
+    r = mask_to_regions(mask)
+    # Sorted, non-overlapping, non-empty, maximal runs.
+    assert (r[:, 0] < r[:, 1]).all()
+    if len(r) > 1:
+        assert (r[1:, 0] > r[:-1, 1]).all()  # a gap between runs (maximality)
+    t = RegionTable.from_mask(mask, itemsize=8)
+    t.validate()
+    assert t.critical_count == int(mask.sum())
+    assert t.uncritical_count == int((~mask).sum())
+
+
+@given(
+    st.integers(min_value=1, max_value=400).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.booleans(), min_size=n, max_size=n),
+            st.lists(
+                st.floats(min_value=-1e6, max_value=1e6, allow_nan=False),
+                min_size=n,
+                max_size=n,
+            ),
+        )
+    )
+)
+@settings(max_examples=150, deadline=None)
+def test_pack_unpack_roundtrip(args):
+    n, bits, values = args
+    mask = np.array(bits, dtype=bool)
+    flat = np.array(values, dtype=np.float64)
+    regions = mask_to_regions(mask)
+    payload = pack_with_regions(flat, regions)
+    assert payload.size == int(mask.sum())
+    restored = unpack_with_regions(payload, regions, n, fill=np.nan)
+    # Critical positions restored exactly; uncritical positions are fill.
+    np.testing.assert_array_equal(restored[mask], flat[mask])
+    assert np.isnan(restored[~mask]).all()
+
+
+def test_storage_model_matches_paper_accounting():
+    # 10140-element double array with 1500 uncritical (paper BT(u)).
+    mask = np.ones(10140, dtype=bool)
+    # Carve the BT pattern: u[12][13][13][5] with j=12 or i=12 planes unused.
+    m4 = mask.reshape(12, 13, 13, 5)
+    m4[:, 12, :, :] = False
+    m4[:, :, 12, :] = False
+    t = RegionTable.from_mask(mask, itemsize=8)
+    assert t.uncritical_count == 1500
+    assert t.uncritical_rate == pytest.approx(0.148, abs=1e-3)
+    # Optimized = payload + aux; aux picks the cheaper encoding.
+    assert t.optimized_bytes < t.full_bytes
+    assert t.region_aux_bytes == t.num_regions * 16
+    assert t.bitmap_aux_bytes == (10140 + 7) // 8
+    assert t.aux_bytes == min(t.region_aux_bytes, t.bitmap_aux_bytes)
+    # The fragmented BT mask favours the bitmap encoding.
+    assert t.aux_encoding == "bitmap"
+    # Paper accounting (payload only) tracks the uncritical rate exactly.
+    assert t.payload_bytes == 8640 * 8
+
+
+def test_empty_and_full_masks():
+    t_full = RegionTable.from_mask(np.ones(64, bool), itemsize=4)
+    assert t_full.num_regions == 1 and t_full.uncritical_count == 0
+    t_none = RegionTable.from_mask(np.zeros(64, bool), itemsize=4)
+    assert t_none.num_regions == 0 and t_none.critical_count == 0
+    assert t_none.payload_bytes == 0

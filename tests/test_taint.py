@@ -1,0 +1,196 @@
+"""Unit tests for the structural participation engine (core/taint.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.taint import participation
+
+
+def masks(fn, state):
+    rep = participation(fn, state)
+    return {k: v.mask for k, v in rep.leaves.items()}
+
+
+def test_slice_read():
+    x = jnp.arange(10.0)
+    m = masks(lambda s: {"o": s["x"][:7].sum()}, {"x": x})["x"]
+    assert m[:7].all() and not m[7:].any()
+
+
+def test_write_before_read_static_window():
+    # The paper's central mechanism: overwritten-then-read is uncritical.
+    x = jnp.arange(10.0)
+
+    def f(s):
+        y = s["x"].at[2:5].set(jnp.zeros(3))
+        return {"o": (y ** 2).sum()}
+
+    m = masks(f, {"x": x})["x"]
+    expect = np.ones(10, bool)
+    expect[2:5] = False
+    np.testing.assert_array_equal(m, expect)
+
+
+def test_write_before_read_dynamic_window():
+    # dynamic_update_slice with a traced-but-concrete start index.
+    x = jnp.arange(10.0)
+
+    def f(s):
+        y = jax.lax.dynamic_update_slice(s["x"], jnp.zeros(4), (s["p"],))
+        return {"o": y.sum()}
+
+    rep = participation(f, {"x": x, "p": jnp.asarray(3)})
+    m = rep["x"].mask
+    expect = np.ones(10, bool)
+    expect[3:7] = False
+    np.testing.assert_array_equal(m, expect)
+    # The start index is control state -> critical (int policy).
+    assert rep["p"].mask.all()
+
+
+def test_gather_reads_only_indexed():
+    x = jnp.arange(10.0)
+    idx = jnp.asarray([1, 4, 4, 8])
+    m = masks(lambda s: {"o": s["x"][idx].sum()}, {"x": x})["x"]
+    expect = np.zeros(10, bool)
+    expect[[1, 4, 8]] = True
+    np.testing.assert_array_equal(m, expect)
+
+
+def test_scatter_add_keeps_operand_taint():
+    x = jnp.arange(10.0)
+
+    def f(s):
+        y = s["x"].at[2:5].add(1.0)
+        return {"o": y.sum()}
+
+    m = masks(f, {"x": x})["x"]
+    assert m.all()  # add reads the operand everywhere it is later read
+
+
+def test_fft_couples_transform_axes():
+    x = jnp.arange(8.0) + 0j
+
+    def f(s):
+        return {"o": jnp.fft.fft(s["x"])[0]}
+
+    m = masks(f, {"x": x})["x"]
+    assert m.all()  # DFT couples every input to every output
+
+
+def test_fft_padding_plane_uncritical():
+    # The FT pattern: padded last dim never enters the transform.
+    y = jnp.ones((4, 5), dtype=jnp.complex128)
+
+    def f(s):
+        return {"o": jnp.fft.ifft(s["y"][:, :4]).sum()}
+
+    m = masks(f, {"y": y})["y"].reshape(4, 5)
+    assert m[:, :4].all() and not m[:, 4].any()
+
+
+def test_dot_general_structural():
+    # Participation through matmul is structural: a zero weight still reads.
+    w = jnp.zeros((3, 4))
+    x = jnp.arange(3.0)
+
+    def f(s):
+        return {"o": s["x"] @ w}
+
+    m = masks(f, {"x": x})["x"]
+    assert m.all()
+
+
+def test_scan_carry_fixpoint():
+    x = jnp.arange(6.0)
+
+    def f(s):
+        def body(c, _):
+            # Only elements 0:3 of the carry propagate.
+            c = c.at[0:3].set(c[0:3] * 1.5)
+            return c, c[0]
+
+        c, ys = jax.lax.scan(body, s["x"], None, length=4)
+        return {"o": ys.sum()}
+
+    m = masks(f, {"x": x})["x"]
+    # Only element 0 is transitively read (ys = c[0]; its update reads c[0]).
+    # Elements 1:3 are overwritten every iteration before any read; the final
+    # carry is unused — all of 1: are uncritical.
+    assert m[0]
+    assert not m[1:].any()
+
+
+def test_cond_unions_branches():
+    x = jnp.arange(4.0)
+
+    def f(s):
+        out = jax.lax.cond(
+            s["x"][0] > 0,
+            lambda v: v[1],
+            lambda v: v[2],
+            s["x"],
+        )
+        return {"o": out}
+
+    m = masks(f, {"x": x})["x"]
+    assert m[0] and m[1] and m[2] and not m[3]
+
+
+def test_while_loop_carry():
+    def f(s):
+        def cond(c):
+            i, v = c
+            return i < 3
+
+        def body(c):
+            i, v = c
+            return i + 1, v.at[0].set(v[0] + v[1])
+
+        _, v = jax.lax.while_loop(cond, body, (0, s["x"]))
+        return {"o": v[0]}
+
+    m = masks(f, {"x": jnp.arange(4.0)})["x"]
+    assert m[0] and m[1]
+    assert not m[2] and not m[3]
+
+
+def test_jitted_inner_function_recursed():
+    @jax.jit
+    def step(u):
+        return u.at[1:3].add(u[1:3] * 0.1)
+
+    def f(s):
+        return {"o": step(s["u"])[:3].sum()}
+
+    m = masks(f, {"u": jnp.arange(5.0)})["u"]
+    assert m[:3].all() and not m[3:].any()
+
+
+def test_integer_leaves_policy_critical():
+    rep = participation(
+        lambda s: {"o": s["x"].sum()},
+        {"x": jnp.ones(3), "i": jnp.asarray(2, jnp.int32)},
+    )
+    assert rep["i"].mask.all()
+
+
+def test_grad_subset_of_participation():
+    # grad-critical must be a subset of participation-critical.
+    from repro.core import scrutinize
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32,), jnp.float64)
+
+    def f(s):
+        v = s["x"][:24]
+        return {"o": jnp.tanh(v).sum() + (v[:8] ** 2).sum()}
+
+    g = scrutinize(f, {"x": x})["x"].mask
+    p = participation(f, {"x": x})["x"].mask
+    assert (~p | ~g | p).all()  # trivially true; the real check:
+    assert not (g & ~p).any(), "gradient found criticality outside read set"

@@ -1,0 +1,115 @@
+"""Integration: train loop + checkpoint/restart equivalence, data pipeline
+resume, compressed-DP step."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import pipeline as dp
+from repro.train.optim import OptConfig
+from repro.train.step import make_train_step
+from repro.launch.train import build_state, main as train_main
+
+
+def test_loss_decreases_smoke():
+    # copy task: strong learnable signal in <100 CPU-steps
+    losses = train_main(["--arch", "phi4-mini-3.8b", "--task", "copy",
+                         "--steps", "80", "--batch", "8", "--seq", "64",
+                         "--ckpt-every", "1000", "--log-every", "1000"])
+    assert losses[-1] < losses[0] - 0.5, (
+        f"loss did not decrease: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+def test_restart_equivalence(tmp_path):
+    """Run 12 steps straight vs 6 + crash + restore + 6: identical losses."""
+    import shutil
+
+    args = ["--steps", "12", "--batch", "2", "--seq", "32",
+            "--ckpt-every", "6", "--ckpt-dir", str(tmp_path)]
+    full = train_main(args)
+    # emulate a crash after step 6: drop everything newer than step 6
+    for level in ("ram", "disk"):
+        d = tmp_path / level
+        if d.exists():
+            for sub in d.iterdir():
+                if sub.name.startswith("step_") and \
+                        int(sub.name.split("_")[1]) > 6:
+                    shutil.rmtree(sub)
+    resumed = train_main(args + ["--resume"])
+    assert len(resumed) == 6
+    np.testing.assert_allclose(full[6:], resumed, rtol=1e-5,
+                               err_msg="restart diverged from straight run")
+
+
+def test_data_pipeline_deterministic_resume():
+    cfg = get_config("xlstm-125m").reduced()
+    s0 = dp.init_state(cfg, 2, 16, seed=3)
+    # consume 3 batches
+    s = s0
+    seen = []
+    for _ in range(3):
+        b, s = dp.next_batch(cfg, s)
+        seen.append(np.asarray(b["tokens"]))
+    # resume from a snapshot taken at step 1
+    s = s0
+    b1, s1 = dp.next_batch(cfg, s)
+    snap = jax.tree_util.tree_map(np.asarray, s1)
+    s2 = jax.tree_util.tree_map(jnp.asarray, snap)
+    b2, s2 = dp.next_batch(cfg, s2)
+    b3, _ = dp.next_batch(cfg, s2)
+    np.testing.assert_array_equal(np.asarray(b2["tokens"]), seen[1])
+    np.testing.assert_array_equal(np.asarray(b3["tokens"]), seen[2])
+
+
+def test_data_pipeline_prefetch_criticality():
+    """Consumed prefetch slots are overwritten before read ⇒ uncritical;
+    the paper's write-before-read pattern in the data layer."""
+    from repro.core.policy import LeafPolicy, ScrutinyConfig
+    from repro.core.taint import participation
+
+    cfg = get_config("xlstm-125m").reduced()
+    state = dp.init_state(cfg, 2, 8, seed=0)
+    # consume one batch so the cursor moves off slot 0
+    _, state = dp.next_batch(cfg, state)
+    # int token buffers need the structural engine (AD is undefined on
+    # ints); opt into element-granular tainting of every leaf.
+    rep = participation(
+        dp.consume_resume_fn(cfg, n_steps=2), state,
+        config=ScrutinyConfig(leaf_policy=lambda leaf: LeafPolicy.AD))
+    buf = rep["buffer"]
+    n_slot = int(np.prod(state["buffer"].shape[1:]))
+    mask = buf.mask.reshape(dp.PREFETCH, n_slot)
+    # slots 1 and 2 are consumed by the next two steps → critical;
+    # slot 0 (just refilled ahead of need) and slot 3 depend on refill
+    # order — at minimum one consumed-and-overwritten slot must be dropped.
+    assert mask[1].all() and mask[2].all()
+    assert not mask.all(), "no prefetch slot was provably uncritical"
+
+
+def test_compressed_dp_step_runs():
+    from jax.sharding import Mesh
+    from repro.train.step import init_errors, make_compressed_dp_step
+    from repro.models import init_params
+    from repro.train.optim import init_opt
+
+    cfg = get_config("xlstm-125m").reduced()
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    oc = OptConfig()
+    step = make_compressed_dp_step(cfg, oc, mesh, frac=0.05)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt(oc, params)
+    errors = init_errors(params)
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    p2, o2, e2, loss = step(params, opt, errors, batch)
+    assert np.isfinite(float(loss))
+    # error feedback is populated (unselected gradient mass retained)
+    err_norm = sum(float(jnp.abs(x).sum())
+                   for x in jax.tree_util.tree_leaves(e2))
+    assert err_norm > 0.0
