@@ -2,11 +2,14 @@
 multi-level, partner-redundant, elastic."""
 
 from repro.checkpoint.manager import CheckpointManager, Level
-from repro.checkpoint.packing import PackedLeaf, pack_leaf, unpack_leaf
-from repro.checkpoint.store import (load_checkpoint, restore_state,
-                                    save_checkpoint)
+from repro.checkpoint.packing import (PackedLeaf, pack_leaf,
+                                      pack_leaf_from_payload, unpack_leaf)
+from repro.checkpoint.store import (list_steps, load_checkpoint,
+                                    restore_state, save_checkpoint,
+                                    step_of_entry)
 
 __all__ = [
-    "CheckpointManager", "Level", "PackedLeaf", "pack_leaf", "unpack_leaf",
-    "load_checkpoint", "restore_state", "save_checkpoint",
+    "CheckpointManager", "Level", "PackedLeaf", "pack_leaf",
+    "pack_leaf_from_payload", "unpack_leaf", "list_steps", "load_checkpoint",
+    "restore_state", "save_checkpoint", "step_of_entry",
 ]

@@ -9,6 +9,13 @@
 - **Scrutinized**: a CriticalityReport (from repro.core) reduces what is
   written; re-scrutinize every ``rescrutinize_every`` saves (masks can
   drift as control state evolves).
+- **Device-resident fast path** (``save_mode``): with a report available,
+  each masked leaf is compacted *on device* (kernels/mask_pack, per shard
+  when the leaf is sharded along its leading axis) and only the critical
+  payload + per-tile counts cross D2H — save cost scales with the critical
+  fraction end-to-end, not the state size.  The on-disk bytes are identical
+  to the host path (tests/test_device_save.py).  ``last_save_stats`` records
+  measured D2H bytes per save.
 - **Retention**: keep_n per level.
 """
 
@@ -24,9 +31,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.checkpoint.store import load_checkpoint, restore_state, save_checkpoint
-from repro.core.criticality import CriticalityReport
+from repro.checkpoint.packing import PackedLeaf, pack_leaf_from_payload
+from repro.checkpoint.store import (load_checkpoint, restore_state,
+                                    save_checkpoint, step_of_entry)
+from repro.core.criticality import CriticalityReport, _path_str
 from repro.core.policy import PrecisionPolicy
+from repro.distributed.sharding import pack_sharded_payload
 
 
 @dataclasses.dataclass
@@ -39,21 +49,36 @@ class Level:
 
 
 class CheckpointManager:
+    """``save_mode``: "auto" packs scrutinized leaves on device whenever a
+    report is available and precision tiering is off (tiers need host-side
+    magnitudes); "device" forces the device path where eligible; "host"
+    always snapshots the full state to host first (the original behaviour).
+    """
+
     def __init__(self, levels: Sequence[Level],
                  scrutiny_fn: Optional[Callable[[Any], CriticalityReport]] = None,
                  precision: Optional[PrecisionPolicy] = None,
-                 rescrutinize_every: int = 0):
+                 rescrutinize_every: int = 0,
+                 save_mode: str = "auto",
+                 pack_use_kernel: Optional[bool] = None,
+                 pack_interpret: bool = False):
+        if save_mode not in ("auto", "host", "device"):
+            raise ValueError(f"unknown save_mode {save_mode!r}")
         self.levels = list(levels)
         for lv in self.levels:
             os.makedirs(lv.directory, exist_ok=True)
         self.scrutiny_fn = scrutiny_fn
         self.precision = precision
         self.rescrutinize_every = rescrutinize_every
+        self.save_mode = save_mode
+        self._pack_opts = dict(use_kernel=pack_use_kernel,
+                               interpret=pack_interpret)
         self._report: Optional[CriticalityReport] = None
         self._saves = 0
         self._pool = cf.ThreadPoolExecutor(max_workers=2)
         self._inflight: Dict[str, cf.Future] = {}
         self._lock = threading.Lock()
+        self.last_save_stats: Optional[Dict[str, Any]] = None
 
     # --- save ------------------------------------------------------------
 
@@ -67,11 +92,54 @@ class CheckpointManager:
             self._report = self.scrutiny_fn(state)
         return self._report
 
+    def _device_eligible(self, report) -> bool:
+        if self.save_mode == "host" or report is None:
+            return False
+        if self.precision is not None and getattr(self.precision, "enabled",
+                                                  True):
+            return False  # tiered encode needs host-side magnitudes
+        return True
+
+    def _snapshot(self, state, report):
+        """Move the state off device: full leaves D2H on the host path,
+        packed-payload-only D2H on the device path.  Returns
+        (host_state, prepacked, stats)."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        device = self._device_eligible(report)
+        prepacked: Dict[str, PackedLeaf] = {}
+        leaves = []
+        d2h = 0
+        full = 0
+        for path, leaf in flat:
+            name = _path_str(path)
+            rep = report.leaves.get(name) if (device and report) else None
+            mask = rep.mask if rep is not None else None
+            if (mask is not None and not mask.all()
+                    and isinstance(leaf, jax.Array) and leaf.size > 0):
+                payload, counts, moved = pack_sharded_payload(
+                    leaf, mask, **self._pack_opts)
+                prepacked[name] = pack_leaf_from_payload(
+                    name, leaf.shape, str(leaf.dtype), mask, payload)
+                leaves.append(leaf)     # placeholder; writer skips it
+                d2h += moved
+                full += leaf.nbytes
+            else:
+                arr = np.asarray(leaf)
+                leaves.append(arr)
+                d2h += arr.nbytes
+                full += arr.nbytes
+        stats = {"mode": "device" if device else "host",
+                 "d2h_bytes": int(d2h), "full_bytes": int(full),
+                 "packed_leaves": len(prepacked)}
+        host_state = jax.tree_util.tree_unflatten(treedef, leaves)
+        return host_state, (prepacked or None), stats
+
     def save(self, step: int, state, block: bool = False) -> List[cf.Future]:
-        """Snapshot to host memory, then write asynchronously per level."""
-        host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
-        report = self.maybe_report(host_state)
+        """Snapshot (device-pack or host-copy), then write async per level."""
+        report = self.maybe_report(state)
         self._saves += 1
+        host_state, prepacked, stats = self._snapshot(state, report)
+        self.last_save_stats = stats
         futs = []
         for lv in self.levels:
             if step % lv.interval:
@@ -80,11 +148,13 @@ class CheckpointManager:
             if prev is not None:
                 prev.result()  # double buffer: at most one in flight/level
 
-            def write(lv=lv, host_state=host_state, report=report, step=step):
+            def write(lv=lv, host_state=host_state, report=report, step=step,
+                      prepacked=prepacked):
                 path = save_checkpoint(lv.directory, step, host_state,
                                        report=report,
                                        precision=self.precision,
-                                       shards=lv.shards, parity=lv.parity)
+                                       shards=lv.shards, parity=lv.parity,
+                                       prepacked=prepacked)
                 self._gc(lv)
                 return path
 
@@ -102,9 +172,9 @@ class CheckpointManager:
 
     def _gc(self, lv: Level):
         with self._lock:
-            steps = sorted(int(d.split("_")[1])
-                           for d in os.listdir(lv.directory)
-                           if d.startswith("step_"))
+            steps = sorted(s for s in
+                           (step_of_entry(d) for d in os.listdir(lv.directory))
+                           if s is not None)
             for s in steps[:-lv.keep_n]:
                 shutil.rmtree(os.path.join(lv.directory, f"step_{s}"),
                               ignore_errors=True)
@@ -115,9 +185,9 @@ class CheckpointManager:
         best = None
         for lv in self.levels:
             try:
-                steps = [int(d.split("_")[1])
-                         for d in os.listdir(lv.directory)
-                         if d.startswith("step_")]
+                steps = [s for s in
+                         (step_of_entry(d) for d in os.listdir(lv.directory))
+                         if s is not None]
             except FileNotFoundError:
                 continue
             for s in steps:

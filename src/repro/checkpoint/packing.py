@@ -11,7 +11,16 @@ low-impact regions are stored in bf16/f8-like truncated floats.  Restart
 error bounds are validated in tests/test_precision_tiers.py.
 
 The device-side hot path (blocked compaction) is kernels/mask_pack; this
-module is the host-side format layer.
+module is the host-side format layer.  ``pack_leaf_from_payload`` assembles
+the identical on-disk ``PackedLeaf`` directly from a device-gathered payload
+so the device save path never re-slices the full array on host — the two
+paths are byte-identical on disk (tests/test_device_save.py).
+
+All hot loops here are vectorized numpy: payload assembly is a single
+boolean gather, per-region sensitivity is one ``np.maximum.reduceat``, and
+tiered encode/decode scatter whole tiers at once — no per-region Python
+iteration anywhere (benchmarks/bench_pack.py tracks the speedup over the
+original per-region loops).
 """
 
 from __future__ import annotations
@@ -24,7 +33,12 @@ import numpy as np
 
 from repro.core.criticality import LeafReport
 from repro.core.policy import PrecisionPolicy
-from repro.core.regions import mask_to_regions
+from repro.core.regions import (mask_to_regions, regions_to_indices,
+                                regions_to_mask)
+
+# Tiered regions are subdivided to this granularity so tier quantiles bite
+# even on solid masks; tier ids index the subdivided regions.
+TIER_BLOCK = 256
 
 
 def _np_dtype(d) -> np.dtype:
@@ -60,6 +74,51 @@ class PackedLeaf:
         return len(self.payload) + len(self.aux) + len(self.region_tiers)
 
 
+def _choose_aux(mask: np.ndarray, regions: np.ndarray) -> Tuple[str, bytes]:
+    """Pick the cheaper aux encoding (regions vs bitmap) for ``mask``.
+    Sizes are compared analytically so only the winner is materialized."""
+    region_nbytes = 16 * len(regions)
+    bitmap_nbytes = (mask.size + 7) // 8
+    if region_nbytes <= bitmap_nbytes:
+        return "regions", regions.astype(np.int64).tobytes()
+    return "bitmap", np.packbits(mask).tobytes()
+
+
+def _gather_critical(flat: np.ndarray, mask: np.ndarray,
+                     regions: np.ndarray) -> np.ndarray:
+    """Critical elements in order.  Sparse masks expand the (already
+    computed) regions to indices — cheaper than re-scanning the full mask;
+    dense masks use the one-pass boolean gather."""
+    count = int(regions[:, 1].sum() - regions[:, 0].sum()) if len(regions) \
+        else 0
+    if count * 8 < mask.size:
+        return flat.take(regions_to_indices(regions))
+    return flat[mask]
+
+
+def _subdivide_regions(regions: np.ndarray, block: int = TIER_BLOCK) -> np.ndarray:
+    """Split each [s, e) run into ≤ ``block``-long sub-runs (vectorized)."""
+    lengths = regions[:, 1] - regions[:, 0]
+    nsub = -(-lengths // block)                       # ceil div, per region
+    total = int(nsub.sum())
+    if total == len(regions):                         # nothing to split
+        return regions.astype(np.int64)
+    first = np.cumsum(nsub) - nsub                    # index of each run's 1st sub
+    local = np.arange(total) - np.repeat(first, nsub)  # sub index within run
+    starts = np.repeat(regions[:, 0], nsub) + local * block
+    stops = np.minimum(starts + block, np.repeat(regions[:, 1], nsub))
+    return np.stack([starts, stops], axis=1).astype(np.int64)
+
+
+def _region_max(magnitude: np.ndarray, regions: np.ndarray) -> np.ndarray:
+    """Per-region max |grad| in one ``reduceat`` (the sentinel keeps the
+    trailing stop==n index legal)."""
+    mag = np.asarray(magnitude).reshape(-1)
+    padded = np.concatenate([mag, [-np.inf]])
+    # ravel = [s0,e0,s1,e1,...]; even slots reduce exactly [s_i, e_i).
+    return np.maximum.reduceat(padded, regions.reshape(-1))[::2]
+
+
 def pack_leaf(name: str, arr: np.ndarray, mask: Optional[np.ndarray],
               magnitude: Optional[np.ndarray] = None,
               precision: Optional[PrecisionPolicy] = None) -> PackedLeaf:
@@ -76,62 +135,105 @@ def pack_leaf(name: str, arr: np.ndarray, mask: Optional[np.ndarray],
                           num_regions=1, payload=payload,
                           checksum=zlib.crc32(payload))
 
+    mask = np.asarray(mask, dtype=bool).reshape(-1)   # no copy if bool
     regions = mask_to_regions(mask)
-    region_bytes = regions.astype(np.int64).tobytes()
-    bitmap = np.packbits(mask).tobytes()
-    if len(region_bytes) <= len(bitmap):
-        encoding, aux = "regions", region_bytes
-    else:
-        encoding, aux = "bitmap", bitmap
 
-    tiers: Tuple[str, ...] = ()
-    region_tiers = b""
-    if precision is not None and precision.enabled and len(regions) and \
-            magnitude is not None and np.issubdtype(flat.dtype, np.floating):
-        # subdivide regions so tier quantiles bite even on solid masks;
-        # tiers force the regions encoding (tier ids index these regions)
-        TIER_BLOCK = 256
-        sub = []
-        for s, e in regions:
-            for b0 in range(s, e, TIER_BLOCK):
-                sub.append((b0, min(b0 + TIER_BLOCK, e)))
-        regions = np.asarray(sub, np.int64)
-        encoding, aux = "regions", regions.tobytes()
-        # per-region sensitivity = max |grad| over the region's elements
-        sens = np.array([magnitude[s:e].max() for s, e in regions])
-        qs = np.concatenate([[np.inf],
-                             [np.quantile(sens, 1.0 - t.quantile)
-                              for t in precision.tiers]])
-        tier_of = np.zeros(len(regions), np.int8)
-        for ti, t in enumerate(precision.tiers):
-            tier_of[sens < qs[ti]] = ti
-        chunks = []
-        tiers = tuple(
-            "native" if t.dtype is None
-            else ("bf16t" if t.mantissa_bits is not None else "bf16")
-            for t in precision.tiers)
-        for (s, e), ti in zip(regions, tier_of):
-            seg = flat[s:e]
-            t = precision.tiers[ti]
-            if t.dtype is None:
-                chunks.append(seg.tobytes())
-            else:
-                seg32 = seg.astype(np.float32)
-                if t.mantissa_bits is not None:
-                    seg32 = _truncate_mantissa(seg32, t.mantissa_bits)
-                # bf16 on disk = upper 2 bytes of big-endian f32
-                bf = (seg32.view(np.uint32) >> 16).astype(np.uint16)
-                chunks.append(bf.tobytes())
-        payload = b"".join(chunks)
-        region_tiers = tier_of.tobytes()
-    else:
-        chunks = [flat[s:e].tobytes() for s, e in regions]
-        payload = b"".join(chunks)
+    if tiering and len(regions):
+        return _pack_leaf_tiered(name, arr, flat, mask, regions,
+                                 magnitude, precision)
 
+    # Payload = critical elements in order, one vectorized gather
+    # (identical bytes to concatenating per-region slices).
+    payload = _gather_critical(flat, mask, regions).tobytes()
+    encoding, aux = _choose_aux(mask, regions)
     return PackedLeaf(name=name, shape=tuple(arr.shape), dtype=str(arr.dtype),
                       encoding=encoding, aux=aux, num_regions=len(regions),
+                      payload=payload, checksum=zlib.crc32(payload))
+
+
+def _pack_leaf_tiered(name: str, arr: np.ndarray, flat: np.ndarray,
+                      mask: np.ndarray, regions: np.ndarray,
+                      magnitude: np.ndarray,
+                      precision: PrecisionPolicy) -> PackedLeaf:
+    # tiers force the regions encoding (tier ids index these regions)
+    regions = _subdivide_regions(regions)
+    aux = regions.tobytes()
+    sens = _region_max(magnitude, regions)
+    qs = np.concatenate([[np.inf],
+                         [np.quantile(sens, 1.0 - t.quantile)
+                          for t in precision.tiers]])
+    tier_of = np.zeros(len(regions), np.int8)
+    for ti, t in enumerate(precision.tiers):
+        tier_of[sens < qs[ti]] = ti
+    tiers = tuple(
+        "native" if t.dtype is None
+        else ("bf16t" if t.mantissa_bits is not None else "bf16")
+        for t in precision.tiers)
+
+    # Per-element tier + byte width → byte offset of every critical element,
+    # then each tier's elements are encoded and scattered in one shot.
+    lengths = regions[:, 1] - regions[:, 0]
+    vals = _gather_critical(flat, mask, regions)   # critical values, in order
+    elem_tier = np.repeat(tier_of, lengths)
+    itemsize = flat.dtype.itemsize
+    tier_width = np.array([itemsize if t.dtype is None else 2
+                           for t in precision.tiers], np.int64)
+    elem_width = tier_width[elem_tier]
+    offsets = np.concatenate([[0], np.cumsum(elem_width)])
+    buf = np.empty(int(offsets[-1]), np.uint8)
+    for ti, t in enumerate(precision.tiers):
+        sel = elem_tier == ti
+        if not sel.any():
+            continue
+        seg = vals[sel]
+        if t.dtype is None:
+            enc = seg
+            w = itemsize
+        else:
+            seg32 = seg.astype(np.float32)
+            if t.mantissa_bits is not None:
+                seg32 = _truncate_mantissa(seg32, t.mantissa_bits)
+            # bf16 on disk = upper 2 bytes of big-endian f32
+            enc = (seg32.view(np.uint32) >> 16).astype(np.uint16)
+            w = 2
+        byte_idx = offsets[:-1][sel][:, None] + np.arange(w)[None, :]
+        buf[byte_idx] = np.ascontiguousarray(enc).view(np.uint8).reshape(-1, w)
+    payload = buf.tobytes()
+
+    return PackedLeaf(name=name, shape=tuple(arr.shape), dtype=str(arr.dtype),
+                      encoding="regions", aux=aux, num_regions=len(regions),
                       payload=payload, checksum=zlib.crc32(payload),
-                      tier_dtypes=tiers, region_tiers=region_tiers)
+                      tier_dtypes=tiers, region_tiers=tier_of.tobytes())
+
+
+def pack_leaf_from_payload(name: str, shape: Tuple[int, ...], dtype: str,
+                           mask: Optional[np.ndarray],
+                           payload_arr: np.ndarray) -> PackedLeaf:
+    """Assemble the on-disk ``PackedLeaf`` from an already-gathered payload.
+
+    ``payload_arr`` holds the critical elements of the (flattened) leaf in
+    order — exactly what ``kernels/mask_pack`` + ``gather_payload`` move over
+    D2H.  The result is byte-identical to ``pack_leaf`` on the full host
+    array with the same mask (no precision tiering on this path; the manager
+    falls back to the host path when tiers are enabled).
+    """
+    payload_arr = np.asarray(payload_arr).reshape(-1)
+    if mask is None or bool(np.asarray(mask).all()):
+        payload = payload_arr.tobytes()
+        return PackedLeaf(name=name, shape=tuple(shape), dtype=dtype,
+                          encoding="full", aux=b"", num_regions=1,
+                          payload=payload, checksum=zlib.crc32(payload))
+    mask = np.asarray(mask, dtype=bool).reshape(-1)
+    regions = mask_to_regions(mask)
+    if payload_arr.size != int(mask.sum()):
+        raise ValueError(
+            f"payload for leaf {name} has {payload_arr.size} elements; "
+            f"mask marks {int(mask.sum())} critical")
+    payload = payload_arr.tobytes()
+    encoding, aux = _choose_aux(mask, regions)
+    return PackedLeaf(name=name, shape=tuple(shape), dtype=dtype,
+                      encoding=encoding, aux=aux, num_regions=len(regions),
+                      payload=payload, checksum=zlib.crc32(payload))
 
 
 def unpack_leaf(p: PackedLeaf, fill=0) -> np.ndarray:
@@ -144,29 +246,40 @@ def unpack_leaf(p: PackedLeaf, fill=0) -> np.ndarray:
 
     if p.encoding == "regions":
         regions = np.frombuffer(p.aux, np.int64).reshape(-1, 2)
+        mask = regions_to_mask(regions, n)
     else:
-        bits = np.unpackbits(np.frombuffer(p.aux, np.uint8))[:n].astype(bool)
-        regions = mask_to_regions(bits)
+        mask = np.unpackbits(np.frombuffer(p.aux, np.uint8))[:n].astype(bool)
+        regions = mask_to_regions(mask)
 
     out = np.full(n, fill, dtype=dtype)
-    off = 0
     if p.region_tiers:
-        tier_of = np.frombuffer(p.region_tiers, np.int8)
-        for (s, e), ti in zip(regions, tier_of):
-            cnt = e - s
-            if p.tier_dtypes[ti].startswith("bf16"):
-                raw = np.frombuffer(p.payload, np.uint16,
-                                    count=cnt, offset=off)
-                vals = (raw.astype(np.uint32) << 16).view(np.float32)
-                out[s:e] = vals.astype(dtype)
-                off += 2 * cnt
-            else:
-                out[s:e] = np.frombuffer(p.payload, dtype, count=cnt,
-                                         offset=off)
-                off += dtype.itemsize * cnt
+        _unpack_tiered(p, out, mask, regions, dtype)
     else:
-        for s, e in regions:
-            cnt = e - s
-            out[s:e] = np.frombuffer(p.payload, dtype, count=cnt, offset=off)
-            off += dtype.itemsize * cnt
+        out[mask] = np.frombuffer(p.payload, dtype)
     return out.reshape(p.shape)
+
+
+def _unpack_tiered(p: PackedLeaf, out: np.ndarray, mask: np.ndarray,
+                   regions: np.ndarray, dtype: np.dtype) -> None:
+    tier_of = np.frombuffer(p.region_tiers, np.int8)
+    lengths = regions[:, 1] - regions[:, 0]
+    elem_tier = np.repeat(tier_of, lengths)
+    tier_width = np.array([2 if t.startswith("bf16") else dtype.itemsize
+                           for t in p.tier_dtypes], np.int64)
+    elem_width = tier_width[elem_tier]
+    offsets = np.concatenate([[0], np.cumsum(elem_width)])
+    raw = np.frombuffer(p.payload, np.uint8)
+    positions = np.flatnonzero(mask)               # element index per payload slot
+    for ti, tname in enumerate(p.tier_dtypes):
+        sel = elem_tier == ti
+        if not sel.any():
+            continue
+        w = int(tier_width[ti])
+        byte_idx = offsets[:-1][sel][:, None] + np.arange(w)[None, :]
+        chunk = np.ascontiguousarray(raw[byte_idx])
+        if tname.startswith("bf16"):
+            u16 = chunk.view(np.uint16).reshape(-1)
+            vals = (u16.astype(np.uint32) << 16).view(np.float32).astype(dtype)
+        else:
+            vals = chunk.view(dtype).reshape(-1)
+        out[positions[sel]] = vals

@@ -41,16 +41,47 @@ def _path_str(path) -> str:
     return ps(path)
 
 
+def step_of_entry(name: str) -> Optional[int]:
+    """Parse a ``step_<N>`` directory name; None for anything unparsable
+    (stray files, ``step_tmp``, in-flight ``.tmp_step_<N>`` dirs...)."""
+    if not name.startswith("step_"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
+
+
+def list_steps(root: str) -> List[int]:
+    """Steps with an entry under ``root`` (unparsable names skipped)."""
+    steps = []
+    for d in os.listdir(root):
+        s = step_of_entry(d)
+        if s is not None:
+            steps.append(s)
+    return steps
+
+
 def save_checkpoint(root: str, step: int, state: Any,
                     report: Optional[CriticalityReport] = None,
                     precision: Optional[PrecisionPolicy] = None,
-                    shards: int = 1, parity: bool = False) -> str:
+                    shards: int = 1, parity: bool = False,
+                    prepacked: Optional[Dict[str, PackedLeaf]] = None) -> str:
     """Write ``state`` (pytree) at ``step``; if ``report`` is given, only
-    critical elements are stored (the paper's reduced checkpoint)."""
+    critical elements are stored (the paper's reduced checkpoint).
+
+    ``prepacked`` maps leaf name → ready ``PackedLeaf`` (the device-resident
+    save path builds these from device-gathered payloads); those leaves are
+    written as-is and their state entries are never touched — no D2H copy
+    happens here for them.
+    """
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
     packed: List[PackedLeaf] = []
     for path, leaf in flat:
         name = _path_str(path)
+        if prepacked is not None and name in prepacked:
+            packed.append(prepacked[name])
+            continue
         arr = np.asarray(leaf)
         mask = mag = None
         if report is not None and name in report.leaves:
@@ -139,8 +170,7 @@ def load_checkpoint(root: str, step: Optional[int] = None,
     """Returns (step, {leaf name → global np array}).  Uncritical positions
     get ``fill`` (the paper's restart protocol tolerates any value)."""
     if step is None:
-        steps = [int(d.split("_")[1]) for d in os.listdir(root)
-                 if d.startswith("step_")]
+        steps = list_steps(root)
         if not steps:
             raise FileNotFoundError(f"no checkpoints under {root}")
         step = max(steps)

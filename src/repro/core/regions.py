@@ -28,34 +28,56 @@ _AUX_BYTES_PER_REGION = 16
 
 def mask_to_regions(mask: np.ndarray) -> np.ndarray:
     """Flat bool mask → (R, 2) int64 half-open [start, stop) critical runs."""
-    mask = np.asarray(mask).reshape(-1).astype(bool)
-    if mask.size == 0:
+    mask = np.ascontiguousarray(np.asarray(mask).reshape(-1), dtype=bool)
+    n = mask.size
+    if n == 0:
         return np.zeros((0, 2), dtype=np.int64)
-    # Edges of runs: +1 at starts, -1 after stops.
-    padded = np.concatenate([[False], mask, [False]])
-    diff = np.diff(padded.astype(np.int8))
-    starts = np.nonzero(diff == 1)[0]
-    stops = np.nonzero(diff == -1)[0]
-    return np.stack([starts, stops], axis=1).astype(np.int64)
+    # Interior run edges in one pass (no padded copy of the whole mask):
+    # an edge sits wherever consecutive elements differ.
+    edges = np.flatnonzero(mask[1:] != mask[:-1]) + 1
+    if mask[0]:
+        edges = np.concatenate([[0], edges])
+    if mask[n - 1]:
+        edges = np.concatenate([edges, [n]])
+    return edges.reshape(-1, 2).astype(np.int64)
+
+
+def regions_to_indices(regions: np.ndarray) -> np.ndarray:
+    """(R, 2) runs → int64 indices of every covered element, in order.
+
+    Vectorized run expansion (repeat + cumsum) — the packing hot path uses
+    this to gather sparse payloads without re-scanning the full mask.
+    """
+    regions = np.asarray(regions, dtype=np.int64).reshape(-1, 2)
+    lens = regions[:, 1] - regions[:, 0]
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    first = np.cumsum(lens) - lens              # payload slot of each run
+    local = np.arange(total) - np.repeat(first, lens)
+    return np.repeat(regions[:, 0], lens) + local
 
 
 def regions_to_mask(regions: np.ndarray, size: int) -> np.ndarray:
     """(R, 2) runs → flat bool mask of length ``size``."""
-    mask = np.zeros(size, dtype=bool)
-    for start, stop in np.asarray(regions, dtype=np.int64):
-        mask[start:stop] = True
-    return mask
+    regions = np.asarray(regions, dtype=np.int64).reshape(-1, 2)
+    # +1 at starts / -1 at stops, then a running sum marks interior elements.
+    delta = np.zeros(size + 1, dtype=np.int32)
+    np.add.at(delta, regions[:, 0], 1)
+    np.add.at(delta, regions[:, 1], -1)
+    return np.cumsum(delta[:size]) > 0
 
 
 def pack_with_regions(flat: np.ndarray, regions: np.ndarray) -> np.ndarray:
     """Gather critical elements into one contiguous payload buffer.
 
     Host-side reference; the TPU hot path is kernels/mask_pack.
+    O(covered elements), not O(array size).
     """
     flat = np.asarray(flat).reshape(-1)
     if len(regions) == 0:
         return flat[:0]
-    return np.concatenate([flat[s:e] for s, e in regions])
+    return flat.take(regions_to_indices(regions))
 
 
 def unpack_with_regions(
@@ -67,11 +89,8 @@ def unpack_with_regions(
     tolerates *any* value there (validated by corruption tests).
     """
     out = np.full(size, fill, dtype=payload.dtype)
-    offset = 0
-    for start, stop in np.asarray(regions, dtype=np.int64):
-        n = stop - start
-        out[start:stop] = payload[offset : offset + n]
-        offset += n
+    mask = regions_to_mask(regions, size)
+    out[mask] = payload[: int(mask.sum())]
     return out
 
 

@@ -55,6 +55,7 @@ import numpy as np
 from jax import lax
 from jax.extend import core as jex_core
 
+from repro.core.bitset import BitMask
 from repro.core.criticality import CriticalityReport, LeafReport, _path_str
 from repro.core.policy import LeafPolicy, ScrutinyConfig
 from repro.core.regions import RegionTable
@@ -79,6 +80,20 @@ def _zeros(v) -> np.ndarray:
 
 def _full(v, value: bool) -> np.ndarray:
     return np.full(_shape(v), value, dtype=bool)
+
+
+def _size(shape: Tuple[int, ...]) -> int:
+    return int(np.prod(shape)) if shape else 1
+
+
+def _pack(t: np.ndarray) -> BitMask:
+    """Shaped bool taint → flat bit-packed lattice element."""
+    return BitMask.from_bool(np.asarray(t, dtype=bool).reshape(-1))
+
+
+def _unpack(bm: BitMask, shape: Tuple[int, ...]) -> np.ndarray:
+    """Flat bit-packed lattice element → shaped bool taint (for rules)."""
+    return bm.to_bool().reshape(shape)
 
 
 # --------------------------------------------------------------------------
@@ -398,47 +413,58 @@ def _rule_scan(eqn, outs, bw, outer_env):
     body: jex_core.ClosedJaxpr = p["jaxpr"]
     nc, ncar = p["num_consts"], p["num_carry"]
     length = int(p["length"])
-    carry_t = [np.array(t) for t in outs[:ncar]]
+    carry_shapes = [t.shape for t in outs[:ncar]]
+    # Carries and accumulators live bit-packed: the OR-joins and the
+    # convergence test each iteration are word ops, not bool-array scans.
+    carry_t = [_pack(t) for t in outs[:ncar]]
     ys_slice_t = [t.any(axis=0) if t.ndim else t for t in outs[ncar:]]
 
     n_in = len(body.jaxpr.invars)
-    consts_acc = [_zeros(body.jaxpr.invars[i]) for i in range(nc)]
-    xs_acc = [_zeros(body.jaxpr.invars[i]) for i in range(nc + ncar, n_in)]
+    const_shapes = [_shape(body.jaxpr.invars[i]) for i in range(nc)]
+    xs_shapes = [_shape(body.jaxpr.invars[i]) for i in range(nc + ncar, n_in)]
+    consts_acc = [BitMask.zeros(_size(s)) for s in const_shapes]
+    xs_acc = [BitMask.zeros(_size(s)) for s in xs_shapes]
     benv = _sub_env(body.jaxpr, body.consts,
                     list(zip(body.jaxpr.invars[:nc], eqn.invars[:nc])),
                     outer_env)
 
     converged = False
     for it in range(min(length, _FIXPOINT_CAP)):
-        body_outs = carry_t + [np.asarray(t) for t in ys_slice_t]
+        body_outs = [_unpack(c, s) for c, s in zip(carry_t, carry_shapes)] + \
+            [np.asarray(t) for t in ys_slice_t]
         ins_t = bw(body.jaxpr, body.consts, body_outs, benv)
         for j in range(nc):
-            consts_acc[j] |= ins_t[j]
+            consts_acc[j].ior(_pack(ins_t[j]))
         for j, t in enumerate(ins_t[nc + ncar:]):
-            xs_acc[j] |= t
-        new_carry = [c | t for c, t in zip(carry_t, ins_t[nc:nc + ncar])]
-        if it > 0 and all((a == b).all() for a, b in zip(new_carry, carry_t)):
+            xs_acc[j].ior(_pack(t))
+        new_carry = [c | _pack(t)
+                     for c, t in zip(carry_t, ins_t[nc:nc + ncar])]
+        if it > 0 and all(a == b for a, b in zip(new_carry, carry_t)):
             carry_t = new_carry
             converged = True
             break
         carry_t = new_carry
     if not converged and length > _FIXPOINT_CAP:
-        carry_t = [np.ones_like(t) for t in carry_t]  # saturate (sound)
-        consts_acc = [np.ones_like(t) for t in consts_acc]
-        xs_acc = [np.ones_like(t) for t in xs_acc]
+        carry_t = [BitMask.full(c.n) for c in carry_t]  # saturate (sound)
+        consts_acc = [BitMask.full(c.n) for c in consts_acc]
+        xs_acc = [BitMask.full(c.n) for c in xs_acc]
 
     xs_t = []
     for j, v in enumerate(eqn.invars[nc + ncar:]):
-        xs_t.append(np.broadcast_to(xs_acc[j], _shape(v)).copy())
-    return consts_acc + carry_t + xs_t
+        xs_t.append(np.broadcast_to(_unpack(xs_acc[j], xs_shapes[j]),
+                                    _shape(v)).copy())
+    return ([_unpack(c, s) for c, s in zip(consts_acc, const_shapes)] +
+            [_unpack(c, s) for c, s in zip(carry_t, carry_shapes)] + xs_t)
 
 
 def _rule_while(eqn, outs, bw, outer_env):
     p = eqn.params
     cond, body = p["cond_jaxpr"], p["body_jaxpr"]
     ncc, nbc = p["cond_nconsts"], p["body_nconsts"]
-    carry_t = [np.array(t) for t in outs]
-    body_consts_acc = [_zeros(body.jaxpr.invars[i]) for i in range(nbc)]
+    carry_shapes = [np.asarray(t).shape for t in outs]
+    carry_t = [_pack(t) for t in outs]
+    const_shapes = [_shape(body.jaxpr.invars[i]) for i in range(nbc)]
+    body_consts_acc = [BitMask.zeros(_size(s)) for s in const_shapes]
     benv = _sub_env(body.jaxpr, body.consts,
                     list(zip(body.jaxpr.invars[:nbc], eqn.invars[ncc:ncc + nbc])),
                     outer_env)
@@ -447,16 +473,17 @@ def _rule_while(eqn, outs, bw, outer_env):
                     outer_env)
 
     for it in range(_FIXPOINT_CAP):
-        ins_t = bw(body.jaxpr, body.consts, carry_t, benv)
+        body_outs = [_unpack(c, s) for c, s in zip(carry_t, carry_shapes)]
+        ins_t = bw(body.jaxpr, body.consts, body_outs, benv)
         for j in range(nbc):
-            body_consts_acc[j] |= ins_t[j]
-        new_carry = [c | t for c, t in zip(carry_t, ins_t[nbc:])]
-        if all((a == b).all() for a, b in zip(new_carry, carry_t)):
+            body_consts_acc[j].ior(_pack(ins_t[j]))
+        new_carry = [c | _pack(t) for c, t in zip(carry_t, ins_t[nbc:])]
+        if all(a == b for a, b in zip(new_carry, carry_t)):
             carry_t = new_carry
             break
         carry_t = new_carry
     else:
-        carry_t = [np.ones_like(t) for t in carry_t]
+        carry_t = [BitMask.full(c.n) for c in carry_t]
 
     # The predicate gates every iteration → everything it reads is control
     # state (paper: loop indices are "obviously critical").
@@ -464,8 +491,11 @@ def _rule_while(eqn, outs, bw, outer_env):
     cond_out = [np.full(_shape(cond.jaxpr.outvars[0]), any_out, bool)]
     cond_ins = bw(cond.jaxpr, cond.consts, cond_out, cenv)
     cond_consts_t = cond_ins[:ncc]
-    carry_t = [c | t for c, t in zip(carry_t, cond_ins[ncc:])]
-    return list(cond_consts_t) + body_consts_acc + carry_t
+    carry_t = [_unpack(c | _pack(t), s)
+               for c, t, s in zip(carry_t, cond_ins[ncc:], carry_shapes)]
+    return (list(cond_consts_t) +
+            [_unpack(c, s) for c, s in zip(body_consts_acc, const_shapes)] +
+            carry_t)
 
 
 def _rule_cond(eqn, outs, bw, outer_env):
@@ -620,14 +650,19 @@ def _backward(jaxpr: jex_core.Jaxpr, consts, out_taints: List[np.ndarray],
               env: Optional[Dict]) -> List[np.ndarray]:
     if env is not None:
         env = _fold_constants(jaxpr, env)
-    taint: Dict[Any, np.ndarray] = {}
+    # The lattice itself is bit-packed: one BitMask per var, OR-joined as
+    # word ops.  Rules still see shaped bool arrays at the call boundary.
+    taint: Dict[Any, BitMask] = {}
 
     def add(v, t):
         if isinstance(v, Literal) or t is None:
             return
-        t = np.broadcast_to(np.asarray(t, bool), _shape(v))
+        bm = _pack(np.broadcast_to(np.asarray(t, bool), _shape(v)))
         cur = taint.get(v)
-        taint[v] = t.copy() if cur is None else (cur | t)
+        if cur is None:
+            taint[v] = bm
+        else:
+            cur.ior(bm)
 
     for v, t in zip(jaxpr.outvars, out_taints):
         add(v, t)
@@ -636,13 +671,14 @@ def _backward(jaxpr: jex_core.Jaxpr, consts, out_taints: List[np.ndarray],
         raw = [None if _is_drop(v) else taint.get(v) for v in eqn.outvars]
         if not any(t is not None and t.any() for t in raw):
             continue
-        outs = [t if t is not None else _zeros(v)
+        outs = [_unpack(t, _shape(v)) if t is not None else _zeros(v)
                 for t, v in zip(raw, eqn.outvars)]
         ins = _apply_rule(eqn, outs, env, _backward)
         for v, t in zip(eqn.invars, ins):
             add(v, t)
 
-    return [taint.get(v, _zeros(v)) for v in jaxpr.invars]
+    return [_unpack(taint[v], _shape(v)) if v in taint else _zeros(v)
+            for v in jaxpr.invars]
 
 
 # --------------------------------------------------------------------------

@@ -13,11 +13,15 @@ rules do not need divisibility checks.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels.mask_pack import ops as mask_ops
+from repro.kernels.mask_pack.kernel import BLOCK
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -183,6 +187,82 @@ def cache_shardings(cfg, mesh: Mesh, cache_shape):
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
     return jax.tree_util.tree_unflatten(
         treedef, [one(p, l) for p, l in flat])
+
+
+# --------------------------------------------------------------------------
+# Scrutinized checkpoint save path: pack per shard *before* any gather.
+# --------------------------------------------------------------------------
+
+def _leading_axis_shards(leaf) -> Optional[List[Tuple[int, int, Any]]]:
+    """If ``leaf``'s addressable shards tile only the leading axis (all other
+    dims full), return [(start, stop, shard_data)] sorted and exactly covering
+    axis 0; else None.  Replicated copies are deduplicated."""
+    shards = getattr(leaf, "addressable_shards", None)
+    if not shards or leaf.ndim == 0:
+        return None
+    uniq: Dict[int, Any] = {}
+    stops: Dict[int, int] = {}
+    for sh in shards:
+        idx = sh.index
+        if len(idx) != leaf.ndim:
+            return None
+        for d, sl in enumerate(idx[1:], start=1):
+            if sl.step not in (None, 1):
+                return None
+            if sl.start not in (None, 0):
+                return None
+            if sl.stop is not None and sl.stop != leaf.shape[d]:
+                return None
+        sl0 = idx[0]
+        if sl0.step not in (None, 1):
+            return None
+        s = sl0.start or 0
+        e = leaf.shape[0] if sl0.stop is None else sl0.stop
+        uniq.setdefault(s, sh.data)
+        stops[s] = e
+    starts = sorted(uniq)
+    if starts[0] != 0 or stops[starts[-1]] != leaf.shape[0]:
+        return None
+    for a, b in zip(starts, starts[1:]):
+        if stops[a] != b:
+            return None
+    return [(s, stops[s], uniq[s]) for s in starts]
+
+
+def pack_sharded_payload(leaf, mask: np.ndarray, *, block: int = BLOCK,
+                         use_kernel: Optional[bool] = None,
+                         interpret: bool = False):
+    """Pack a (possibly sharded) device array's critical elements, moving
+    only packed bytes device→host.
+
+    When the leaf is sharded along its leading axis (DP/FSDP parameter
+    layouts), each shard is compacted **on its own device** and only its
+    critical prefix crosses D2H — no cross-device gather of the full leaf
+    ever happens.  Any other layout falls back to a global device-side pack
+    (XLA handles the collective; the host still only receives packed bytes).
+
+    Returns ``(payload, counts, d2h_bytes)`` with ``payload`` in global flat
+    (C) order — identical bytes to the host path.
+    """
+    mask = np.asarray(mask).reshape(-1)
+    segs = None
+    if getattr(leaf, "is_fully_addressable", True) and \
+            len(getattr(leaf, "addressable_shards", ()) or ()) > 1:
+        segs = _leading_axis_shards(leaf)
+    if segs is None:
+        return mask_ops.pack_critical(jnp.ravel(leaf), mask, block=block,
+                                      use_kernel=use_kernel,
+                                      interpret=interpret)
+    row = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+    payloads, counts, moved = [], [], 0
+    for s, e, data in segs:
+        p, c, m = mask_ops.pack_critical(
+            jnp.ravel(data), mask[s * row:e * row], block=block,
+            use_kernel=use_kernel, interpret=interpret)
+        payloads.append(p)
+        counts.append(c)
+        moved += m
+    return (np.concatenate(payloads), np.concatenate(counts), moved)
 
 
 def describe_shardings(cfg, mesh: Mesh, tree, shardings, limit=40) -> str:

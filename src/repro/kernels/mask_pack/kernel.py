@@ -26,6 +26,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 512
 
+# jax renamed TPUCompilerParams → CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _perm_matrix(m_i32):
     """(BLOCK,) int32 0/1 mask → (BLOCK, BLOCK) f32 compaction matrix."""
@@ -73,7 +77,7 @@ def pack_blocks_kernel(flat: jnp.ndarray, mask_i8: jnp.ndarray,
                    pl.BlockSpec((1,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((nb, block), flat.dtype),
                    jax.ShapeDtypeStruct((nb,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(vb, mb)
@@ -93,7 +97,7 @@ def unpack_blocks_kernel(packed: jnp.ndarray, mask_i8: jnp.ndarray,
                   pl.BlockSpec((1,), lambda i: (i,))],
         out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), packed.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(packed, mb, fill_arr)

@@ -1,4 +1,23 @@
-"""Public pack/unpack entry: pads to BLOCK, dispatches kernel/oracle."""
+"""Public pack/unpack entry: pads to BLOCK, dispatches kernel/oracle.
+
+Device-resident checkpoint fast path (the save hot path):
+
+    packed, counts = pack(flat, mask)          # on device, per-tile compaction
+    counts_h = np.asarray(counts)              # D2H: 4 B per tile
+    payload  = gather_payload(packed, counts, total=counts_h.sum())
+    payload_h = np.asarray(payload)            # D2H: critical bytes only
+
+``pack_critical`` wraps the sequence and reports the D2H byte count; the
+checkpoint writer assembles the on-disk format from the payload directly
+(repro.checkpoint.packing.pack_leaf_from_payload) — the full array never
+crosses the device→host boundary.
+
+Dtype handling: the MXU permutation-matmul kernel computes in float32, which
+is exact for f32/bf16/f16 payloads; integer and f64 leaves are routed to the
+pure-jnp oracle (exact in the native dtype) regardless of backend.  Arbitrary
+leaf sizes are handled by padding to the BLOCK grid here — the raw kernels
+require ``N % block == 0``.
+"""
 
 from __future__ import annotations
 
@@ -12,57 +31,137 @@ from repro.kernels.mask_pack.kernel import (BLOCK, pack_blocks_kernel,
                                             unpack_blocks_kernel)
 from repro.kernels.mask_pack.ref import pack_blocks_ref, unpack_blocks_ref
 
+# dtypes the MXU kernel packs exactly (everything else → jnp oracle).
+_KERNEL_EXACT = (jnp.float32, jnp.bfloat16, jnp.float16)
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block", "use_kernel"))
+def _use_kernel(flat: jnp.ndarray, use_kernel) -> bool:
+    uk = _on_tpu() if use_kernel is None else use_kernel
+    return bool(uk) and flat.dtype in _KERNEL_EXACT
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "use_kernel", "interpret"))
 def pack(flat: jnp.ndarray, mask: jnp.ndarray, *, block: int = BLOCK,
-         use_kernel: bool | None = None):
-    """flat: (N,) any float dtype; mask: (N,) bool.
+         use_kernel: bool | None = None, interpret: bool = False):
+    """flat: (N,) any dtype; mask: (N,) bool — any N (padded to the grid).
     Returns (packed (ceil(N/block), block), counts (ceil(N/block),))."""
     n = flat.shape[0]
     pad = (-n) % block
     if pad:
         flat = jnp.pad(flat, (0, pad))
         mask = jnp.pad(mask, (0, pad))
-    uk = _on_tpu() if use_kernel is None else use_kernel
-    if uk:
-        return pack_blocks_kernel(flat, mask.astype(jnp.int8), block=block)
+    if _use_kernel(flat, use_kernel):
+        return pack_blocks_kernel(flat, mask.astype(jnp.int8), block=block,
+                                  interpret=interpret)
     return pack_blocks_ref(flat, mask, block=block)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "n", "use_kernel"))
+@functools.partial(jax.jit,
+                   static_argnames=("block", "n", "use_kernel", "interpret"))
 def unpack(packed: jnp.ndarray, mask: jnp.ndarray, *, n: int,
            block: int = BLOCK, fill: float = 0.0,
-           use_kernel: bool | None = None):
+           use_kernel: bool | None = None, interpret: bool = False):
     """Inverse of :func:`pack`; returns (n,) restored flat array."""
     total = packed.shape[0] * packed.shape[1]
     pad = total - n
     m = jnp.pad(mask, (0, pad)) if pad else mask
-    uk = _on_tpu() if use_kernel is None else use_kernel
-    if uk:
-        out = unpack_blocks_kernel(packed, m.astype(jnp.int8), fill=fill)
+    fill = jnp.asarray(fill, packed.dtype)  # no accidental float promotion
+    if _use_kernel(packed, use_kernel):
+        out = unpack_blocks_kernel(packed, m.astype(jnp.int8), fill=fill,
+                                   interpret=interpret)
     else:
         out = unpack_blocks_ref(packed, m, fill=fill)
     return out[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("total",))
+def gather_payload(packed: jnp.ndarray, counts: jnp.ndarray, *, total: int):
+    """Device-side: compact the per-tile critical prefixes into one dense
+    (total,) payload — the only big buffer that crosses D2H on save."""
+    nb, block = packed.shape
+    if total == 0:
+        return packed.reshape(-1)[:0]
+    ends = jnp.cumsum(counts)
+    starts = ends - counts
+    j = jnp.arange(total)
+    tile = jnp.searchsorted(ends, j, side="right")
+    slot = j - starts[tile]
+    return packed.reshape(-1)[tile * block + slot]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scatter_payload(payload: jnp.ndarray, counts: jnp.ndarray, *,
+                    block: int = BLOCK):
+    """Device-side inverse of :func:`gather_payload`: dense payload →
+    (nb, block) tiles with counts[i]-long prefixes (feeds ``unpack``)."""
+    nb = counts.shape[0]
+    total = payload.shape[0]
+    if total == 0:
+        return jnp.zeros((nb, block), payload.dtype)
+    ends = jnp.cumsum(counts)
+    starts = ends - counts
+    idx = starts[:, None] + jnp.arange(block)[None, :]
+    valid = jnp.arange(block)[None, :] < counts[:, None]
+    vals = payload[jnp.clip(idx, 0, total - 1)]
+    return jnp.where(valid, vals, jnp.zeros((), payload.dtype))
+
+
+def pack_critical(flat: jnp.ndarray, mask, *, block: int = BLOCK,
+                  use_kernel: bool | None = None, interpret: bool = False):
+    """Device-resident save path for one flat leaf.
+
+    Returns ``(payload, counts, d2h_bytes)`` — ``payload`` is a host numpy
+    array of exactly the critical elements (leaf order), ``counts`` the
+    per-tile critical counts, and ``d2h_bytes`` the bytes that actually
+    crossed device→host (payload + counts; the full leaf never moves).
+    """
+    mask = jnp.asarray(mask)
+    packed, counts = pack(flat, mask, block=block, use_kernel=use_kernel,
+                          interpret=interpret)
+    counts_h = np.asarray(counts)                  # D2H: 4 B / tile
+    total = int(counts_h.sum())
+    if total:
+        payload_h = np.asarray(
+            gather_payload(packed, counts, total=total))  # D2H: critical bytes
+    else:
+        payload_h = np.zeros(0, dtype=np.dtype(packed.dtype))
+    return payload_h, counts_h, payload_h.nbytes + counts_h.nbytes
+
+
+def unpack_critical(payload, counts, mask, *, n: int, block: int = BLOCK,
+                    fill: float = 0.0, use_kernel: bool | None = None,
+                    interpret: bool = False):
+    """Device-resident restore for one leaf: H2D only the critical payload
+    and counts, re-expand on device.  Returns the (n,) device array."""
+    tiles = scatter_payload(jnp.asarray(payload), jnp.asarray(counts),
+                            block=block)
+    return unpack(tiles, jnp.asarray(mask), n=n, block=block, fill=fill,
+                  use_kernel=use_kernel, interpret=interpret)
+
+
 def pack_to_payload(packed: np.ndarray, counts: np.ndarray) -> np.ndarray:
     """Host-side: stream counts[i] leading elements of each tile into the
-    final contiguous payload (the I/O write path)."""
-    return np.concatenate([packed[i, :c] for i, c in enumerate(counts)]) \
-        if len(counts) else packed.reshape(-1)[:0]
+    final contiguous payload (the I/O write path) — one boolean gather."""
+    packed = np.asarray(packed)
+    counts = np.asarray(counts)
+    if not len(counts):
+        return packed.reshape(-1)[:0]
+    valid = np.arange(packed.shape[1])[None, :] < counts[:, None]
+    return packed[valid]
 
 
 def payload_to_packed(payload: np.ndarray, counts: np.ndarray,
                       block: int) -> np.ndarray:
-    """Host-side inverse of :func:`pack_to_payload`."""
+    """Host-side inverse of :func:`pack_to_payload` (vectorized scatter)."""
+    payload = np.asarray(payload)
+    counts = np.asarray(counts)
     nb = len(counts)
     out = np.zeros((nb, block), payload.dtype)
-    off = 0
-    for i, c in enumerate(counts):
-        out[i, :c] = payload[off:off + c]
-        off += c
+    valid = np.arange(block)[None, :] < counts[:, None]
+    out[valid] = payload[: int(counts.sum())]
     return out

@@ -1,0 +1,49 @@
+"""BitMask — the bit-packed taint lattice element (repro.core.bitset)."""
+
+import numpy as np
+import pytest
+
+from repro.core.bitset import BitMask
+
+
+@pytest.mark.parametrize("n", [0, 1, 7, 8, 9, 63, 64, 65, 1000])
+def test_roundtrip_and_count(n):
+    rng = np.random.RandomState(n)
+    arr = rng.rand(n) < 0.3
+    bm = BitMask.from_bool(arr)
+    np.testing.assert_array_equal(bm.to_bool(), arr)
+    assert bm.count() == int(arr.sum())
+    assert bm.any() == bool(arr.any())
+    assert bm.all() == bool(arr.all())
+
+
+@pytest.mark.parametrize("n", [1, 8, 13, 200])
+def test_lattice_ops_match_bool(n):
+    rng = np.random.RandomState(n + 1)
+    a = rng.rand(n) < 0.4
+    b = rng.rand(n) < 0.4
+    ba, bb = BitMask.from_bool(a), BitMask.from_bool(b)
+    np.testing.assert_array_equal((ba | bb).to_bool(), a | b)
+    np.testing.assert_array_equal((ba & bb).to_bool(), a & b)
+    assert (ba == bb) == bool((a == b).all())
+    c = ba.copy()
+    c.ior(bb)
+    np.testing.assert_array_equal(c.to_bool(), a | b)
+    np.testing.assert_array_equal(ba.to_bool(), a)  # ior did not alias
+
+
+@pytest.mark.parametrize("n", [0, 1, 7, 8, 9, 100])
+def test_full_zeros_tail_bits(n):
+    f = BitMask.full(n)
+    z = BitMask.zeros(n)
+    assert f.count() == n and f.all()
+    assert z.count() == 0 and not z.any()
+    # tail bits are zero, so word equality == element equality
+    assert BitMask.from_bool(np.ones(n, bool)) == f
+    assert BitMask.from_bool(np.zeros(n, bool)) == z
+    assert f.nbytes == (n + 7) // 8
+
+
+def test_memory_is_bit_packed():
+    bm = BitMask.from_bool(np.ones(8000, bool))
+    assert bm.nbytes == 1000  # 8x smaller than the bool array
