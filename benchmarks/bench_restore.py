@@ -1,0 +1,225 @@
+"""Checkpoint restore + differential-save hot path.
+
+Mirrors benchmarks/bench_pack.py on the read side (all recorded in
+BENCH_restore.json so future PRs have a perf trajectory):
+
+1. **Restore modes, end to end** — wall-clock restore latency and measured
+   H2D bytes for the three restore paths of ``CheckpointManager``:
+     * full           — no scrutiny: whole state read, expanded on host,
+       moved H2D;
+     * host           — scrutinized checkpoint, expanded on host, full
+       arrays move H2D;
+     * device         — payload + bit-packed mask H2D only, re-expanded on
+       device by the fused mask_scatter kernel.
+   Device-path H2D must be ≤ critical fraction × state + mask bits +
+   per-tile counts overhead.
+
+2. **Differential chains** — a base save followed by delta saves at
+   changed fractions 0 % / ~1 % / ~10 % of the critical payload: disk
+   payload bytes and D2H bytes per save must scale with the *changed*
+   fraction, not the state (or critical) size; plus the restore cost of
+   replaying the chain.
+
+On CPU the device paths run the jnp oracle (kernel semantics are
+validated in interpret mode by tests/test_delta.py), so wall clock is
+pessimistic; on TPU both directions are bandwidth-bound and latency
+follows the H2D/D2H bytes columns.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _report_for(state, masks):
+    from repro.core.criticality import CriticalityReport, LeafReport
+    from repro.core.policy import LeafPolicy
+    from repro.core.regions import RegionTable
+
+    leaves = {}
+    for name, leaf in state.items():
+        mask = masks.get(name)
+        if mask is None:
+            mask = np.ones(int(np.prod(leaf.shape)) or 1, bool)
+        table = RegionTable.from_mask(mask, np.dtype(leaf.dtype).itemsize)
+        leaves[name] = LeafReport(
+            name=name, shape=tuple(leaf.shape), dtype=np.dtype(leaf.dtype),
+            policy=LeafPolicy.AD, mask=mask, table=table, magnitude=None)
+    return CriticalityReport(leaves=leaves)
+
+
+def _best_of(fn, k=3):
+    fn()  # warm
+    best = float("inf")
+    for _ in range(k):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _state_and_masks(n, crit, seed=0):
+    rng = np.random.RandomState(seed)
+    state = {
+        "w": jnp.asarray(rng.randn(n), jnp.float32),
+        "b": jnp.asarray(rng.randn(n // 8), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    masks = {"w": rng.rand(n) < crit, "b": rng.rand(n // 8) < crit}
+    return state, masks
+
+
+# --------------------------------------------------------------------------
+# 1) end-to-end restore modes: H2D bytes + wall-clock latency
+# --------------------------------------------------------------------------
+
+def bench_restore_modes(out, quick: bool):
+    from repro.checkpoint import CheckpointManager, Level
+
+    n = 1 << (20 if quick else 23)
+    crit = 0.148                             # paper BT(u) critical structure
+    state, masks = _state_and_masks(n, crit)
+    report = _report_for(state, masks)
+    full_bytes = sum(np.asarray(v).nbytes for v in state.values())
+    like = {k: jnp.zeros_like(v) for k, v in state.items()}
+
+    out(f"== restore modes (state={full_bytes/1e6:.1f} MB, "
+        f"critical≈{crit:.1%}) ==")
+    results = {}
+    root = tempfile.mkdtemp(prefix="bench_restore_")
+    try:
+        for label, scrutiny, rmode in (("full", None, "host"),
+                                       ("host", "host", "host"),
+                                       ("device", "device", "device")):
+            d = os.path.join(root, label)
+            with CheckpointManager(
+                    [Level(d, keep_n=1)],
+                    scrutiny_fn=(None if scrutiny is None
+                                 else (lambda s, report=report: report)),
+                    save_mode=scrutiny or "host",
+                    restore_mode=rmode) as mgr:
+                mgr.save(1, state, block=True)
+                dt = _best_of(lambda: mgr.restore(like), k=2)
+                st = mgr.last_restore_stats
+            results[label] = {"restore_s": dt,
+                              "h2d_bytes": st["h2d_bytes"],
+                              "full_bytes": st["full_bytes"],
+                              "device_leaves": st["device_leaves"]}
+            out(f"{label:8s} restore={dt*1e3:8.1f} ms  "
+                f"H2D={st['h2d_bytes']/1e6:8.2f} MB "
+                f"({st['h2d_bytes']/full_bytes:6.1%} of state)  "
+                f"device_leaves={st['device_leaves']}")
+        from repro.kernels.mask_pack.kernel import BLOCK
+        dev = results["device"]
+        # critical payload + 1 bit/elem mask + counts overhead
+        bound = (crit * full_bytes + full_bytes / 4 / 8
+                 + 4 * (full_bytes / 4 / BLOCK + 3) + 1e5)
+        ok = dev["h2d_bytes"] <= bound
+        out(f"device H2D {dev['h2d_bytes']/full_bytes:.1%} of state vs bound "
+            f"{bound/full_bytes:.1%} (critical + mask bits + counts): "
+            f"{'OK' if ok else 'FAIL'}")
+        results["h2d_within_bound"] = bool(ok)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return results
+
+
+# --------------------------------------------------------------------------
+# 2) differential chains: disk/D2H bytes ∝ changed fraction
+# --------------------------------------------------------------------------
+
+def bench_delta_chain(out, quick: bool):
+    from repro.checkpoint import CheckpointManager, Level, read_manifest
+
+    n = 1 << (20 if quick else 23)
+    crit = 0.148
+    state, masks = _state_and_masks(n, crit)
+    report = _report_for(state, masks)
+    full_bytes = sum(np.asarray(v).nbytes for v in state.values())
+    crit_idx = np.flatnonzero(masks["w"])
+    like = {k: jnp.zeros_like(v) for k, v in state.items()}
+
+    out(f"== differential chain (state={full_bytes/1e6:.1f} MB, "
+        f"critical≈{crit:.1%}) ==")
+    results = {"steps": []}
+    root = tempfile.mkdtemp(prefix="bench_delta_")
+    try:
+        d = os.path.join(root, "lv")
+        with CheckpointManager(
+                [Level(d, keep_n=10, max_chain=8)],
+                scrutiny_fn=lambda s, report=report: report,
+                save_mode="device") as mgr:
+            w = np.asarray(state["w"])
+            mgr.save(1, state, block=True)
+            base_d2h = mgr.last_save_stats["d2h_bytes"]
+            base_disk = read_manifest(d, 1)["payload_bytes"]
+            out(f"base     save D2H={base_d2h/1e6:8.2f} MB  "
+                f"disk={base_disk/1e6:8.2f} MB")
+            results["base"] = {"d2h_bytes": int(base_d2h),
+                               "disk_bytes": int(base_disk)}
+            for t, changed_frac in ((2, 0.0), (3, 0.01), (4, 0.10)):
+                w = w.copy()
+                k = int(len(crit_idx) * changed_frac)
+                if k:
+                    w[crit_idx[:k]] += 1.0
+                st = dict(state, w=jnp.asarray(w))
+                t0 = time.perf_counter()
+                mgr.save(t, st, block=True)
+                dt = time.perf_counter() - t0
+                d2h = mgr.last_save_stats["d2h_bytes"]
+                disk = read_manifest(d, t)["payload_bytes"]
+                out(f"delta {changed_frac:4.0%} save={dt*1e3:7.1f} ms  "
+                    f"D2H={d2h/1e6:8.2f} MB ({d2h/full_bytes:6.2%})  "
+                    f"disk={disk/1e6:8.2f} MB ({disk/full_bytes:6.2%})")
+                results["steps"].append(
+                    {"changed_frac": changed_frac, "save_s": dt,
+                     "d2h_bytes": int(d2h), "disk_bytes": int(disk)})
+            # replaying the 3-delta chain on restore
+            dt = _best_of(lambda: mgr.restore(like), k=2)
+            st = mgr.last_restore_stats
+            out(f"chain restore (base+3 deltas) {dt*1e3:8.1f} ms  "
+                f"H2D={st['h2d_bytes']/1e6:8.2f} MB")
+            results["chain_restore"] = {"restore_s": dt,
+                                        "h2d_bytes": st["h2d_bytes"]}
+        mono = all(a["disk_bytes"] <= b["disk_bytes"] + 4096
+                   for a, b in zip(results["steps"], results["steps"][1:]))
+        zero = results["steps"][0]["disk_bytes"] <= 1 << 16
+        out(f"disk bytes monotone in changed fraction: "
+            f"{'OK' if mono else 'FAIL'}; unchanged-save disk "
+            f"{results['steps'][0]['disk_bytes']/1e3:.1f} kB: "
+            f"{'OK' if zero else 'FAIL'}")
+        results["scaling_ok"] = bool(mono and zero)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return results
+
+
+def run(out=print, quick: bool = False, json_path: str | None = None):
+    results = {"quick": quick}
+    results["restore_modes"] = bench_restore_modes(out, quick)
+    out("")
+    results["delta_chain"] = bench_delta_chain(out, quick)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        out(f"\nwrote {json_path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke runs")
+    ap.add_argument("--json", default=None,
+                    help="write results to this JSON file")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

@@ -1,15 +1,22 @@
 """Scrutinized checkpoint/restart: region-packed, sharded, async,
-multi-level, partner-redundant, elastic."""
+multi-level, partner-redundant, elastic, differential."""
 
 from repro.checkpoint.manager import CheckpointManager, Level
-from repro.checkpoint.packing import (PackedLeaf, pack_leaf,
-                                      pack_leaf_from_payload, unpack_leaf)
-from repro.checkpoint.store import (list_steps, load_checkpoint,
+from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
+                                      delta_encode_host, leaf_mask,
+                                      pack_leaf, pack_leaf_from_payload,
+                                      unpack_leaf)
+from repro.checkpoint.store import (chain_steps, list_steps, load_checkpoint,
+                                    load_checkpoint_raw, read_manifest,
                                     restore_state, save_checkpoint,
-                                    step_of_entry)
+                                    save_delta_checkpoint, step_of_entry,
+                                    tmp_step_of_entry)
 
 __all__ = [
-    "CheckpointManager", "Level", "PackedLeaf", "pack_leaf",
-    "pack_leaf_from_payload", "unpack_leaf", "list_steps", "load_checkpoint",
-    "restore_state", "save_checkpoint", "step_of_entry",
+    "CheckpointManager", "Level", "PackedLeaf", "DeltaLeaf", "pack_leaf",
+    "pack_leaf_from_payload", "unpack_leaf", "leaf_mask", "apply_delta",
+    "delta_encode_host", "list_steps", "load_checkpoint",
+    "load_checkpoint_raw", "restore_state", "save_checkpoint",
+    "save_delta_checkpoint", "step_of_entry", "tmp_step_of_entry",
+    "read_manifest", "chain_steps",
 ]

@@ -1,8 +1,11 @@
-"""Async, multi-level checkpoint manager with scrutinized reduction.
+"""Async, multi-level, differential checkpoint manager with scrutinized
+reduction and device-resident save *and* restore paths.
 
 - **Async**: saves run on a writer thread; the train loop only blocks if a
   previous save of the same level is still in flight (double buffering) —
-  checkpoint I/O is off the critical path (straggler mitigation).
+  checkpoint I/O is off the critical path (straggler mitigation).  The
+  writer threads only touch host bytes and files; all device work and D2H
+  happens synchronously in ``save`` so device buffers never cross threads.
 - **Multi-level**: a list of (directory, interval) levels — e.g. node-RAM
   (/dev/shm) every step, local disk every 10, global store every 100 —
   restore picks the newest complete level.
@@ -16,7 +19,22 @@
   fraction end-to-end, not the state size.  The on-disk bytes are identical
   to the host path (tests/test_device_save.py).  ``last_save_stats`` records
   measured D2H bytes per save.
-- **Retention**: keep_n per level.
+- **Differential chains** (``Level.max_chain``): a level keeps its previous
+  save's payloads resident (on device on the device path) and writes only
+  byte-chunks that changed since the previous step — a *delta* checkpoint
+  referencing its predecessors (store.save_delta_checkpoint).  After
+  ``max_chain`` deltas, or whenever the report / state structure changes,
+  the chain is squashed with a fresh base.  ``_gc`` is chain-aware: a base
+  (or intermediate delta) is never collected while a kept step needs it.
+- **Device-resident restore** (``restore_mode``): ``restore`` streams each
+  leaf's payload from disk (store.load_checkpoint_raw reconstructs delta
+  chains), moves only the critical payload + bit-packed mask H2D, and
+  re-expands on device via the ``mask_scatter`` kernel — per shard of the
+  target sharding when it tiles the leading axis.  ``last_restore_stats``
+  records measured H2D bytes and any leaves the checkpoint did not cover
+  (elastic restore of grown models falls back to the ``state_like`` leaf).
+- **Retention**: keep_n restorable steps per level + their chain
+  dependencies; stale ``.tmp_step_*`` dirs from crashed writers are swept.
 """
 
 from __future__ import annotations
@@ -26,17 +44,26 @@ import dataclasses
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.checkpoint.packing import PackedLeaf, pack_leaf_from_payload
-from repro.checkpoint.store import (load_checkpoint, restore_state,
-                                    save_checkpoint, step_of_entry)
+from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf,
+                                      delta_encode_host, leaf_mask,
+                                      pack_leaf, pack_leaf_from_payload,
+                                      unpack_leaf)
+from repro.checkpoint.store import (chain_steps, load_checkpoint_raw,
+                                    read_manifest, save_checkpoint,
+                                    save_delta_checkpoint, step_of_entry,
+                                    tmp_step_of_entry)
 from repro.core.criticality import CriticalityReport, _path_str
 from repro.core.policy import PrecisionPolicy
-from repro.distributed.sharding import pack_sharded_payload
+from repro.distributed.sharding import (pack_sharded_payload,
+                                        pack_sharded_payload_device,
+                                        scatter_sharded_payload)
+from repro.kernels.mask_pack import ops as mask_ops
 
 
 @dataclasses.dataclass
@@ -46,6 +73,175 @@ class Level:
     keep_n: int = 2
     shards: int = 1
     parity: bool = False
+    # >0 enables differential chains: up to max_chain delta saves ride on
+    # each base before the chain is squashed with a fresh base.
+    max_chain: int = 0
+
+
+@dataclasses.dataclass
+class _ChainState:
+    """Per-level differential-chain bookkeeping: the previous save's
+    payloads stay resident (device arrays on the device path) so the next
+    save can diff against them without re-reading disk."""
+    base_step: int
+    chain: List[int]                   # delta steps since base, in order
+    report: Optional[CriticalityReport]
+    sources: Dict[str, Any]            # name -> device array | host uint8
+    kinds: Dict[str, str]              # name -> dev_payload | dev_raw | host
+    meta: Dict[str, Tuple]             # name -> (shape, dtype)
+
+
+class _SaveSnapshot:
+    """One save's view of the state: classifies each leaf, lazily
+    materializes device payloads / host arrays / packed leaves (each at
+    most once, shared across levels), and tracks actual D2H bytes."""
+
+    def __init__(self, mgr: "CheckpointManager", state, report):
+        self.mgr = mgr
+        self.report = report
+        self.device = mgr._device_eligible(report)
+        flat, self.treedef = jax.tree_util.tree_flatten_with_path(state)
+        self.items: List[Tuple[str, Any, Any, str]] = []
+        self.full_bytes = 0
+        for path, leaf in flat:
+            name = _path_str(path)
+            rep = report.leaves.get(name) if report is not None else None
+            mask = rep.mask if rep is not None else None
+            is_dev = isinstance(leaf, jax.Array) and leaf.size > 0
+            if (self.device and mask is not None and not mask.all()
+                    and is_dev):
+                kind = "dev_payload"
+            elif self.device and is_dev:
+                kind = "dev_raw"
+            else:
+                kind = "host"
+            self.items.append((name, leaf, rep, kind))
+            self.full_bytes += (leaf.nbytes if is_dev
+                                else np.asarray(leaf).nbytes)
+        self.d2h = 0
+        self._payload_dev: Dict[str, Any] = {}
+        self._host_arr: Dict[str, np.ndarray] = {}
+        self._packed: Dict[str, PackedLeaf] = {}
+        self._legacy = None
+
+    # -- lazy materializers ----------------------------------------------
+
+    def payload_dev(self, name, leaf, rep):
+        if name not in self._payload_dev:
+            payload, counts, moved = pack_sharded_payload_device(
+                leaf, rep.mask, **self.mgr._pack_opts)
+            self._payload_dev[name] = payload
+            self.d2h += moved
+        return self._payload_dev[name]
+
+    def host_arr(self, name, leaf) -> np.ndarray:
+        if name not in self._host_arr:
+            arr = np.asarray(leaf)
+            self._host_arr[name] = arr
+            self.d2h += arr.nbytes
+        return self._host_arr[name]
+
+    def packed(self, name, leaf, rep, kind) -> PackedLeaf:
+        """Full PackedLeaf for a base write — byte-identical to the host
+        pack path (tests/test_device_save.py)."""
+        if name in self._packed:
+            return self._packed[name]
+        if kind == "dev_payload":
+            if name in self._payload_dev:
+                # chain keeps the payload device-resident: one D2H from it
+                payload_h = np.asarray(self._payload_dev[name])
+                self.d2h += payload_h.nbytes
+            else:
+                # no chain: per-shard pack straight to host (PR-1 path)
+                payload_h, _, moved = pack_sharded_payload(
+                    leaf, rep.mask, **self.mgr._pack_opts)
+                self.d2h += moved
+            p = pack_leaf_from_payload(name, leaf.shape, str(leaf.dtype),
+                                       rep.mask, payload_h)
+        else:
+            arr = self.host_arr(name, leaf)
+            mask = rep.mask if rep is not None else None
+            mag = rep.magnitude if rep is not None else None
+            p = pack_leaf(name, arr, mask, mag, self.mgr.precision)
+        self._packed[name] = p
+        return p
+
+    def packed_all(self) -> Dict[str, PackedLeaf]:
+        return {name: self.packed(name, leaf, rep, kind)
+                for name, leaf, rep, kind in self.items}
+
+    # -- delta sources ----------------------------------------------------
+
+    def delta_source(self, name, leaf, rep, kind):
+        """Current payload for diffing: a device array (dev kinds) or a
+        host uint8 view of the packed payload (host kind)."""
+        if kind == "dev_payload":
+            return self.payload_dev(name, leaf, rep)
+        if kind == "dev_raw":
+            return leaf
+        p = self.packed(name, leaf, rep, kind)
+        return np.frombuffer(p.payload, np.uint8)
+
+    def chain_entries(self):
+        """(sources, kinds, meta) capturing this snapshot for the next
+        delta diff."""
+        sources, kinds, meta = {}, {}, {}
+        for name, leaf, rep, kind in self.items:
+            sources[name] = self.delta_source(name, leaf, rep, kind)
+            kinds[name] = kind
+            meta[name] = (tuple(getattr(leaf, "shape", ())),
+                          str(getattr(leaf, "dtype", "")))
+        return sources, kinds, meta
+
+    # -- legacy (non-chained) writer inputs -------------------------------
+
+    def legacy(self):
+        """(host_state, prepacked) exactly as the pre-chain manager built
+        them: masked device leaves prepacked, everything else a host array
+        (the writer thread packs those, keeping pack cost off the critical
+        path)."""
+        if self._legacy is None:
+            prepacked: Dict[str, PackedLeaf] = {}
+            leaves = []
+            for name, leaf, rep, kind in self.items:
+                if kind == "dev_payload":
+                    prepacked[name] = self.packed(name, leaf, rep, kind)
+                    leaves.append(leaf)     # placeholder; writer skips it
+                else:
+                    leaves.append(self.host_arr(name, leaf))
+            host_state = jax.tree_util.tree_unflatten(self.treedef, leaves)
+            self._legacy = (host_state, prepacked or None)
+        return self._legacy
+
+    def build_deltas(self, cs: _ChainState, chunk_bytes: int
+                     ) -> Dict[str, Any]:
+        """Diff every leaf against the chain's resident previous payloads;
+        device kinds diff on device (only changed chunks cross D2H).  A
+        leaf whose payload size changed falls back to a full entry."""
+        out: Dict[str, Any] = {}
+        for name, leaf, rep, kind in self.items:
+            prev = cs.sources[name]
+            curr = self.delta_source(name, leaf, rep, kind)
+            try:
+                if kind == "host":
+                    idx, pay = delta_encode_host(curr, prev, chunk_bytes)
+                else:
+                    idx, pay, moved = mask_ops.delta_encode(
+                        curr, prev, chunk_bytes=chunk_bytes,
+                        **self.mgr._pack_opts)
+                    self.d2h += moved
+            except (ValueError, TypeError):
+                # payload size changed, or a dtype the device bitcast
+                # can't diff (complex): write the leaf in full instead
+                out[name] = self.packed(name, leaf, rep, kind)
+                continue
+            pay_b = pay.tobytes()
+            out[name] = DeltaLeaf(
+                name=name, shape=tuple(getattr(leaf, "shape", ())),
+                dtype=str(getattr(leaf, "dtype", "")),
+                chunk_bytes=chunk_bytes, total_bytes=int(curr.nbytes),
+                idx=idx, payload=pay_b, checksum=zlib.crc32(pay_b))
+        return out
 
 
 class CheckpointManager:
@@ -53,6 +249,13 @@ class CheckpointManager:
     report is available and precision tiering is off (tiers need host-side
     magnitudes); "device" forces the device path where eligible; "host"
     always snapshots the full state to host first (the original behaviour).
+
+    ``restore_mode``: "auto"/"device" expand masked leaves on device
+    (payload-only H2D via the mask_scatter kernel); "host" expands on host
+    and moves full arrays (the original behaviour).
+
+    Supports ``with CheckpointManager(...) as mgr:`` — exit drains in-flight
+    writes and shuts the writer pool down (``close()``).
     """
 
     def __init__(self, levels: Sequence[Level],
@@ -60,10 +263,14 @@ class CheckpointManager:
                  precision: Optional[PrecisionPolicy] = None,
                  rescrutinize_every: int = 0,
                  save_mode: str = "auto",
+                 restore_mode: str = "auto",
+                 delta_chunk_bytes: int = mask_ops.DELTA_CHUNK_BYTES,
                  pack_use_kernel: Optional[bool] = None,
                  pack_interpret: bool = False):
         if save_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown save_mode {save_mode!r}")
+        if restore_mode not in ("auto", "host", "device"):
+            raise ValueError(f"unknown restore_mode {restore_mode!r}")
         self.levels = list(levels)
         for lv in self.levels:
             os.makedirs(lv.directory, exist_ok=True)
@@ -71,14 +278,52 @@ class CheckpointManager:
         self.precision = precision
         self.rescrutinize_every = rescrutinize_every
         self.save_mode = save_mode
+        self.restore_mode = restore_mode
+        self.delta_chunk_bytes = delta_chunk_bytes
         self._pack_opts = dict(use_kernel=pack_use_kernel,
                                interpret=pack_interpret)
         self._report: Optional[CriticalityReport] = None
         self._saves = 0
-        self._pool = cf.ThreadPoolExecutor(max_workers=2)
+        self._pool: Optional[cf.ThreadPoolExecutor] = \
+            cf.ThreadPoolExecutor(max_workers=2)
         self._inflight: Dict[str, cf.Future] = {}
+        self._chains: Dict[str, _ChainState] = {}
         self._lock = threading.Lock()
         self.last_save_stats: Optional[Dict[str, Any]] = None
+        self.last_restore_stats: Optional[Dict[str, Any]] = None
+
+    # --- lifecycle -------------------------------------------------------
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self):
+        """Drain in-flight writes (propagating any writer exception) and
+        shut the writer pool down.  Idempotent; ``save`` raises afterwards."""
+        if self._pool is None:
+            return
+        try:
+            self.wait()
+        finally:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def wait(self):
+        """Block until every in-flight write lands.  Clears the in-flight
+        table first, so each writer exception propagates exactly once."""
+        futs = list(self._inflight.values())
+        self._inflight.clear()
+        errs = []
+        for f in futs:
+            try:
+                f.result()
+            except Exception as e:      # noqa: BLE001 - re-raised below
+                errs.append(e)
+        if errs:
+            raise errs[0]
 
     # --- save ------------------------------------------------------------
 
@@ -100,84 +345,169 @@ class CheckpointManager:
             return False  # tiered encode needs host-side magnitudes
         return True
 
-    def _snapshot(self, state, report):
-        """Move the state off device: full leaves D2H on the host path,
-        packed-payload-only D2H on the device path.  Returns
-        (host_state, prepacked, stats)."""
-        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
-        device = self._device_eligible(report)
-        prepacked: Dict[str, PackedLeaf] = {}
-        leaves = []
-        d2h = 0
-        full = 0
-        for path, leaf in flat:
-            name = _path_str(path)
-            rep = report.leaves.get(name) if (device and report) else None
-            mask = rep.mask if rep is not None else None
-            if (mask is not None and not mask.all()
-                    and isinstance(leaf, jax.Array) and leaf.size > 0):
-                payload, counts, moved = pack_sharded_payload(
-                    leaf, mask, **self._pack_opts)
-                prepacked[name] = pack_leaf_from_payload(
-                    name, leaf.shape, str(leaf.dtype), mask, payload)
-                leaves.append(leaf)     # placeholder; writer skips it
-                d2h += moved
-                full += leaf.nbytes
-            else:
-                arr = np.asarray(leaf)
-                leaves.append(arr)
-                d2h += arr.nbytes
-                full += arr.nbytes
-        stats = {"mode": "device" if device else "host",
-                 "d2h_bytes": int(d2h), "full_bytes": int(full),
-                 "packed_leaves": len(prepacked)}
-        host_state = jax.tree_util.tree_unflatten(treedef, leaves)
-        return host_state, (prepacked or None), stats
+    def _delta_ok(self, lv: Level, cs: Optional[_ChainState],
+                  snap: _SaveSnapshot) -> bool:
+        """A delta save is legal only while the chain's world is frozen:
+        same report (masks), same leaves, chain not past max_chain."""
+        if cs is None or len(cs.chain) >= lv.max_chain:
+            return False
+        if snap.report is not cs.report:
+            return False
+        if len(snap.items) != len(cs.kinds):
+            return False
+        for name, leaf, rep, kind in snap.items:
+            if cs.kinds.get(name) != kind:
+                return False
+            if cs.meta.get(name) != (tuple(getattr(leaf, "shape", ())),
+                                     str(getattr(leaf, "dtype", ""))):
+                return False
+        return True
 
     def save(self, step: int, state, block: bool = False) -> List[cf.Future]:
-        """Snapshot (device-pack or host-copy), then write async per level."""
+        """Snapshot (device-pack or host-copy), then write async per level —
+        a full base or a delta against the level's resident chain."""
+        if self._pool is None:
+            raise RuntimeError("CheckpointManager is closed")
         report = self.maybe_report(state)
         self._saves += 1
-        host_state, prepacked, stats = self._snapshot(state, report)
-        self.last_save_stats = stats
+        snap = _SaveSnapshot(self, state, report)
+        level_stats: Dict[str, Any] = {}
         futs = []
         for lv in self.levels:
             if step % lv.interval:
                 continue
-            prev = self._inflight.get(lv.directory)
+            prev = self._inflight.pop(lv.directory, None)
             if prev is not None:
                 prev.result()  # double buffer: at most one in flight/level
 
-            def write(lv=lv, host_state=host_state, report=report, step=step,
-                      prepacked=prepacked):
-                path = save_checkpoint(lv.directory, step, host_state,
-                                       report=report,
-                                       precision=self.precision,
-                                       shards=lv.shards, parity=lv.parity,
-                                       prepacked=prepacked)
-                self._gc(lv)
-                return path
+            cs = self._chains.get(lv.directory)
+            if lv.max_chain > 0 and self._delta_ok(lv, cs, snap):
+                deltas = snap.build_deltas(cs, self.delta_chunk_bytes)
+                chain = [cs.base_step] + list(cs.chain)
+                sources, kinds, meta = snap.chain_entries()
+                cs.sources, cs.kinds, cs.meta = sources, kinds, meta
+                cs.chain.append(step)
+                delta_bytes = sum(d.nbytes for d in deltas.values())
+                level_stats[lv.directory] = {
+                    "kind": "delta", "base_step": cs.base_step,
+                    "chain_len": len(cs.chain),
+                    "delta_bytes": int(delta_bytes)}
+
+                def write(lv=lv, step=step, deltas=deltas, chain=chain,
+                          cs=cs):
+                    try:
+                        path = save_delta_checkpoint(
+                            lv.directory, step, deltas, chain,
+                            shards=lv.shards, parity=lv.parity)
+                    except BaseException:
+                        self._drop_chain(lv, cs)
+                        raise
+                    self._gc(lv)
+                    return path
+            elif lv.max_chain > 0:
+                # chain_entries first: it pins payloads device-resident so
+                # packed_all reuses them instead of re-packing to host
+                sources, kinds, meta = snap.chain_entries()
+                prepacked = snap.packed_all()
+                cs = _ChainState(base_step=step, chain=[], report=report,
+                                 sources=sources, kinds=kinds, meta=meta)
+                self._chains[lv.directory] = cs
+                level_stats[lv.directory] = {"kind": "base"}
+
+                def write(lv=lv, step=step, state=state,
+                          prepacked=prepacked, cs=cs):
+                    try:
+                        path = save_checkpoint(lv.directory, step, state,
+                                               precision=self.precision,
+                                               shards=lv.shards,
+                                               parity=lv.parity,
+                                               prepacked=prepacked)
+                    except BaseException:
+                        self._drop_chain(lv, cs)
+                        raise
+                    self._gc(lv)
+                    return path
+            else:
+                host_state, prepacked = snap.legacy()
+                level_stats[lv.directory] = {"kind": "base"}
+
+                def write(lv=lv, host_state=host_state, report=report,
+                          step=step, prepacked=prepacked):
+                    path = save_checkpoint(lv.directory, step, host_state,
+                                           report=report,
+                                           precision=self.precision,
+                                           shards=lv.shards,
+                                           parity=lv.parity,
+                                           prepacked=prepacked)
+                    self._gc(lv)
+                    return path
 
             fut = self._pool.submit(write)
             self._inflight[lv.directory] = fut
             futs.append(fut)
+        self.last_save_stats = {
+            "mode": "device" if snap.device else "host",
+            "d2h_bytes": int(snap.d2h),
+            "full_bytes": int(snap.full_bytes),
+            "packed_leaves": sum(1 for *_, k in snap.items
+                                 if k == "dev_payload"),
+            "levels": level_stats}
         if block:
+            errs = []
             for f in futs:
-                f.result()
+                try:
+                    f.result()
+                except Exception as e:  # noqa: BLE001 - re-raised below
+                    errs.append(e)
+                finally:
+                    # drained here: drop so a failure propagates exactly
+                    # once instead of again at the next double-buffer drain
+                    for k, v in list(self._inflight.items()):
+                        if v is f:
+                            del self._inflight[k]
+            if errs:
+                raise errs[0]
         return futs
 
-    def wait(self):
-        for f in list(self._inflight.values()):
-            f.result()
+    def _drop_chain(self, lv: Level, cs: _ChainState):
+        """A chained write failed on the writer thread: later saves must
+        not reference this (possibly unwritten) step, so the chain is
+        invalidated and the next save squashes with a fresh base.  Only
+        drops the exact state the failed write belonged to — a newer chain
+        installed meanwhile is left alone."""
+        with self._lock:
+            if self._chains.get(lv.directory) is cs:
+                del self._chains[lv.directory]
 
     def _gc(self, lv: Level):
+        """Chain-aware retention: keep the newest ``keep_n`` restorable
+        steps *plus* every chain predecessor they need; sweep stale
+        ``.tmp_step_*`` dirs from crashed writers.  (Writes per level are
+        double-buffered, so no other writer is active in this directory.)"""
         with self._lock:
-            steps = sorted(s for s in
-                           (step_of_entry(d) for d in os.listdir(lv.directory))
+            try:
+                entries = os.listdir(lv.directory)
+            except FileNotFoundError:
+                return
+            for e in entries:
+                if tmp_step_of_entry(e) is not None:
+                    shutil.rmtree(os.path.join(lv.directory, e),
+                                  ignore_errors=True)
+            steps = sorted(s for s in (step_of_entry(d) for d in entries)
                            if s is not None)
-            for s in steps[:-lv.keep_n]:
-                shutil.rmtree(os.path.join(lv.directory, f"step_{s}"),
-                              ignore_errors=True)
+            if lv.keep_n <= 0:          # retention disabled: keep everything
+                return
+            keep = steps[-lv.keep_n:]
+            needed = set(keep)
+            for s in keep:
+                try:
+                    needed.update(chain_steps(read_manifest(lv.directory, s)))
+                except (OSError, ValueError, KeyError):
+                    continue           # unreadable manifest: no deps to pin
+            for s in steps:
+                if s not in needed:
+                    shutil.rmtree(os.path.join(lv.directory, f"step_{s}"),
+                                  ignore_errors=True)
 
     # --- restore -----------------------------------------------------------
 
@@ -197,13 +527,95 @@ class CheckpointManager:
                         best = (s, lv.directory)
         return best
 
-    def restore(self, state_like, shardings=None,
-                fill=0) -> Optional[Tuple[int, Any]]:
+    def _candidates(self) -> List[Tuple[int, str]]:
+        """Every complete-looking (step, level dir), newest first."""
+        out = []
+        for lv in self.levels:
+            try:
+                entries = os.listdir(lv.directory)
+            except FileNotFoundError:
+                continue
+            for d in entries:
+                s = step_of_entry(d)
+                if s is not None and os.path.exists(
+                        os.path.join(lv.directory, d, "manifest.json")):
+                    out.append((s, lv.directory))
+        return sorted(out, key=lambda x: -x[0])
+
+    def restore(self, state_like, shardings=None, fill=0,
+                mode: Optional[str] = None) -> Optional[Tuple[int, Any]]:
         """Newest complete checkpoint across levels → (step, state); None if
-        nothing to restore.  Elastic: works on any mesh via shardings."""
-        found = self.latest()
-        if found is None:
-            return None
-        step, root = found
-        step, leaves = load_checkpoint(root, step, fill=fill)
-        return step, restore_state(state_like, leaves, shardings)
+        nothing to restore.  Elastic: works on any mesh via shardings, and
+        leaves absent from the checkpoint keep their ``state_like`` value
+        (listed in ``last_restore_stats["missing_leaves"]``).
+
+        A step that disappears mid-load (``_gc`` racing on a writer thread,
+        or a delta chain whose base is gone) is skipped and the next-newest
+        complete step is tried.
+        """
+        mode = self.restore_mode if mode is None else mode
+        if mode not in ("auto", "host", "device"):
+            raise ValueError(f"unknown restore mode {mode!r}")
+        skipped: List[Dict[str, Any]] = []
+        for step, root in self._candidates():
+            try:
+                step, packed, _ = load_checkpoint_raw(root, step)
+            except (OSError, ValueError, KeyError) as e:
+                skipped.append({"step": step, "root": root, "error": str(e)})
+                continue
+            return self._materialize(state_like, shardings, packed, fill,
+                                     mode, step, skipped)
+        if skipped:
+            self.last_restore_stats = {"skipped": skipped, "step": None}
+        return None
+
+    def _materialize(self, state_like, shardings, packed, fill, mode,
+                     step, skipped) -> Tuple[int, Any]:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+        shard_flat = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            if shardings is not None else [None] * len(flat))
+        import jax.numpy as jnp
+
+        h2d = 0
+        full = 0
+        device_leaves = 0
+        missing: List[str] = []
+        out = []
+        for (path, leaf), sh in zip(flat, shard_flat):
+            name = _path_str(path)
+            shape = tuple(getattr(leaf, "shape", ()))
+            n = int(np.prod(shape)) if shape else 1
+            full += n * np.dtype(leaf.dtype).itemsize
+            p = packed.get(name)
+            if p is None:               # elastic: grown model, older ckpt
+                missing.append(name)
+                arr = np.asarray(leaf)
+                out.append(jax.device_put(arr, sh) if sh is not None
+                           else jnp.asarray(arr))
+                continue
+            stored_n = int(np.prod(p.shape)) if p.shape else 1
+            if (mode in ("auto", "device") and not p.region_tiers
+                    and p.encoding in ("regions", "bitmap")
+                    and stored_n == n):
+                mask = leaf_mask(p)
+                payload = np.frombuffer(p.payload, np.dtype(p.dtype))
+                arr, moved = scatter_sharded_payload(
+                    payload, mask, shape, np.dtype(p.dtype), sh,
+                    fill=fill, **self._pack_opts)
+                if str(arr.dtype) != str(leaf.dtype):
+                    arr = arr.astype(leaf.dtype)    # cast on device
+                h2d += moved
+                device_leaves += 1
+            else:                       # host expand (full/tiered leaves)
+                a = unpack_leaf(p, fill=fill)
+                a = a.astype(leaf.dtype).reshape(shape)
+                arr = (jax.device_put(a, sh) if sh is not None
+                       else jnp.asarray(a))
+                h2d += a.nbytes
+            out.append(arr)
+        self.last_restore_stats = {
+            "step": step, "mode": mode, "h2d_bytes": int(h2d),
+            "full_bytes": int(full), "device_leaves": device_leaves,
+            "missing_leaves": missing, "skipped": skipped}
+        return step, jax.tree_util.tree_unflatten(treedef, out)

@@ -236,6 +236,101 @@ def pack_leaf_from_payload(name: str, shape: Tuple[int, ...], dtype: str,
                       payload=payload, checksum=zlib.crc32(payload))
 
 
+# --------------------------------------------------------------------------
+# Differential (delta) leaves: byte-chunk patches against a base payload
+# --------------------------------------------------------------------------
+
+# Chunk granularity of the on-disk delta format: shared with the device
+# encoder so host- and device-written delta files stay byte-identical.
+from repro.kernels.mask_pack.ops import DELTA_CHUNK_BYTES  # noqa: E402
+
+
+@dataclasses.dataclass
+class DeltaLeaf:
+    """Byte-chunk patch of one leaf's payload against its predecessor in a
+    delta chain.  ``idx`` indexes ``chunk_bytes``-sized chunks of the
+    predecessor payload (``total_bytes`` long); the final chunk may be
+    shorter.  ``payload`` is the changed chunks' bytes, concatenated."""
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+    chunk_bytes: int
+    total_bytes: int
+    idx: np.ndarray                    # int32 changed chunk indices
+    payload: bytes
+    checksum: int                      # crc32 of the delta payload bytes
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload) + self.idx.nbytes
+
+
+def delta_encode_host(curr: np.ndarray, base: np.ndarray,
+                      chunk_bytes: int = DELTA_CHUNK_BYTES
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host mirror of the device ``delta_encode``: compare raw bytes per
+    chunk, return (changed chunk idx int32, changed bytes uint8).  Produces
+    byte-identical output to the device op for the same inputs."""
+    a = np.ascontiguousarray(curr).view(np.uint8).reshape(-1)
+    b = np.ascontiguousarray(base).view(np.uint8).reshape(-1)
+    if a.size != b.size:
+        raise ValueError(f"delta size mismatch ({a.size} vs {b.size} bytes)")
+    n = a.size
+    if n == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.uint8)
+    pad = (-n) % chunk_bytes
+    if pad:
+        a = np.concatenate([a, np.zeros(pad, np.uint8)])
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    nc = a.size // chunk_bytes
+    changed = np.any(a.reshape(nc, chunk_bytes) != b.reshape(nc, chunk_bytes),
+                     axis=1)
+    idx = np.flatnonzero(changed).astype(np.int32)
+    if idx.size == 0:
+        return idx, np.zeros(0, np.uint8)
+    chunks = a.reshape(nc, chunk_bytes)[idx]
+    tail = n - (nc - 1) * chunk_bytes
+    if int(idx[-1]) == nc - 1 and tail < chunk_bytes:
+        payload = np.concatenate([chunks[:-1].reshape(-1), chunks[-1][:tail]])
+    else:
+        payload = chunks.reshape(-1)
+    return idx, payload
+
+
+def apply_delta(buf: np.ndarray, idx: np.ndarray, payload: bytes,
+                chunk_bytes: int) -> None:
+    """Patch changed chunks into ``buf`` (flat uint8, modified in place).
+
+    Per-chunk slice assignment: chunks are contiguous runs, so no index
+    array is materialized (the payload can be GiB-scale on dense deltas).
+    """
+    idx = np.asarray(idx, np.int64)
+    if idx.size == 0:
+        return
+    starts = idx * chunk_bytes
+    ends = np.minimum(starts + chunk_bytes, buf.size)
+    pay = np.frombuffer(payload, np.uint8)
+    if int((ends - starts).sum()) != pay.size:
+        raise IOError(f"delta patch length mismatch "
+                      f"({int((ends - starts).sum())} vs {pay.size})")
+    off = 0
+    for s, e in zip(starts, ends):
+        buf[s:e] = pay[off:off + e - s]
+        off += e - s
+
+
+def leaf_mask(p: PackedLeaf) -> Optional[np.ndarray]:
+    """Decode the flat critical mask from a packed leaf's aux encoding
+    (``None`` for fully-stored leaves)."""
+    if p.encoding == "full":
+        return None
+    n = int(np.prod(p.shape)) if p.shape else 1
+    if p.encoding == "regions":
+        regions = np.frombuffer(p.aux, np.int64).reshape(-1, 2)
+        return regions_to_mask(regions, n)
+    return np.unpackbits(np.frombuffer(p.aux, np.uint8))[:n].astype(bool)
+
+
 def unpack_leaf(p: PackedLeaf, fill=0) -> np.ndarray:
     dtype = _np_dtype(p.dtype)
     n = int(np.prod(p.shape)) if p.shape else 1
@@ -244,12 +339,9 @@ def unpack_leaf(p: PackedLeaf, fill=0) -> np.ndarray:
     if p.encoding == "full":
         return np.frombuffer(p.payload, dtype=dtype).reshape(p.shape)
 
-    if p.encoding == "regions":
-        regions = np.frombuffer(p.aux, np.int64).reshape(-1, 2)
-        mask = regions_to_mask(regions, n)
-    else:
-        mask = np.unpackbits(np.frombuffer(p.aux, np.uint8))[:n].astype(bool)
-        regions = mask_to_regions(mask)
+    mask = leaf_mask(p)
+    regions = (np.frombuffer(p.aux, np.int64).reshape(-1, 2)
+               if p.encoding == "regions" else mask_to_regions(mask))
 
     out = np.full(n, fill, dtype=dtype)
     if p.region_tiers:

@@ -1,4 +1,4 @@
-"""On-disk checkpoint format: sharded, atomic, self-describing.
+"""On-disk checkpoint format: sharded, atomic, self-describing, differential.
 
 Layout (one checkpoint):
     <root>/step_<N>/
@@ -12,26 +12,48 @@ Leaves are assigned to shards round-robin by size; the manifest stores
 re-shards onto whatever mesh is alive (tests/test_checkpoint.py).
 
 Writes go to ``<root>/.tmp_step_<N>`` then ``os.rename`` (atomic on POSIX):
-a crash mid-write never corrupts the latest complete checkpoint.
+a crash mid-write never corrupts the latest complete checkpoint.  A stale
+``.tmp_step_<N>`` left by a crashed writer is cleared before the next write
+of the same step — its partial shard/parity files must never leak into a
+finished checkpoint (tests/test_crash_recovery.py).
 
 Partner XOR parity: any single missing/corrupt shard is reconstructed from
 its two neighbours' parity files without touching the global store — the
 multi-level manager uses this to survive single-node loss.
+
+**Differential chains**: a checkpoint may be a *delta* against its
+predecessor — per leaf, only byte-chunks of the payload that changed since
+the previous step are stored (``DeltaLeaf``).  The manifest then carries a
+``chain`` section::
+
+    "chain": {"base_step": N, "delta_chain": [N, M1, M2]}
+
+``delta_chain`` lists every predecessor step needed to reconstruct this
+one, in apply order (the base first).  Restore walks the chain: the base's
+payload bytes are patched with each delta in order, then unpacked exactly
+like a base checkpoint.  A manifest without a ``chain`` section is a base.
+
+Reads are **streamed per leaf**: the loader seeks to each leaf's
+(shard, offset, length) range instead of slurping whole shard blobs, so
+restoring a single leaf (or applying a sparse delta) reads only the bytes
+it needs; a missing shard file falls back to whole-shard XOR
+reconstruction.
 """
 
 from __future__ import annotations
 
 import base64
-import dataclasses
 import json
 import os
 import shutil
-from typing import Any, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
-from repro.checkpoint.packing import PackedLeaf, pack_leaf, unpack_leaf
+from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
+                                      pack_leaf, unpack_leaf)
 from repro.core.criticality import CriticalityReport
 from repro.core.policy import PrecisionPolicy
 
@@ -52,6 +74,16 @@ def step_of_entry(name: str) -> Optional[int]:
         return None
 
 
+def tmp_step_of_entry(name: str) -> Optional[int]:
+    """Parse an in-flight/stale ``.tmp_step_<N>`` directory name."""
+    if not name.startswith(".tmp_step_"):
+        return None
+    try:
+        return int(name[len(".tmp_step_"):])
+    except ValueError:
+        return None
+
+
 def list_steps(root: str) -> List[int]:
     """Steps with an entry under ``root`` (unparsable names skipped)."""
     steps = []
@@ -60,6 +92,106 @@ def list_steps(root: str) -> List[int]:
         if s is not None:
             steps.append(s)
     return steps
+
+
+def read_manifest(root: str, step: int) -> Dict[str, Any]:
+    with open(os.path.join(root, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
+
+
+def chain_steps(manifest: Dict[str, Any]) -> List[int]:
+    """Predecessor steps this checkpoint needs, in apply order (base
+    first); empty for a base checkpoint."""
+    chain = manifest.get("chain")
+    if not chain:
+        return []
+    return [int(s) for s in chain.get("delta_chain", [])]
+
+
+# --------------------------------------------------------------------------
+# Writing
+# --------------------------------------------------------------------------
+
+def _packed_entry(p: PackedLeaf) -> Dict[str, Any]:
+    return {
+        "name": p.name, "shape": list(p.shape), "dtype": p.dtype,
+        "encoding": p.encoding,
+        "aux": base64.b64encode(p.aux).decode(),
+        "num_regions": p.num_regions,
+        "checksum": p.checksum,
+        "tier_dtypes": list(p.tier_dtypes),
+        "region_tiers": base64.b64encode(p.region_tiers).decode(),
+    }
+
+
+def _delta_entry(d: DeltaLeaf) -> Dict[str, Any]:
+    return {
+        "name": d.name, "shape": list(d.shape), "dtype": d.dtype,
+        "encoding": "delta",
+        "chunk_bytes": d.chunk_bytes,
+        "total_bytes": d.total_bytes,
+        "aux": base64.b64encode(
+            np.asarray(d.idx, np.int32).tobytes()).decode(),
+        "num_chunks": int(np.asarray(d.idx).size),
+        "checksum": d.checksum,
+    }
+
+
+def _write_entries(root: str, step: int,
+                   entries: List[Tuple[Dict[str, Any], bytes]],
+                   shards: int, parity: bool,
+                   manifest_extra: Optional[Dict[str, Any]] = None) -> str:
+    """Shared atomic writer: round-robin shard the (meta, payload) entries,
+    write parity, manifest, then rename into place.  Clears any stale
+    ``.tmp_step_<N>`` from a crashed writer first."""
+    tmp = os.path.join(root, f".tmp_step_{step}")
+    final = os.path.join(root, f"step_{step}")
+    if os.path.exists(tmp):            # crashed writer leftovers: never merge
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    # round-robin shard assignment by descending size
+    order = sorted(range(len(entries)), key=lambda i: -len(entries[i][1]))
+    shard_of = {}
+    shard_sizes = [0] * shards
+    for i in order:
+        k = int(np.argmin(shard_sizes))
+        shard_of[i] = k
+        shard_sizes[k] += len(entries[i][1])
+
+    buffers = [bytearray() for _ in range(shards)]
+    index = []
+    for i, (meta, payload) in enumerate(entries):
+        k = shard_of[i]
+        meta = dict(meta)
+        meta.update(shard=k, offset=len(buffers[k]), length=len(payload))
+        buffers[k].extend(payload)
+        index.append(meta)
+
+    for k, buf in enumerate(buffers):
+        with open(os.path.join(tmp, f"shard_{k}.bin"), "wb") as f:
+            f.write(bytes(buf))
+    if parity and shards > 1:
+        for k in range(shards):
+            a, b = bytes(buffers[k]), bytes(buffers[(k + 1) % shards])
+            n = max(len(a), len(b))
+            pa = np.frombuffer(a.ljust(n, b"\0"), np.uint8)
+            pb = np.frombuffer(b.ljust(n, b"\0"), np.uint8)
+            with open(os.path.join(tmp, f"parity_{k}.bin"), "wb") as f:
+                f.write((pa ^ pb).tobytes())
+
+    manifest = {"step": step, "shards": shards, "parity": parity,
+                "leaves": index,
+                "payload_bytes": int(sum(shard_sizes))}
+    if manifest_extra:
+        manifest.update(manifest_extra)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
 
 
 def save_checkpoint(root: str, step: int, state: Any,
@@ -90,117 +222,208 @@ def save_checkpoint(root: str, step: int, state: Any,
             mag = rep.magnitude
         packed.append(pack_leaf(name, arr, mask, mag, precision))
 
-    tmp = os.path.join(root, f".tmp_step_{step}")
-    final = os.path.join(root, f"step_{step}")
-    os.makedirs(tmp, exist_ok=True)
+    full_bytes = int(sum(
+        int(np.prod(p.shape or (1,))) * np.dtype(p.dtype).itemsize
+        for p in packed))
+    entries = [(_packed_entry(p), bytes(p.payload)) for p in packed]
+    return _write_entries(root, step, entries, shards, parity,
+                          manifest_extra={"full_bytes": full_bytes})
 
-    # round-robin shard assignment by descending size
-    order = sorted(range(len(packed)), key=lambda i: -packed[i].nbytes)
-    shard_of = {}
-    shard_sizes = [0] * shards
-    for i in order:
-        k = int(np.argmin(shard_sizes))
-        shard_of[i] = k
-        shard_sizes[k] += packed[i].nbytes
 
-    buffers = [bytearray() for _ in range(shards)]
-    index = []
-    for i, p in enumerate(packed):
-        k = shard_of[i]
-        off = len(buffers[k])
-        buffers[k].extend(p.payload)
-        index.append({
-            "name": p.name, "shape": list(p.shape), "dtype": p.dtype,
-            "encoding": p.encoding,
-            "aux": base64.b64encode(p.aux).decode(),
-            "num_regions": p.num_regions,
-            "checksum": p.checksum,
-            "shard": k, "offset": off, "length": len(p.payload),
-            "tier_dtypes": list(p.tier_dtypes),
-            "region_tiers": base64.b64encode(p.region_tiers).decode(),
-        })
+def save_delta_checkpoint(root: str, step: int,
+                          deltas: Dict[str, Union[DeltaLeaf, PackedLeaf]],
+                          chain: List[int],
+                          shards: int = 1, parity: bool = False) -> str:
+    """Write a differential checkpoint: per leaf either a ``DeltaLeaf``
+    patch against the predecessor step's payload or a full ``PackedLeaf``
+    replacement.  ``chain`` lists the predecessor steps in apply order
+    (base first); every one must be retained until this step is collected.
+    """
+    if not chain:
+        raise ValueError("delta checkpoint needs a non-empty chain")
+    entries = []
+    for d in deltas.values():
+        if isinstance(d, DeltaLeaf):
+            entries.append((_delta_entry(d), bytes(d.payload)))
+        else:
+            entries.append((_packed_entry(d), bytes(d.payload)))
+    extra = {"chain": {"base_step": int(chain[0]),
+                       "delta_chain": [int(s) for s in chain]}}
+    return _write_entries(root, step, entries, shards, parity,
+                          manifest_extra=extra)
 
-    for k, buf in enumerate(buffers):
-        with open(os.path.join(tmp, f"shard_{k}.bin"), "wb") as f:
-            f.write(bytes(buf))
-    if parity and shards > 1:
-        for k in range(shards):
-            a, b = bytes(buffers[k]), bytes(buffers[(k + 1) % shards])
-            n = max(len(a), len(b))
-            pa = np.frombuffer(a.ljust(n, b"\0"), np.uint8)
-            pb = np.frombuffer(b.ljust(n, b"\0"), np.uint8)
-            with open(os.path.join(tmp, f"parity_{k}.bin"), "wb") as f:
-                f.write((pa ^ pb).tobytes())
 
-    manifest = {"step": step, "shards": shards, "parity": parity,
-                "leaves": index,
-                "payload_bytes": int(sum(shard_sizes)),
-                "full_bytes": int(sum(
-                    int(np.prod(p.shape or (1,))) * np.dtype(p.dtype).itemsize
-                    for p in packed))}
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+# --------------------------------------------------------------------------
+# Streaming reads
+# --------------------------------------------------------------------------
 
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    return final
+class ShardReader:
+    """Per-leaf streaming reads over one checkpoint directory: seeks into
+    shard files instead of slurping whole blobs; a missing/short shard
+    falls back to whole-shard partner-XOR reconstruction (cached)."""
+
+    def __init__(self, d: str, shards: int):
+        self.d = d
+        self.shards = shards
+        self._handles: Dict[int, Any] = {}
+        self._rebuilt: Dict[int, bytes] = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self):
+        for f in self._handles.values():
+            f.close()
+        self._handles.clear()
+
+    def _rebuild(self, k: int) -> bytes:
+        if k not in self._rebuilt:
+            par = os.path.join(self.d, f"parity_{k}.bin")
+            nxt = os.path.join(self.d, f"shard_{(k + 1) % self.shards}.bin")
+            if not (os.path.exists(par) and os.path.exists(nxt)):
+                raise FileNotFoundError(
+                    f"shard {k} missing and not reconstructable in {self.d}")
+            with open(par, "rb") as f:
+                p = np.frombuffer(f.read(), np.uint8)
+            with open(nxt, "rb") as f:
+                b = f.read()
+            pb = np.frombuffer(b.ljust(len(p), b"\0"), np.uint8)
+            self._rebuilt[k] = (p ^ pb).tobytes()
+        return self._rebuilt[k]
+
+    def read(self, entry: Dict[str, Any]) -> bytes:
+        k = int(entry["shard"])
+        off = int(entry["offset"])
+        length = int(entry["length"])
+        if k in self._rebuilt:
+            return self._rebuilt[k][off:off + length]
+        if k not in self._handles:
+            path = os.path.join(self.d, f"shard_{k}.bin")
+            if not os.path.exists(path):
+                return self._rebuild(k)[off:off + length]
+            self._handles[k] = open(path, "rb")
+        f = self._handles[k]
+        f.seek(off)
+        data = f.read(length)
+        if len(data) != length:       # truncated shard: try parity rebuild
+            return self._rebuild(k)[off:off + length]
+        return data
 
 
 def _read_shard(d: str, k: int, shards: int) -> bytes:
-    path = os.path.join(d, f"shard_{k}.bin")
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return f.read()
-    # partner-XOR reconstruction: shard_k = parity_k XOR shard_{k+1}
-    par = os.path.join(d, f"parity_{k}.bin")
-    nxt = os.path.join(d, f"shard_{(k + 1) % shards}.bin")
-    if not (os.path.exists(par) and os.path.exists(nxt)):
-        raise FileNotFoundError(f"shard {k} missing and not reconstructable")
-    with open(par, "rb") as f:
-        p = np.frombuffer(f.read(), np.uint8)
-    with open(nxt, "rb") as f:
-        b = f.read()
-    pb = np.frombuffer(b.ljust(len(p), b"\0"), np.uint8)
-    return (p ^ pb).tobytes()
+    """Whole-shard read with partner-XOR fallback (kept for callers that
+    want the full blob; the loader itself streams per leaf)."""
+    r = ShardReader(d, shards)
+    try:
+        path = os.path.join(d, f"shard_{k}.bin")
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                return f.read()
+        return r._rebuild(k)
+    finally:
+        r.close()
 
 
-def load_checkpoint(root: str, step: Optional[int] = None,
-                    fill=0) -> Tuple[int, Dict[str, np.ndarray]]:
-    """Returns (step, {leaf name → global np array}).  Uncritical positions
-    get ``fill`` (the paper's restart protocol tolerates any value)."""
+# --------------------------------------------------------------------------
+# Loading
+# --------------------------------------------------------------------------
+
+def _entry_to_packed(e: Dict[str, Any], payload: bytes) -> PackedLeaf:
+    return PackedLeaf(
+        name=e["name"], shape=tuple(e["shape"]), dtype=e["dtype"],
+        encoding=e["encoding"], aux=base64.b64decode(e["aux"]),
+        num_regions=e.get("num_regions", 1), payload=payload,
+        checksum=e["checksum"],
+        tier_dtypes=tuple(e.get("tier_dtypes", ())),
+        region_tiers=base64.b64decode(e.get("region_tiers", "")))
+
+
+def load_checkpoint_raw(root: str, step: Optional[int] = None
+                        ) -> Tuple[int, Dict[str, PackedLeaf],
+                                   Dict[str, Any]]:
+    """Resolve ``step`` (latest when None), walk its delta chain, and return
+    ``(step, {leaf name → PackedLeaf}, manifest)`` with fully reconstructed
+    payloads — no unpacking/expansion happens here, so callers can move only
+    the critical payload to device (the device-resident restore path).
+
+    Integrity: every full payload and every delta patch is crc-checked as
+    read; the reconstructed payload is a pure function of verified bytes.
+    """
     if step is None:
         steps = list_steps(root)
         if not steps:
             raise FileNotFoundError(f"no checkpoints under {root}")
         step = max(steps)
-    d = os.path.join(root, f"step_{step}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    shards = manifest["shards"]
-    blobs = {}
+    manifest = read_manifest(root, step)
+    todo = chain_steps(manifest) + [step]
+
+    payloads: Dict[str, np.ndarray] = {}        # mutable uint8 buffers
+    meta: Dict[str, Dict[str, Any]] = {}
+    for s in todo:
+        m = manifest if s == step else read_manifest(root, s)
+        d = os.path.join(root, f"step_{s}")
+        with ShardReader(d, int(m["shards"])) as reader:
+            for e in m["leaves"]:
+                raw = reader.read(e)
+                if zlib.crc32(raw) != e["checksum"]:
+                    raise IOError(f"checksum mismatch for leaf {e['name']} "
+                                  f"at step {s}")
+                name = e["name"]
+                if e["encoding"] == "delta":
+                    if name not in payloads:
+                        raise IOError(f"delta for leaf {name} at step {s} "
+                                      f"has no base payload in the chain")
+                    buf = payloads[name]
+                    if buf.size != int(e["total_bytes"]):
+                        raise IOError(
+                            f"delta for leaf {name} at step {s} patches "
+                            f"{e['total_bytes']} bytes; base has {buf.size}")
+                    idx = np.frombuffer(base64.b64decode(e["aux"]), np.int32)
+                    apply_delta(buf, idx, raw, int(e["chunk_bytes"]))
+                else:
+                    payloads[name] = np.frombuffer(raw, np.uint8).copy()
+                    meta[name] = e
+
     out = {}
-    for e in manifest["leaves"]:
-        k = e["shard"]
-        if k not in blobs:
-            blobs[k] = _read_shard(d, k, shards)
-        payload = blobs[k][e["offset"]:e["offset"] + e["length"]]
-        p = PackedLeaf(
-            name=e["name"], shape=tuple(e["shape"]), dtype=e["dtype"],
-            encoding=e["encoding"], aux=base64.b64decode(e["aux"]),
-            num_regions=e["num_regions"], payload=payload,
-            checksum=e["checksum"],
-            tier_dtypes=tuple(e.get("tier_dtypes", ())),
-            region_tiers=base64.b64decode(e.get("region_tiers", "")))
-        out[e["name"]] = unpack_leaf(p, fill=fill)
-    return step, out
+    for name, buf in payloads.items():
+        if name not in meta:
+            raise IOError(f"leaf {name} has deltas but no base entry")
+        payload = buf.tobytes()
+        e = dict(meta[name])
+        e["checksum"] = zlib.crc32(payload)   # chain integrity checked above
+        out[name] = _entry_to_packed(e, payload)
+    return step, out, manifest
+
+
+def load_checkpoint(root: str, step: Optional[int] = None,
+                    fill=0) -> Tuple[int, Dict[str, np.ndarray]]:
+    """Returns (step, {leaf name → global np array}).  Uncritical positions
+    get ``fill`` (the paper's restart protocol tolerates any value).
+    Delta chains are reconstructed transparently."""
+    step, packed, _ = load_checkpoint_raw(root, step)
+    return step, {name: unpack_leaf(p, fill=fill)
+                  for name, p in packed.items()}
 
 
 def restore_state(state_like: Any, leaves: Dict[str, np.ndarray],
-                  shardings: Any = None) -> Any:
+                  shardings: Any = None, *, missing: str = "like", fill=0,
+                  missing_out: Optional[List[str]] = None) -> Any:
     """Elastic restore: place loaded global arrays into a pytree shaped like
     ``state_like``, optionally device_put with per-leaf shardings (any
-    mesh — the checkpoint is mesh-agnostic)."""
+    mesh — the checkpoint is mesh-agnostic).
+
+    Leaves of ``state_like`` absent from the checkpoint (grown models
+    restoring from older checkpoints) are handled per ``missing``:
+    ``"like"`` keeps the ``state_like`` value, ``"fill"`` fill-initializes,
+    ``"error"`` raises KeyError.  Names of such leaves are appended to
+    ``missing_out`` when given, so callers can surface what was not
+    restored.
+    """
+    if missing not in ("like", "fill", "error"):
+        raise ValueError(f"unknown missing policy {missing!r}")
     flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
     shard_flat = (jax.tree_util.tree_leaves(
         shardings, is_leaf=lambda x: hasattr(x, "spec"))
@@ -210,7 +433,15 @@ def restore_state(state_like: Any, leaves: Dict[str, np.ndarray],
     out = []
     for (path, leaf), sh in zip(flat, shard_flat):
         name = _path_str(path)
-        arr = leaves[name].astype(leaf.dtype).reshape(leaf.shape)
+        if name in leaves:
+            arr = leaves[name].astype(leaf.dtype).reshape(leaf.shape)
+        elif missing == "error":
+            raise KeyError(name)
+        else:
+            if missing_out is not None:
+                missing_out.append(name)
+            arr = (np.full(leaf.shape, fill, leaf.dtype)
+                   if missing == "fill" else np.asarray(leaf))
         arr = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -265,6 +265,149 @@ def pack_sharded_payload(leaf, mask: np.ndarray, *, block: int = BLOCK,
     return (np.concatenate(payloads), np.concatenate(counts), moved)
 
 
+def _pack_payload_device(flat, mask, *, block: int = BLOCK,
+                         use_kernel: Optional[bool] = None,
+                         interpret: bool = False):
+    """Pack one flat leaf's critical elements, keeping the payload on
+    device.  Returns (payload_dev, counts_h, d2h_bytes) — only the per-tile
+    counts cross D2H here; the payload moves (or is delta-encoded) later."""
+    packed, counts = mask_ops.pack(flat, jnp.asarray(mask), block=block,
+                                   use_kernel=use_kernel, interpret=interpret)
+    counts_h = np.asarray(counts)                  # D2H: 4 B / tile
+    total = int(counts_h.sum())
+    if total:
+        payload = mask_ops.gather_payload(packed, counts, total=total)
+    else:
+        payload = packed.reshape(-1)[:0]
+    return payload, counts_h, counts_h.nbytes
+
+
+def pack_sharded_payload_device(leaf, mask: np.ndarray, *, block: int = BLOCK,
+                                use_kernel: Optional[bool] = None,
+                                interpret: bool = False):
+    """Device-resident variant of :func:`pack_sharded_payload` for the
+    differential save path: each leading-axis shard is compacted on its own
+    device, then the (already critical-fraction-sized) payloads are
+    concatenated into one device array that stays resident as the delta
+    base — only the per-tile counts cross D2H.
+
+    Returns ``(payload_dev, counts_h, d2h_bytes)``.  Note the concatenation
+    gathers the *packed* payloads onto one device; cross-device traffic is
+    ∝ the critical fraction, never the full leaf.
+    """
+    mask = np.asarray(mask).reshape(-1)
+    segs = None
+    if getattr(leaf, "is_fully_addressable", True) and \
+            len(getattr(leaf, "addressable_shards", ()) or ()) > 1:
+        segs = _leading_axis_shards(leaf)
+    if segs is None:
+        return _pack_payload_device(jnp.ravel(leaf), mask, block=block,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)
+    row = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+    payloads, counts, moved = [], [], 0
+    for s, e, data in segs:
+        p, c, m = _pack_payload_device(
+            jnp.ravel(data), mask[s * row:e * row], block=block,
+            use_kernel=use_kernel, interpret=interpret)
+        payloads.append(p)
+        counts.append(c)
+        moved += m
+    # co-locate the packed (critical-fraction-sized) payloads before the
+    # concat — committed arrays on different devices refuse to mix lazily
+    home = payloads[0].devices()
+    payloads = [p if p.devices() == home else jax.device_put(p, list(home)[0])
+                for p in payloads]
+    return jnp.concatenate(payloads), np.concatenate(counts), moved
+
+
+# --------------------------------------------------------------------------
+# Scrutinized restore path: scatter per shard *after* a payload-only H2D.
+# --------------------------------------------------------------------------
+
+def _leading_axis_segments(sharding, shape
+                           ) -> Optional[List[Tuple[int, int, Any]]]:
+    """Per-device leading-axis segments of a target ``sharding`` over a
+    global ``shape``: [(start, stop, device)], one entry per addressable
+    device (replicas repeat their segment); None if the layout slices any
+    non-leading dim."""
+    if not shape or not hasattr(sharding, "addressable_devices_indices_map"):
+        return None
+    try:
+        idx_map = sharding.addressable_devices_indices_map(tuple(shape))
+    except (TypeError, ValueError):
+        return None
+    out = []
+    for dev, idx in idx_map.items():
+        if idx is None or len(idx) != len(shape):
+            return None
+        for d, sl in enumerate(idx[1:], start=1):
+            if sl.step not in (None, 1) or sl.start not in (None, 0):
+                return None
+            if sl.stop is not None and sl.stop != shape[d]:
+                return None
+        sl0 = idx[0]
+        if sl0.step not in (None, 1):
+            return None
+        s = sl0.start or 0
+        e = shape[0] if sl0.stop is None else sl0.stop
+        out.append((s, e, dev))
+    return out
+
+
+def scatter_sharded_payload(payload: np.ndarray, mask: np.ndarray,
+                            shape, dtype, sharding=None, *, fill=0,
+                            block: int = BLOCK,
+                            use_kernel: Optional[bool] = None,
+                            interpret: bool = False):
+    """Restore inverse of :func:`pack_sharded_payload`: move only the
+    critical ``payload`` (plus the bit-packed mask) H2D and scatter it into
+    a fill-initialized device buffer via ``kernels/mask_pack``.
+
+    When ``sharding`` tiles only the leading axis, each device receives and
+    expands just its own segment's slice of the payload — restore traffic
+    per device scales with its local critical fraction; the global array is
+    assembled from the single-device pieces without any host round-trip.
+
+    Returns ``(device_array, h2d_bytes)``.
+    """
+    shape = tuple(shape)
+    n = int(np.prod(shape)) if shape else 1
+    mask = np.asarray(mask, bool).reshape(-1)
+    payload = np.asarray(payload).reshape(-1)
+    opts = dict(block=block, use_kernel=use_kernel, interpret=interpret)
+
+    def expand(pay_h, msk_h, local_n, device=None):
+        bits = np.packbits(msk_h)
+        put = (lambda x: jax.device_put(x, device)) if device is not None \
+            else jnp.asarray
+        m_dev = mask_ops.expand_mask_bits(put(bits), n=local_n)
+        out = mask_ops.mask_scatter(put(pay_h), m_dev, n=local_n,
+                                    fill=fill, **opts)
+        return out, pay_h.nbytes + bits.nbytes
+
+    segs = _leading_axis_segments(sharding, shape) if sharding is not None \
+        else None
+    if segs is None:
+        out, h2d = expand(payload, mask, n)
+        out = out.reshape(shape)
+        if sharding is not None:
+            out = jax.device_put(out, sharding)
+        return out, h2d
+
+    row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    cum = np.concatenate([[0], np.cumsum(mask)])
+    pieces, h2d = [], 0
+    for s, e, dev in segs:
+        lo, hi = cum[s * row], cum[e * row]
+        piece, moved = expand(payload[lo:hi], mask[s * row:e * row],
+                              (e - s) * row, device=dev)
+        pieces.append(piece.reshape((e - s,) + shape[1:]))
+        h2d += moved
+    out = jax.make_array_from_single_device_arrays(shape, sharding, pieces)
+    return out, h2d
+
+
 def describe_shardings(cfg, mesh: Mesh, tree, shardings, limit=40) -> str:
     flat_t = jax.tree_util.tree_flatten_with_path(tree)[0]
     flat_s = jax.tree_util.tree_leaves(

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for blocked mask pack/unpack.
+"""Pallas TPU kernels for blocked mask pack/unpack, scatter, and delta.
 
 TPU adaptation (DESIGN.md §2): TPUs have no scatter unit, so per-tile
 left-compaction is expressed as a **0/1 permutation matmul on the MXU**:
@@ -13,6 +13,19 @@ the 8-byte HBM traffic per element, so the pass stays memory-bound (the
 napkin math and measured roofline terms are in EXPERIMENTS.md §Perf).
 
 Grid: one program per tile; mask arrives as int8 (TPU-friendly lane type).
+
+The restore inverse (``scatter_blocks_kernel``) fuses the two host-visible
+restore steps — payload→tile scatter and tile→position unpack — into one
+pass: tile i's slice of the dense payload lives inside a two-block window
+starting at block ``starts[i] // block`` (its length is ≤ BLOCK), so the
+window is prefetched via ``PrefetchScalarGridSpec`` and a single combined
+0/1 matmul ``M[j, c] = (c == pos[j] + off) & mask[j]`` places each payload
+byte at its restored position.  H2D traffic on restore is therefore just
+the payload + per-tile starts, mirroring the save direction.
+
+``delta_blocks_kernel`` is the differential-checkpoint primitive: a
+per-chunk changed flag between the current and base payload (uint8 view),
+computed on device so only changed chunks ever cross D2H.
 """
 
 from __future__ import annotations
@@ -102,3 +115,90 @@ def unpack_blocks_kernel(packed: jnp.ndarray, mask_i8: jnp.ndarray,
         interpret=interpret,
     )(packed, mb, fill_arr)
     return out.reshape(-1)
+
+
+def _scatter_kernel(starts_ref, w0_ref, w1_ref, m_ref, fill_ref, out_ref, *,
+                    block: int):
+    """Fused restore tile: payload window + mask → restored positions.
+
+    ``w0/w1`` are the two consecutive payload blocks covering this tile's
+    slice [starts[i], starts[i] + count); ``off = starts[i] % block`` is the
+    slice's offset inside the window.  The combined permutation
+    ``M[j, c] = (c == pos[j] + off) & m[j]`` both shifts and scatters in a
+    single exact 0/1 matmul.
+    """
+    i = pl.program_id(0)
+    start = starts_ref[i]
+    off = start - (start // block) * block
+    m = m_ref[0, :].astype(jnp.int32)
+    pos = jnp.cumsum(m) - 1
+    w = jnp.concatenate([w0_ref[0, :], w1_ref[0, :]]).astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, 2 * block), 1)
+    sel = ((cols == (pos + off)[:, None]) & (m > 0)[:, None])
+    vals = jax.lax.dot_general(sel.astype(jnp.float32), w[:, None],
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)[:, 0]
+    out_ref[0, :] = jnp.where(m > 0, vals,
+                              fill_ref[0].astype(jnp.float32)
+                              ).astype(out_ref.dtype)
+
+
+def scatter_blocks_kernel(payload_pad: jnp.ndarray, starts: jnp.ndarray,
+                          mask_i8: jnp.ndarray, fill=0.0,
+                          block: int = BLOCK, interpret: bool = False):
+    """Fused inverse of :func:`pack_blocks_kernel` + payload gather.
+
+    payload_pad: (npb, block) dense critical payload, padded so every
+    two-block window starting at ``starts[i] // block`` is in bounds
+    (``npb >= max(starts) // block + 2``); starts: (nb,) int32 payload
+    offset of each tile's slice; mask_i8: (nb*block,).
+    Returns the (nb*block,) restored flat array.
+
+    The window rows are prefetched as two separate (1, block) blocks — a
+    single (2, block) spec would index in 2-row units and miss odd rows.
+    """
+    nb = mask_i8.shape[0] // block
+    mb = mask_i8.reshape(nb, block)
+    fill_arr = jnp.full((nb,), fill, payload_pad.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i, s: (s[i] // block, 0)),
+                  pl.BlockSpec((1, block),
+                               lambda i, s: (s[i] // block + 1, 0)),
+                  pl.BlockSpec((1, block), lambda i, s: (i, 0)),
+                  pl.BlockSpec((1,), lambda i, s: (i,))],
+        out_specs=pl.BlockSpec((1, block), lambda i, s: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, block), payload_pad.dtype),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), payload_pad, payload_pad, mb, fill_arr)
+    return out.reshape(-1)
+
+
+def _delta_kernel(c_ref, b_ref, out_ref):
+    neq = (c_ref[0, :] != b_ref[0, :]).astype(jnp.int32)
+    out_ref[0] = (jnp.sum(neq) > 0).astype(jnp.int32)
+
+
+def delta_blocks_kernel(curr: jnp.ndarray, base: jnp.ndarray,
+                        chunk: int, interpret: bool = False):
+    """Per-chunk changed flags: curr/base (N,) same dtype, N % chunk == 0.
+    Returns (N // chunk,) int32 (1 = any element differs)."""
+    nc = curr.shape[0] // chunk
+    cb = curr.reshape(nc, chunk)
+    bb = base.reshape(nc, chunk)
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+                  pl.BlockSpec((1, chunk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nc,), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(cb, bb)

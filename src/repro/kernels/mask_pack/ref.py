@@ -42,3 +42,25 @@ def unpack_blocks_ref(packed: jnp.ndarray, mask: jnp.ndarray, fill=0.0):
     vals = packed[rows, jnp.clip(pos, 0, block - 1)]
     out = jnp.where(mb, vals, fill)
     return out.reshape(-1)
+
+
+def scatter_blocks_ref(payload_pad: jnp.ndarray, starts: jnp.ndarray,
+                       mask: jnp.ndarray, fill=0.0, block: int = BLOCK):
+    """Oracle for the fused restore tile pass: dense payload + per-tile
+    payload offsets + mask → restored flat array (matches
+    ``kernel.scatter_blocks_kernel``)."""
+    flat_payload = payload_pad.reshape(-1)
+    nb = mask.shape[0] // block
+    mb = mask.reshape(nb, block)
+    pos = jnp.cumsum(mb, axis=1) - 1                 # slot within the tile
+    src = starts[:, None] + pos                      # payload index per elem
+    vals = flat_payload[jnp.clip(src, 0, flat_payload.shape[0] - 1)]
+    out = jnp.where(mb, vals, jnp.asarray(fill, payload_pad.dtype))
+    return out.reshape(-1)
+
+
+def delta_blocks_ref(curr: jnp.ndarray, base: jnp.ndarray, chunk: int):
+    """Per-chunk changed flags (matches ``kernel.delta_blocks_kernel``)."""
+    nc = curr.shape[0] // chunk
+    neq = (curr.reshape(nc, chunk) != base.reshape(nc, chunk))
+    return jnp.any(neq, axis=1).astype(jnp.int32)

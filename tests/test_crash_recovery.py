@@ -1,0 +1,382 @@
+"""Crash-recovery and lifecycle: stale tmp dirs from killed writers, parity
+reconstruction beyond 2 shards with unequal shard lengths, delta-chain
+restore after sibling GC, the restore/_gc race, writer-exception
+propagation, and manager close()/context-manager semantics."""
+
+import json
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, Level, load_checkpoint,
+                              load_checkpoint_raw, restore_state,
+                              save_checkpoint, step_of_entry,
+                              tmp_step_of_entry)
+from repro.checkpoint import manager as manager_mod
+
+
+def make_state(key=0, n=512):
+    rng = np.random.RandomState(key)
+    return {
+        "w": jnp.asarray(rng.randn(n, 32), jnp.float32),
+        "b": jnp.asarray(rng.randn(n // 2), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# stale .tmp_step_* from a killed writer
+# --------------------------------------------------------------------------
+
+def test_stale_tmp_never_leaks_into_checkpoint(tmp_path):
+    """A writer killed mid-write leaves .tmp_step_5 with partial shard and
+    junk files; the next save of step 5 must not merge them in."""
+    d = str(tmp_path)
+    stale = os.path.join(d, ".tmp_step_5")
+    os.makedirs(stale)
+    for junk in ("shard_0.bin", "shard_7.bin", "parity_3.bin", "trash.txt"):
+        with open(os.path.join(stale, junk), "wb") as f:
+            f.write(b"\xde\xad\xbe\xef" * 64)
+
+    state = make_state()
+    save_checkpoint(d, 5, state, shards=2, parity=True)
+    files = sorted(os.listdir(os.path.join(d, "step_5")))
+    assert files == ["manifest.json", "parity_0.bin", "parity_1.bin",
+                     "shard_0.bin", "shard_1.bin"]
+    step, leaves = load_checkpoint(d)
+    assert step == 5
+    np.testing.assert_array_equal(leaves["w"], np.asarray(state["w"]))
+
+
+def test_gc_sweeps_orphaned_tmp_dirs(tmp_path):
+    d = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(d, keep_n=2)])
+    state = make_state()
+    mgr.save(1, state, block=True)
+    # orphans from a crashed writer of an old run
+    os.makedirs(os.path.join(d, ".tmp_step_99"))
+    with open(os.path.join(d, ".tmp_step_99", "shard_0.bin"), "wb") as f:
+        f.write(b"junk")
+    mgr.save(2, state, block=True)
+    assert not os.path.exists(os.path.join(d, ".tmp_step_99"))
+    # non-tmp strays survive
+    mgr.close()
+
+
+def test_tmp_step_of_entry():
+    assert tmp_step_of_entry(".tmp_step_3") == 3
+    assert tmp_step_of_entry(".tmp_step_x") is None
+    assert tmp_step_of_entry("step_3") is None
+    assert step_of_entry(".tmp_step_3") is None
+
+
+# --------------------------------------------------------------------------
+# parity reconstruction: > 2 shards, unequal shard lengths
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("victim", [0, 1, 2, 3])
+def test_parity_recovery_many_unequal_shards(tmp_path, victim):
+    """4 shards with very different lengths (one leaf dominates): any single
+    missing shard reconstructs from partner parity, through the streaming
+    reader."""
+    rng = np.random.RandomState(3)
+    state = {
+        "big": jnp.asarray(rng.randn(5000), jnp.float32),
+        "mid": jnp.asarray(rng.randn(700), jnp.float32),
+        "small": jnp.asarray(rng.randn(40), jnp.float32),
+        "tiny": jnp.asarray(3, jnp.int32),
+    }
+    d = str(tmp_path)
+    save_checkpoint(d, 1, state, shards=4, parity=True)
+    sizes = {k: os.path.getsize(os.path.join(d, "step_1", f"shard_{k}.bin"))
+             for k in range(4)}
+    assert len(set(sizes.values())) > 1          # genuinely unequal
+    os.remove(os.path.join(d, "step_1", f"shard_{victim}.bin"))
+    _, leaves = load_checkpoint(d)
+    for k, v in state.items():
+        np.testing.assert_array_equal(leaves[k], np.asarray(v))
+
+
+def test_truncated_shard_falls_back_to_parity(tmp_path):
+    state = make_state(4)
+    d = str(tmp_path)
+    save_checkpoint(d, 1, state, shards=3, parity=True)
+    shard = os.path.join(d, "step_1", "shard_0.bin")
+    raw = open(shard, "rb").read()
+    with open(shard, "wb") as f:
+        f.write(raw[: len(raw) // 2])            # torn write
+    _, leaves = load_checkpoint(d)
+    np.testing.assert_array_equal(leaves["w"], np.asarray(state["w"]))
+
+
+# --------------------------------------------------------------------------
+# delta-chain restore after the base's sibling steps are GC'd
+# --------------------------------------------------------------------------
+
+def test_chain_restore_after_sibling_gc(tmp_path):
+    """Old non-chain steps are collected while a live chain (base + deltas)
+    survives retention and restores."""
+    from repro.core.criticality import CriticalityReport, LeafReport
+    from repro.core.policy import LeafPolicy
+    from repro.core.regions import RegionTable
+
+    n = 2048
+    mask = np.random.RandomState(5).rand(n) < 0.4
+    w = np.random.RandomState(6).randn(n).astype(np.float32)
+
+    def report_for(state):
+        return CriticalityReport(leaves={"w": LeafReport(
+            name="w", shape=(n,), dtype=np.dtype(np.float32),
+            policy=LeafPolicy.AD, mask=mask,
+            table=RegionTable.from_mask(mask, 4), magnitude=None)})
+
+    d = str(tmp_path / "lv")
+    report = report_for(None)
+    with CheckpointManager([Level(d, keep_n=1, max_chain=6)],
+                           scrutiny_fn=lambda s: report,
+                           save_mode="device", pack_interpret=True) as mgr:
+        w_t = w
+        for t in range(1, 5):
+            w_t = w_t.copy()
+            w_t[np.flatnonzero(mask)[:4]] += 1
+            mgr.save(t, {"w": jnp.asarray(w_t)}, block=True)
+        # keep_n=1: only step 4 is "kept", but its chain pins 1..3
+        present = sorted(s for s in map(step_of_entry, os.listdir(d))
+                         if s is not None)
+        assert present == [1, 2, 3, 4]
+        step, got = mgr.restore({"w": jnp.zeros(n, jnp.float32)})
+        assert step == 4
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.where(mask, w_t, 0))
+
+
+def test_restore_skips_step_with_missing_chain_base(tmp_path):
+    """A delta step whose base was (wrongly/externally) deleted is skipped
+    and the next-newest complete step restores instead."""
+    d = str(tmp_path / "lv")
+    state = make_state(8)
+    mgr = CheckpointManager([Level(d, keep_n=10)])
+    mgr.save(1, state, block=True)
+    mgr.save(2, state, block=True)
+    mgr.close()
+    # forge step 3 as a delta chained on a base that no longer exists
+    src = os.path.join(d, "step_2", "manifest.json")
+    man = json.load(open(src))
+    man["step"] = 3
+    man["chain"] = {"base_step": 99, "delta_chain": [99]}
+    os.makedirs(os.path.join(d, "step_3"))
+    json.dump(man, open(os.path.join(d, "step_3", "manifest.json"), "w"))
+    mgr2 = CheckpointManager([Level(d, keep_n=10)])
+    got = mgr2.restore(state)
+    assert got is not None
+    step, _ = got
+    assert step == 2
+    assert mgr2.last_restore_stats["skipped"][0]["step"] == 3
+    mgr2.close()
+
+
+def test_restore_survives_gc_race(tmp_path, monkeypatch):
+    """latest() sees a step, then retention removes it mid-load: restore
+    falls back to the next-newest complete step."""
+    d = str(tmp_path / "lv")
+    state = make_state(9)
+    mgr = CheckpointManager([Level(d, keep_n=10)])
+    mgr.save(1, state, block=True)
+    mgr.save(2, state, block=True)
+    mgr.wait()
+
+    real = manager_mod.load_checkpoint_raw
+    calls = {"n": 0}
+
+    def racy(root, step=None):
+        calls["n"] += 1
+        if calls["n"] == 1:              # simulate _gc rmtree'ing step 2
+            import shutil
+            shutil.rmtree(os.path.join(root, "step_2"))
+        return real(root, step)
+
+    monkeypatch.setattr(manager_mod, "load_checkpoint_raw", racy)
+    got = mgr.restore(state)
+    assert got is not None and got[0] == 1
+    assert calls["n"] == 2
+    assert mgr.last_restore_stats["skipped"][0]["step"] == 2
+    mgr.close()
+
+
+# --------------------------------------------------------------------------
+# elastic restore: leaves missing from the checkpoint
+# --------------------------------------------------------------------------
+
+def test_restore_state_missing_leaf_fallback(tmp_path):
+    state = make_state(10)
+    save_checkpoint(str(tmp_path), 1, state)
+    _, leaves = load_checkpoint(str(tmp_path))
+    grown = dict(state, new_head=jnp.full((8, 8), 5.0, jnp.float32))
+    missing = []
+    out = restore_state(grown, leaves, missing_out=missing)
+    assert missing == ["new_head"]
+    np.testing.assert_array_equal(np.asarray(out["new_head"]), 5.0)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
+    # fill policy zero-initializes instead
+    out = restore_state(grown, leaves, missing="fill", fill=0)
+    np.testing.assert_array_equal(np.asarray(out["new_head"]), 0.0)
+    # strict mode still available
+    with pytest.raises(KeyError):
+        restore_state(grown, leaves, missing="error")
+    with pytest.raises(ValueError):
+        restore_state(grown, leaves, missing="bogus")
+
+
+def test_manager_restore_reports_missing_leaves(tmp_path):
+    d = str(tmp_path / "lv")
+    state = make_state(11)
+    with CheckpointManager([Level(d)]) as mgr:
+        mgr.save(1, state, block=True)
+        grown = dict(state, extra=jnp.ones(4, jnp.float32))
+        step, got = mgr.restore(grown)
+        assert step == 1
+        assert mgr.last_restore_stats["missing_leaves"] == ["extra"]
+        np.testing.assert_array_equal(np.asarray(got["extra"]), 1.0)
+
+
+# --------------------------------------------------------------------------
+# writer lifecycle: wait()/close()/context manager, exceptions once
+# --------------------------------------------------------------------------
+
+def test_wait_propagates_writer_error_exactly_once(tmp_path, monkeypatch):
+    d = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(d)])
+
+    def boom(*a, **k):
+        raise RuntimeError("disk on fire")
+
+    monkeypatch.setattr(manager_mod, "save_checkpoint", boom)
+    mgr.save(1, make_state(12))
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        mgr.wait()
+    mgr.wait()                       # second wait: clean (propagated once)
+    assert mgr._inflight == {}
+    mgr.close()
+
+
+def test_save_after_writer_error_propagates_once(tmp_path, monkeypatch):
+    d = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(d)])
+    real = manager_mod.save_checkpoint
+    fail = {"on": True}
+
+    def flaky(*a, **k):
+        if fail["on"]:
+            raise RuntimeError("torn write")
+        return real(*a, **k)
+
+    monkeypatch.setattr(manager_mod, "save_checkpoint", flaky)
+    mgr.save(1, make_state(13))
+    fail["on"] = False
+    # the double-buffer drain surfaces the previous failure...
+    with pytest.raises(RuntimeError, match="torn write"):
+        mgr.save(2, make_state(13))
+    # ...exactly once: the next save is clean
+    mgr.save(3, make_state(13), block=True)
+    assert mgr.restore(make_state(13))[0] == 3
+    mgr.close()
+
+
+def test_keep_n_zero_disables_retention(tmp_path):
+    d = str(tmp_path / "lv")
+    state = make_state(16)
+    with CheckpointManager([Level(d, keep_n=0)]) as mgr:
+        for t in (1, 2, 3):
+            mgr.save(t, state, block=True)
+    present = sorted(s for s in map(step_of_entry, os.listdir(d))
+                     if s is not None)
+    assert present == [1, 2, 3]          # nothing is ever collected
+
+
+def test_failed_delta_write_forces_fresh_base(tmp_path, monkeypatch):
+    """A delta write that dies on the writer thread must not leave later
+    saves referencing the unwritten step: the chain is invalidated and the
+    next save squashes with a fresh base that restores."""
+    from repro.core.criticality import CriticalityReport, LeafReport
+    from repro.core.policy import LeafPolicy
+    from repro.core.regions import RegionTable
+
+    n = 1024
+    mask = np.random.RandomState(20).rand(n) < 0.5
+    report = CriticalityReport(leaves={"w": LeafReport(
+        name="w", shape=(n,), dtype=np.dtype(np.float32),
+        policy=LeafPolicy.AD, mask=mask,
+        table=RegionTable.from_mask(mask, 4), magnitude=None)})
+    d = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(d, keep_n=10, max_chain=8)],
+                            scrutiny_fn=lambda s: report,
+                            save_mode="device", pack_interpret=True)
+    real = manager_mod.save_delta_checkpoint
+    fail = {"on": True}
+
+    def flaky(*a, **k):
+        if fail["on"]:
+            raise RuntimeError("node lost")
+        return real(*a, **k)
+
+    monkeypatch.setattr(manager_mod, "save_delta_checkpoint", flaky)
+    w = np.random.RandomState(21).randn(n).astype(np.float32)
+    mgr.save(1, {"w": jnp.asarray(w)}, block=True)       # base
+    with pytest.raises(RuntimeError, match="node lost"):
+        mgr.save(2, {"w": jnp.asarray(w)}, block=True)   # delta dies
+    fail["on"] = False
+    w3 = w + 1
+    mgr.save(3, {"w": jnp.asarray(w3)}, block=True)
+    # the chain was invalidated → step 3 is a fresh base, not a delta
+    assert (list(mgr.last_save_stats["levels"].values())[0]["kind"]
+            == "base")
+    step, got = mgr.restore({"w": jnp.zeros(n, jnp.float32)})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.where(mask, w3, 0))
+    mgr.close()
+
+
+def test_close_and_context_manager(tmp_path):
+    d = str(tmp_path / "lv")
+    state = make_state(14)
+    with CheckpointManager([Level(d)]) as mgr:
+        mgr.save(1, state)
+    # context exit drained and shut the pool down
+    assert mgr._pool is None
+    assert os.path.exists(os.path.join(d, "step_1", "manifest.json"))
+    with pytest.raises(RuntimeError):
+        mgr.save(2, state)
+    mgr.close()                          # idempotent
+    # restore still works on a closed manager (read-only path)
+    assert mgr.restore(state)[0] == 1
+
+
+def test_concurrent_save_restore_threads(tmp_path):
+    """Background saves + foreground restores racing retention: every
+    restore must land on *some* complete step."""
+    d = str(tmp_path / "lv")
+    state = make_state(15, n=64)
+    errors = []
+    with CheckpointManager([Level(d, keep_n=1)]) as mgr:
+        def saver():
+            try:
+                for t in range(1, 30):
+                    mgr.save(t, state, block=True)
+            except Exception as e:       # pragma: no cover
+                errors.append(e)
+
+        th = threading.Thread(target=saver)
+        th.start()
+        ok = 0
+        while th.is_alive():
+            got = mgr.restore(state)
+            if got is not None:
+                ok += 1
+        th.join()
+    assert not errors
+    assert ok > 0
