@@ -1,0 +1,125 @@
+"""Scrutiny hot path: host vs device engine, wall-clock + D2H bytes.
+
+The host (reference) engine moves every probe's **full gradient state** to
+host — 32/64 bits per element per probe over D2H — and accumulates with
+un-jitted numpy loops.  The device engine runs the whole multi-probe vjp
+sweep inside one compiled ``lax.fori_loop`` and thresholds + bit-packs the
+masks on device, so only 1 bit/element (packed words) plus 4 B/tile count
+summaries ever cross D2H — a ~(32·probes)× transfer reduction at f32, and
+the compiled sweep amortizes dispatch overhead across probes.
+
+Measured here, on a ≥16M-element state at 1/4/8 probes (1M in --quick):
+
+* end-to-end ``scrutinize()`` wall-clock for both engines (device timing
+  includes ``materialize()`` — masks usable on host — and is steady-state:
+  the compiled engine is cached across re-scrutiny calls, which is the
+  ``rescrutinize_every=1`` production regime; first-call compile time is
+  reported separately);
+* measured D2H bytes from the engines' own accounting
+  (``report.stats["d2h_bytes"]``);
+* mask equality between the two engines (hard assert).
+
+Acceptance (ISSUE 3): device D2H ≤ 2 % of host at 8 probes, wall-clock
+≥ 3× faster on the 16M-element state.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _best_of(fn, k=2):
+    best = float("inf")
+    for _ in range(k):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(out=print, quick: bool = False, json_path: str | None = None):
+    from repro.core import DeviceReport, ScrutinyConfig, scrutinize
+
+    n = 1 << (20 if quick else 24)          # 1M / 16.8M elements in "w"
+    crit = 0.148                             # paper BT(u) critical structure
+    rng = np.random.RandomState(0)
+    sel = jnp.asarray(rng.rand(n) < crit, jnp.float32)
+    state = {
+        "w": jnp.asarray(rng.randn(n), jnp.float32),
+        "m": jnp.asarray(rng.randn(n // 8), jnp.float32),
+        "step": jnp.asarray(11, jnp.int32),
+    }
+    total = sum(int(np.prod(v.shape)) or 1 for v in state.values())
+    state_bytes = sum(np.asarray(v).nbytes for v in state.values())
+
+    def fn(s):
+        return {"loss": jnp.sum(s["w"] * sel) + jnp.sum(s["m"] ** 2)}
+
+    out(f"== scrutiny engines ({total/1e6:.1f}M elements, "
+        f"{state_bytes/1e6:.1f} MB state, critical≈{crit:.1%}) ==")
+    out(f"{'probes':>7}{'host':>12}{'device':>12}{'speedup':>9}"
+        f"{'host D2H':>12}{'dev D2H':>11}{'frac':>8}")
+
+    results = {"quick": quick, "elements": total,
+               "state_bytes": state_bytes, "probes": {}}
+    key = jax.random.PRNGKey(0)
+    for probes in (1, 4, 8):
+        cfg_d = ScrutinyConfig(probes=probes)
+        cfg_h = ScrutinyConfig(probes=probes, engine="host")
+
+        def run_device():
+            return scrutinize(fn, state, config=cfg_d, key=key).materialize()
+
+        def run_host():
+            return scrutinize(fn, state, config=cfg_h, key=key)
+
+        t0 = time.perf_counter()
+        rep_d = run_device()                  # first call: engine compile
+        compile_s = time.perf_counter() - t0
+        rep_h = run_host()
+        for name in state:                    # engines must agree, bitwise
+            assert np.array_equal(rep_d[name].mask, rep_h[name].mask), name
+        dev_s = _best_of(run_device)
+        host_s = _best_of(run_host)
+        dev_d2h = scrutinize(fn, state, config=cfg_d, key=key) \
+            .materialize().stats["d2h_bytes"]
+        host_d2h = rep_h.stats["d2h_bytes"]
+        speedup = host_s / dev_s
+        frac = dev_d2h / host_d2h
+        out(f"{probes:>7}{host_s*1e3:>10.1f}ms{dev_s*1e3:>10.1f}ms"
+            f"{speedup:>8.1f}x{host_d2h/1e6:>10.1f}MB{dev_d2h/1e6:>9.2f}MB"
+            f"{frac:>8.2%}")
+        results["probes"][str(probes)] = {
+            "host_s": host_s, "device_s": dev_s, "speedup": speedup,
+            "host_d2h_bytes": int(host_d2h), "device_d2h_bytes": int(dev_d2h),
+            "d2h_frac": frac, "device_compile_s": compile_s,
+        }
+    p8 = results["probes"]["8"]
+    results["headline"] = {"speedup_8": p8["speedup"],
+                           "d2h_frac_8": p8["d2h_frac"]}
+    out(f"\n8-probe: device D2H {p8['d2h_frac']:.2%} of host "
+        f"(bound: 2%), wall-clock {p8['speedup']:.1f}x (bound: 3x)")
+    out("(CPU 'device' is the same memory space, so the wall-clock gap is "
+        "pure compiled-sweep vs eager-loop overhead; on TPU the D2H column "
+        "is the dominant term and follows the byte counts exactly)")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        out(f"\nwrote {json_path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke runs")
+    ap.add_argument("--json", default=None,
+                    help="write results to this JSON file")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

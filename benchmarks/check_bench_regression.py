@@ -1,0 +1,119 @@
+"""CI gate: fail when a benchmark regresses its headline metric by > 20 %.
+
+Usage (pairs of baseline/current JSON files, matched by bench name inferred
+from the baseline filename):
+
+    python benchmarks/check_bench_regression.py \
+        BENCH_pack.json:bench_pack_ci.json \
+        BENCH_restore.json:bench_restore_ci.json \
+        BENCH_scrutiny.json:bench_scrutiny_ci.json
+
+Headline metrics are deliberately machine-portable: byte counts are
+deterministic, and speedups are same-machine ratios.  Committed baselines
+are full-size runs but carry a ``quick_baseline`` section (flat
+``{dotted.path: value}``) recorded from a --quick run, so CI's quick-mode
+results compare against quick-mode numbers — raw timings and sizes are
+never compared across modes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TOLERANCE = 0.20
+
+# bench name -> [(dotted metric path, "higher"|"lower" is better)]
+HEADLINES = {
+    "pack": [
+        ("host_pack.speedup", "higher"),
+        ("save_modes.device-packed.d2h_bytes", "lower"),
+    ],
+    "restore": [
+        ("restore_modes.device.h2d_bytes", "lower"),
+    ],
+    "scrutiny": [
+        ("headline.speedup_8", "higher"),
+        ("headline.d2h_frac_8", "lower"),
+    ],
+}
+
+
+def _lookup(d: dict, path: str):
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def _bench_name(path: str) -> str | None:
+    low = path.lower()
+    for name in HEADLINES:
+        if name in low:
+            return name
+    return None
+
+
+def check_pair(baseline_path: str, current_path: str, out=print) -> list:
+    name = _bench_name(baseline_path)
+    if name is None:
+        out(f"[skip] {baseline_path}: unknown bench (no headline metrics)")
+        return []
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(current_path) as f:
+        current = json.load(f)
+    cross_mode = bool(baseline.get("quick")) != bool(current.get("quick"))
+    quick_base = baseline.get("quick_baseline") or {}
+    failures = []
+    for path, direction in HEADLINES[name]:
+        cur = _lookup(current, path)
+        base = (quick_base.get(path) if cross_mode
+                else _lookup(baseline, path))
+        if cross_mode and base is None:
+            out(f"[skip] {name}:{path}: baseline has no quick_baseline "
+                f"entry for a cross-mode comparison")
+            continue
+        if cur is None or base is None or base == 0:
+            out(f"[skip] {name}:{path}: metric missing "
+                f"(baseline={base} current={cur})")
+            continue
+        if direction == "higher":
+            ok = cur >= base * (1.0 - TOLERANCE)
+            delta = cur / base - 1.0
+        else:
+            ok = cur <= base * (1.0 + TOLERANCE)
+            delta = base and cur / base - 1.0
+        tag = "ok  " if ok else "FAIL"
+        out(f"[{tag}] {name}:{path}: {cur:.6g} vs baseline {base:.6g} "
+            f"({delta:+.1%}, {direction} is better)")
+        if not ok:
+            failures.append((name, path, base, cur))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pairs", nargs="+",
+                    help="baseline.json:current.json pairs")
+    args = ap.parse_args(argv)
+    failures = []
+    for pair in args.pairs:
+        if ":" not in pair:
+            print(f"bad pair (want baseline:current): {pair}")
+            return 2
+        baseline, current = pair.split(":", 1)
+        failures += check_pair(baseline, current)
+    if failures:
+        print(f"\n{len(failures)} headline metric(s) regressed > "
+              f"{TOLERANCE:.0%}")
+        return 1
+    print("\nall headline metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,8 @@ import argparse
 import sys
 import time
 
-BENCHES = ["table2", "table3", "kv_scrutiny", "pack", "roofline"]
+BENCHES = ["table2", "table3", "kv_scrutiny", "pack", "restore",
+           "scrutiny", "roofline"]
 
 
 def main():
@@ -35,6 +36,14 @@ def main():
     if "pack" in wanted:
         from benchmarks import bench_pack
         bench_pack.run()
+        print()
+    if "restore" in wanted:
+        from benchmarks import bench_restore
+        bench_restore.run()
+        print()
+    if "scrutiny" in wanted:
+        from benchmarks import bench_scrutiny
+        bench_scrutiny.run()
         print()
     if "roofline" in wanted:
         from benchmarks import roofline_table

@@ -11,7 +11,15 @@ reduction and device-resident save *and* restore paths.
   restore picks the newest complete level.
 - **Scrutinized**: a CriticalityReport (from repro.core) reduces what is
   written; re-scrutinize every ``rescrutinize_every`` saves (masks can
-  drift as control state evolves).
+  drift as control state evolves).  With the device scrutiny engine the
+  report is a ``DeviceReport`` whose masks stay resident on device — the
+  save path consumes them directly (no per-save mask H2D upload), and
+  re-scrutiny is **incremental**: new mask words are diffed against the
+  previous report on device (``DeviceReport.reuse_unchanged``), unchanged
+  leaves keep their cached region tables / host masks, and a re-scrutiny
+  that changes nothing keeps the very same report object so differential
+  chains stay alive.  ``last_scrutiny_stats`` records the engine's D2H
+  bytes and reused/changed leaf counts.
 - **Device-resident fast path** (``save_mode``): with a report available,
   each masked leaf is compacted *on device* (kernels/mask_pack, per shard
   when the leaf is sharded along its leading axis) and only the critical
@@ -58,7 +66,8 @@ from repro.checkpoint.store import (chain_steps, load_checkpoint_raw,
                                     read_manifest, save_checkpoint,
                                     save_delta_checkpoint, step_of_entry,
                                     tmp_step_of_entry)
-from repro.core.criticality import CriticalityReport, _path_str
+from repro.core.criticality import (CriticalityReport, DeviceReport,
+                                    _path_str)
 from repro.core.policy import PrecisionPolicy
 from repro.distributed.sharding import (pack_sharded_payload,
                                         pack_sharded_payload_device,
@@ -106,9 +115,8 @@ class _SaveSnapshot:
         for path, leaf in flat:
             name = _path_str(path)
             rep = report.leaves.get(name) if report is not None else None
-            mask = rep.mask if rep is not None else None
             is_dev = isinstance(leaf, jax.Array) and leaf.size > 0
-            if (self.device and mask is not None and not mask.all()
+            if (self.device and rep is not None and not rep.all_critical
                     and is_dev):
                 kind = "dev_payload"
             elif self.device and is_dev:
@@ -118,6 +126,19 @@ class _SaveSnapshot:
             self.items.append((name, leaf, rep, kind))
             self.full_bytes += (leaf.nbytes if is_dev
                                 else np.asarray(leaf).nbytes)
+        # Writer threads only touch host bytes: pre-force the lazy host
+        # masks (and magnitudes when tiers need them) of every leaf the
+        # writer itself will pack, so a DeviceReport never does D2H off
+        # the save thread.  dev_payload leaves materialize theirs in
+        # packed() below, which also runs synchronously.
+        tiered = (mgr.precision is not None
+                  and getattr(mgr.precision, "enabled", True))
+        for name, leaf, rep, kind in self.items:
+            if rep is None or kind == "dev_payload":
+                continue
+            rep.mask
+            if tiered:
+                rep.magnitude
         self.d2h = 0
         self._payload_dev: Dict[str, Any] = {}
         self._host_arr: Dict[str, np.ndarray] = {}
@@ -128,8 +149,10 @@ class _SaveSnapshot:
 
     def payload_dev(self, name, leaf, rep):
         if name not in self._payload_dev:
+            # device_mask(): resident for a DeviceReport (no H2D upload),
+            # a one-off upload for host reports (the original behaviour)
             payload, counts, moved = pack_sharded_payload_device(
-                leaf, rep.mask, **self.mgr._pack_opts)
+                leaf, rep.device_mask(), **self.mgr._pack_opts)
             self._payload_dev[name] = payload
             self.d2h += moved
         return self._payload_dev[name]
@@ -154,14 +177,18 @@ class _SaveSnapshot:
             else:
                 # no chain: per-shard pack straight to host (PR-1 path)
                 payload_h, _, moved = pack_sharded_payload(
-                    leaf, rep.mask, **self.mgr._pack_opts)
+                    leaf, rep.device_mask(), **self.mgr._pack_opts)
                 self.d2h += moved
             p = pack_leaf_from_payload(name, leaf.shape, str(leaf.dtype),
                                        rep.mask, payload_h)
         else:
             arr = self.host_arr(name, leaf)
             mask = rep.mask if rep is not None else None
-            mag = rep.magnitude if rep is not None else None
+            # magnitudes only feed precision tiers; don't force a
+            # DeviceReport's lazy magnitude D2H when tiering is off
+            tiered = (self.mgr.precision is not None
+                      and getattr(self.mgr.precision, "enabled", True))
+            mag = rep.magnitude if rep is not None and tiered else None
             p = pack_leaf(name, arr, mask, mag, self.mgr.precision)
         self._packed[name] = p
         return p
@@ -291,6 +318,7 @@ class CheckpointManager:
         self._lock = threading.Lock()
         self.last_save_stats: Optional[Dict[str, Any]] = None
         self.last_restore_stats: Optional[Dict[str, Any]] = None
+        self.last_scrutiny_stats: Optional[Dict[str, Any]] = None
 
     # --- lifecycle -------------------------------------------------------
 
@@ -328,13 +356,26 @@ class CheckpointManager:
     # --- save ------------------------------------------------------------
 
     def maybe_report(self, state) -> Optional[CriticalityReport]:
+        """Run (or re-run) scrutiny.  Device reports re-scrutinize
+        *incrementally*: fresh mask words are diffed against the resident
+        previous report on device, unchanged leaves reuse the previous
+        leaf objects (cached region tables and host masks included), and a
+        no-op re-scrutiny returns the identical report object — which is
+        what keeps differential chains (`_delta_ok` keys on report
+        identity) alive across ``rescrutinize_every=1``."""
         if self.scrutiny_fn is None:
             return None
         need = (self._report is None or
                 (self.rescrutinize_every and
                  self._saves % self.rescrutinize_every == 0))
         if need:
-            self._report = self.scrutiny_fn(state)
+            new = self.scrutiny_fn(state)
+            prev = self._report
+            if (new is not prev and isinstance(new, DeviceReport)
+                    and isinstance(prev, DeviceReport)):
+                new = new.reuse_unchanged(prev)
+            self._report = new
+            self.last_scrutiny_stats = getattr(new, "stats", None)
         return self._report
 
     def _device_eligible(self, report) -> bool:

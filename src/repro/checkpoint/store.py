@@ -219,7 +219,11 @@ def save_checkpoint(root: str, step: int, state: Any,
         if report is not None and name in report.leaves:
             rep = report[name]
             mask = rep.mask
-            mag = rep.magnitude
+            # magnitudes only feed precision tiers; skipping the access
+            # keeps a DeviceReport's lazy magnitude D2H from triggering
+            # (possibly on a writer thread) when tiering is off
+            if precision is not None and getattr(precision, "enabled", True):
+                mag = rep.magnitude
         packed.append(pack_leaf(name, arr, mask, mag, precision))
 
     full_bytes = int(sum(

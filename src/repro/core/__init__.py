@@ -10,6 +10,8 @@ Public API:
 
 from repro.core.criticality import (
     CriticalityReport,
+    DeviceLeafReport,
+    DeviceReport,
     LeafReport,
     scrutinize,
     scrutinize_jaxpr_reads,
@@ -34,6 +36,8 @@ from repro.core import report
 
 __all__ = [
     "CriticalityReport",
+    "DeviceLeafReport",
+    "DeviceReport",
     "LeafReport",
     "scrutinize",
     "scrutinize_jaxpr_reads",

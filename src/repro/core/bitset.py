@@ -54,6 +54,19 @@ class BitMask:
         arr = np.asarray(arr, dtype=bool).reshape(-1)
         return cls(np.packbits(arr), arr.size)
 
+    @classmethod
+    def from_words(cls, words, n: int) -> "BitMask":
+        """Wrap already-packed words (e.g. the device scrutiny engine's
+        ``threshold_bitpack`` output moved D2H) without a repack.  The
+        words are not copied; tail bits past ``n`` must already be 0
+        (guaranteed by ``threshold_bitpack`` and ``np.packbits``)."""
+        words = np.asarray(words, dtype=np.uint8).reshape(-1)
+        if words.size != (n + 7) // 8:
+            raise ValueError(
+                f"BitMask.from_words: {words.size} words cannot hold "
+                f"{n} bits (expected {(n + 7) // 8})")
+        return cls(words, n)
+
     # --- lattice ops (vectorized word ops) -------------------------------
 
     def ior(self, other: "BitMask") -> "BitMask":

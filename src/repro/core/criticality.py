@@ -18,20 +18,36 @@ Differences from the paper's Enzyme pipeline (see DESIGN.md §7):
   repeatedly land on a measure-zero cancellation.
 - Integer/bool leaves are handled by an explicit policy (ALWAYS_CRITICAL by
   default) instead of prose.
+
+Device-resident engine (the default, ``ScrutinyConfig.engine``): the whole
+multi-probe sweep runs as one compiled ``lax.fori_loop`` — ``fn`` is
+linearized once per primal, fresh ``random.fold_in`` cotangents are drawn
+per iteration, and max-|grad| accumulators are carried (and donated) across
+iterations by XLA.  Masks are thresholded and bit-packed **on device**
+(``kernels/mask_pack.threshold_bitpack``), so scrutiny D2H traffic is
+1 bit/element plus 4 B/tile count summaries instead of 64 bits/element per
+probe.  The result is a :class:`DeviceReport` whose masks stay resident for
+the checkpoint manager's device save path; host masks, region tables and
+magnitudes materialize lazily on first access.  A structural jaxpr pre-pass
+(``scrutinize_jaxpr_reads``) zero-masks leaves that cannot reach any output
+without running a backward pass for them.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bitset import BitMask
 from repro.core.policy import LeafPolicy, PrecisionPolicy, ScrutinyConfig
 from repro.core.regions import RegionTable
+from repro.kernels.mask_pack import ops as mask_ops
 
 
 def _path_str(path) -> str:
@@ -79,12 +95,26 @@ class LeafReport:
     def uncritical_rate(self) -> float:
         return self.table.uncritical_rate
 
+    @property
+    def all_critical(self) -> bool:
+        return self.critical == self.total
+
+    def device_mask(self) -> jnp.ndarray:
+        """Flat bool mask as a device array.  Host reports upload it
+        (1 B/element H2D); :class:`DeviceLeafReport` overrides this with
+        the resident mask so saves never re-upload."""
+        return jnp.asarray(self.mask)
+
 
 @dataclasses.dataclass(frozen=True)
 class CriticalityReport:
     """scrutinize() result: one LeafReport per state leaf, + aggregates."""
 
     leaves: Dict[str, LeafReport]
+    # Engine accounting (probes run, measured D2H bytes, …); not part of
+    # report equality.
+    stats: Optional[Dict[str, Any]] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def __getitem__(self, name: str) -> LeafReport:
         return self.leaves[name]
@@ -134,6 +164,223 @@ class CriticalityReport:
             yield (name, l.uncritical, l.total, l.uncritical_rate, l.policy.value)
 
 
+class DeviceLeafReport:
+    """Criticality verdict for one leaf with the mask resident **on device**.
+
+    Duck-types :class:`LeafReport`: ``mask`` / ``table`` / ``magnitude``
+    materialize to host lazily (and cache), costing one D2H of
+    1 bit/element (bit-packed words) resp. one accumulator-width transfer
+    (magnitudes) on first access.  ``device_mask()`` expands the resident
+    words to a flat bool mask on device with no host round-trip — the
+    checkpoint manager's device save path consumes that directly, killing
+    the per-save mask upload.  Materialization is idempotent (single
+    attribute swap under the GIL), so a writer thread re-reading already
+    cached host values is safe.
+    """
+
+    __slots__ = ("name", "shape", "dtype", "policy", "n", "words_dev",
+                 "magnitude_dev", "_critical", "_stats", "_words_host",
+                 "_mask", "_mask_dev", "_table", "_magnitude")
+
+    def __init__(self, name: str, shape, dtype, policy: LeafPolicy, n: int,
+                 critical: int, words_dev=None, magnitude_dev=None,
+                 stats: Optional[Dict[str, Any]] = None):
+        self.name = name
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self.policy = policy
+        self.n = int(n)
+        self._critical = int(critical)
+        self.words_dev = words_dev          # bit-packed uint8, device (or None)
+        self.magnitude_dev = magnitude_dev  # flat max-|grad|, device (or None)
+        self._stats = stats if stats is not None else {}
+        self._words_host = None
+        self._mask = None
+        self._mask_dev = None
+        self._table = None
+        self._magnitude = None
+
+    # --- counts (from the D2H'd summaries; no mask materialization) -----
+
+    @property
+    def total(self) -> int:
+        return self.n
+
+    @property
+    def critical(self) -> int:
+        return self._critical
+
+    @property
+    def uncritical(self) -> int:
+        return self.n - self._critical
+
+    @property
+    def uncritical_rate(self) -> float:
+        return self.uncritical / self.n if self.n else 0.0
+
+    @property
+    def all_critical(self) -> bool:
+        return self._critical == self.n
+
+    # --- device-resident views ------------------------------------------
+
+    def device_mask(self) -> jnp.ndarray:
+        """Flat bool mask on device (cached).  Policy leaves build theirs
+        directly on device; AD leaves expand the resident packed words."""
+        if self._mask_dev is None:
+            if self.words_dev is not None:
+                self._mask_dev = mask_ops.expand_mask_bits(self.words_dev,
+                                                           n=self.n)
+            elif self.all_critical and self.n:
+                self._mask_dev = jnp.ones(self.n, jnp.bool_)
+            else:
+                self._mask_dev = jnp.zeros(self.n, jnp.bool_)
+        return self._mask_dev
+
+    # --- lazy host materialization ---------------------------------------
+
+    @property
+    def mask_words(self) -> np.ndarray:
+        """Bit-packed mask words on host (``np.packbits`` order — also the
+        checkpoint bitmap aux encoding).  First access moves 1 bit/element
+        D2H; recorded in the report's ``stats["d2h_bytes"]``."""
+        if self._words_host is None:
+            if self.words_dev is not None:
+                w = np.asarray(self.words_dev)
+                self._stats["d2h_bytes"] = \
+                    self._stats.get("d2h_bytes", 0) + w.nbytes
+            else:
+                w = BitMask.full(self.n, self.all_critical and self.n > 0).words
+            self._words_host = w
+        return self._words_host
+
+    def bitmask(self) -> BitMask:
+        """The mask as a :class:`repro.core.bitset.BitMask` (no repack)."""
+        return BitMask.from_words(self.mask_words, self.n)
+
+    @property
+    def mask(self) -> np.ndarray:
+        if self._mask is None:
+            self._mask = (np.unpackbits(self.mask_words, count=self.n)
+                          .astype(bool) if self.n else np.zeros(0, bool))
+        return self._mask
+
+    @property
+    def table(self) -> RegionTable:
+        if self._table is None:
+            t = RegionTable.from_words(self.mask_words, self.n,
+                                       self.dtype.itemsize)
+            t.validate()
+            self._table = t
+        return self._table
+
+    @property
+    def magnitude(self) -> Optional[np.ndarray]:
+        if self._magnitude is None and self.magnitude_dev is not None:
+            m = np.asarray(self.magnitude_dev)
+            self._stats["d2h_bytes"] = \
+                self._stats.get("d2h_bytes", 0) + m.nbytes
+            self._magnitude = m
+        return self._magnitude
+
+
+class DeviceReport(CriticalityReport):
+    """``scrutinize()`` result with device-resident masks (device engine).
+
+    Satisfies the full :class:`CriticalityReport` API — ``report[name]``,
+    aggregate byte accounting, report rendering — via the lazy host
+    materialization of :class:`DeviceLeafReport`, while
+    ``leaves[name].device_mask()`` / ``.words_dev`` stay resident for the
+    checkpoint manager's device save path.  ``stats["d2h_bytes"]`` records
+    what actually crossed device→host (count summaries eagerly; packed
+    words and magnitudes lazily as they are touched).
+    """
+
+    def __init__(self, leaves: Dict[str, DeviceLeafReport],
+                 stats: Optional[Dict[str, Any]] = None):
+        # bypass the frozen-dataclass parent's __setattr__
+        object.__setattr__(self, "leaves", dict(leaves))
+        object.__setattr__(self, "stats",
+                           stats if stats is not None else {})
+
+    def materialize(self) -> "DeviceReport":
+        """Force host masks for every leaf (one packed-words D2H each);
+        returns self."""
+        for leaf in self.leaves.values():
+            leaf.mask  # noqa: B018 - touching the lazy property is the point
+        return self
+
+    def reuse_unchanged(self, previous: CriticalityReport
+                        ) -> "CriticalityReport":
+        """Incremental re-scrutiny: diff this report's mask words against
+        ``previous`` **on device** and reuse the previous report's leaf
+        objects (with their cached host masks / region tables / packed
+        words) wherever the words are identical — downstream region-table
+        and report rebuilds are skipped for unchanged leaves.  Returns
+        ``previous`` itself when *nothing* changed, so the manager's
+        differential chains (which key on report identity) survive a
+        re-scrutiny that found the same masks.  Reused leaves keep the
+        previous sweep's magnitudes; changed-ness is defined over masks.
+        """
+        if not isinstance(previous, DeviceReport) or \
+                set(self.leaves) != set(previous.leaves):
+            return self
+        verdict: Dict[str, bool] = {}
+        pairs: List[str] = []
+        for name, leaf in self.leaves.items():
+            old = previous.leaves[name]
+            if (not isinstance(old, DeviceLeafReport)
+                    or old.shape != leaf.shape or old.dtype != leaf.dtype
+                    or old.policy is not leaf.policy or old.n != leaf.n):
+                verdict[name] = False
+            elif leaf.critical != old.critical:
+                verdict[name] = False       # count summaries already differ
+            elif leaf.words_dev is None or old.words_dev is None:
+                # policy/dead leaves are all-or-nothing; counts matched
+                verdict[name] = (leaf.words_dev is None
+                                 and old.words_dev is None)
+            else:
+                pairs.append(name)
+        if pairs:
+            flags = _words_equal(
+                tuple(self.leaves[n].words_dev for n in pairs),
+                tuple(previous.leaves[n].words_dev for n in pairs))
+            for name, eq in zip(pairs, jax.device_get(flags)):
+                verdict[name] = bool(eq)
+        unchanged = sum(verdict.values())
+        self.stats["reused_leaves"] = unchanged
+        self.stats["changed_leaves"] = len(verdict) - unchanged
+        if unchanged == len(verdict):
+            previous.stats.update(self.stats)
+            return previous
+        merged = {}
+        for name, ok in verdict.items():
+            leaf = previous.leaves[name] if ok else self.leaves[name]
+            if ok and isinstance(leaf, DeviceLeafReport):
+                # future lazy D2H of reused leaves must land in the live
+                # (merged) stats, not the orphaned previous report's
+                leaf._stats = self.stats
+            merged[name] = leaf
+        return DeviceReport(merged, self.stats)
+
+
+@jax.jit
+def _words_equal(new_words, old_words):
+    """Batched on-device word comparison — one sync for all leaves."""
+    return [jnp.array_equal(a, b) for a, b in zip(new_words, old_words)]
+
+
+# --------------------------------------------------------------------------
+# Probe schedule + accumulation helpers (shared by both engines, so the
+# host and device paths produce bit-identical masks)
+# --------------------------------------------------------------------------
+
+def _probe_keys(key, probe):
+    """fold_in(key, probe) → (cotangent key, jitter key)."""
+    ck, jk = jax.random.split(jax.random.fold_in(key, probe))
+    return ck, jk
+
+
 def _random_like_output(key, out_leaves):
     """Dense random cotangents for the inexact output leaves."""
     cts = []
@@ -156,12 +403,157 @@ def _jitter_leaf(key, leaf, rel):
     return leaf + rel * scale * noise
 
 
+def _accum_dtype(dtype) -> np.dtype:
+    """Max-|grad| accumulator dtype: f32, widened to f64 only for
+    double-precision leaves (x64 mode) so exact-zero semantics survive."""
+    dtype = np.dtype(dtype)
+    if dtype in (np.dtype(np.float64), np.dtype(np.complex128)):
+        return np.dtype(np.float64)
+    return np.dtype(np.float32)
+
+
+def _abs_mag(grad, accum_dtype):
+    """|grad| in one dtype-correct step (complex → real magnitude once)."""
+    return jnp.abs(grad).astype(accum_dtype).reshape(-1)
+
+
+# --------------------------------------------------------------------------
+# Compiled sweep engine
+# --------------------------------------------------------------------------
+
+class _SweepEngine:
+    """Compiled multi-probe vjp sweep for one (fn, structure, config).
+
+    ``fn`` is linearized once per primal and all probes run inside a single
+    jitted ``lax.fori_loop`` whose carried max-|grad| accumulators XLA
+    donates across iterations.  With ``input_jitter`` the primal changes per
+    probe, so the linearization moves inside the loop body — we re-linearize
+    only when the jitter actually perturbs the primal.  State values are
+    runtime arguments (nothing is baked in), so engines are cached on
+    structure and the manager's online re-scrutiny
+    (``rescrutinize_every=1``) reuses one compiled sweep across training.
+    """
+
+    def __init__(self, fn, treedef, names, example_leaves, policies,
+                 config: ScrutinyConfig):
+        self.fn = fn
+        self.treedef = treedef
+        self.names = list(names)
+        self.probes = max(1, config.probes)
+        self.jitter = float(config.input_jitter)
+        ad = [i for i, p in enumerate(policies)
+              if p in (LeafPolicy.AD, LeafPolicy.HORIZON)]
+        self.dead: frozenset = frozenset()
+        if ad and config.jaxpr_prepass:
+            state = jax.tree_util.tree_unflatten(treedef,
+                                                 list(example_leaves))
+            used = scrutinize_jaxpr_reads(fn, state)
+            self.dead = frozenset(i for i in ad
+                                  if not used[self.names[i]])
+        self.ad_idx: Tuple[int, ...] = tuple(i for i in ad
+                                             if i not in self.dead)
+        self.sizes = tuple(int(np.prod(example_leaves[i].shape)) or 1
+                           for i in self.ad_idx)
+        self.accum_dtypes = tuple(_accum_dtype(example_leaves[i].dtype)
+                                  for i in self.ad_idx)
+        if ad:
+            # Validate fn's outputs up front (raises the "no differentiable
+            # outputs" ValueError even when the prepass would skip the sweep).
+            jax.eval_shape(self._g, [example_leaves[i] for i in self.ad_idx],
+                           list(example_leaves))
+        self._sweep = jax.jit(self._sweep_impl)
+
+    def _g(self, diff_leaves, leaves):
+        full = list(leaves)
+        for i, leaf in zip(self.ad_idx, diff_leaves):
+            full[i] = leaf
+        out = self.fn(jax.tree_util.tree_unflatten(self.treedef, full))
+        out_leaves = [o for o in jax.tree_util.tree_leaves(out)
+                      if jnp.issubdtype(jnp.asarray(o).dtype, jnp.inexact)]
+        if not out_leaves:
+            raise ValueError(
+                "scrutinize: fn produced no differentiable outputs; "
+                "criticality via AD is undefined."
+            )
+        return out_leaves
+
+    def _sweep_impl(self, leaves, key):
+        diff = [leaves[i] for i in self.ad_idx]
+
+        def g(dl):
+            return self._g(dl, leaves)
+
+        accums = [jnp.zeros((s,), d)
+                  for s, d in zip(self.sizes, self.accum_dtypes)]
+
+        if self.jitter <= 0.0:
+            # one linearization; the loop only re-applies the transpose
+            out, vjp_fn = jax.vjp(g, diff)
+
+            def body(p, acc):
+                ct_key, _ = _probe_keys(key, p)
+                (grads,) = vjp_fn(_random_like_output(ct_key, out))
+                return [jnp.maximum(a, _abs_mag(gr, a.dtype))
+                        for a, gr in zip(acc, grads)]
+        else:
+            def body(p, acc):
+                ct_key, jit_key = _probe_keys(key, p)
+                jkeys = jax.random.split(jit_key, len(diff))
+                # probe 0 stays on the unjittered primal (matches the host
+                # reference engine); jittered probes re-linearize
+                primal = [jnp.where(p > 0,
+                                    _jitter_leaf(k, l, self.jitter), l)
+                          for k, l in zip(jkeys, diff)]
+                out, vjp_fn = jax.vjp(g, primal)
+                (grads,) = vjp_fn(_random_like_output(ct_key, out))
+                return [jnp.maximum(a, _abs_mag(gr, a.dtype))
+                        for a, gr in zip(acc, grads)]
+
+        return jax.lax.fori_loop(0, self.probes, body, accums)
+
+    def run(self, leaves, key) -> Dict[int, jnp.ndarray]:
+        """leaf index → flat max-|grad| magnitudes, resident on device."""
+        if not self.ad_idx:
+            return {}
+        return dict(zip(self.ad_idx, self._sweep(list(leaves), key)))
+
+
+_ENGINE_CACHE: "OrderedDict[Any, _SweepEngine]" = OrderedDict()
+_ENGINE_CACHE_MAX = 8
+
+
+def _engine_for(fn, treedef, names, leaves, policies,
+                config: ScrutinyConfig) -> _SweepEngine:
+    try:
+        sig = (fn, treedef,
+               tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
+               tuple(policies), max(1, config.probes),
+               float(config.input_jitter), bool(config.jaxpr_prepass))
+        hash(sig)
+    except TypeError:
+        sig = None
+    if sig is not None and sig in _ENGINE_CACHE:
+        _ENGINE_CACHE.move_to_end(sig)
+        return _ENGINE_CACHE[sig]
+    eng = _SweepEngine(fn, treedef, names, leaves, policies, config)
+    if sig is not None:
+        _ENGINE_CACHE[sig] = eng
+        while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
+            _ENGINE_CACHE.popitem(last=False)
+    return eng
+
+
+# --------------------------------------------------------------------------
+# scrutinize
+# --------------------------------------------------------------------------
+
 def scrutinize(
     fn: Callable[[Any], Any],
     state: Any,
     *,
     config: ScrutinyConfig = ScrutinyConfig(),
     key: Optional[jax.Array] = None,
+    mask_shardings: Optional[Dict[str, Any]] = None,
 ) -> CriticalityReport:
     """Run the paper's AD criticality analysis on ``fn`` at ``state``.
 
@@ -169,93 +561,150 @@ def scrutinize(
     leaf).  Must be jax-traceable and pure.
     ``state``: pytree of arrays — the variables necessary for checkpointing.
 
-    Returns a CriticalityReport with one flat bool mask per state leaf.
+    With the default device engine (``config.engine``) the multi-probe vjp
+    sweep runs as one compiled ``lax.fori_loop`` and the masks are
+    thresholded + bit-packed on device; the returned :class:`DeviceReport`
+    keeps them resident (1 bit/element + per-tile count summaries are all
+    that cross D2H) and materializes host masks/tables lazily.
+    ``config.engine = "host"`` selects the un-jitted reference engine, which
+    moves every probe's full gradients to host and returns a plain
+    :class:`CriticalityReport`; the two produce bit-identical masks.
+
+    ``mask_shardings``: optional ``{leaf name: Sharding}`` for the packed
+    mask words (see ``distributed.sharding.scrutiny_words_shardings``) so
+    per-shard masks land on the devices where per-shard packing runs.
+
+    Either way the result satisfies the ``CriticalityReport`` API: one flat
+    bool mask per state leaf, region tables, and storage accounting.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    engine = config.engine
+    if engine == "auto":
+        engine = "device"
+    if engine not in ("device", "host"):
+        raise ValueError(f"unknown scrutiny engine {config.engine!r}")
 
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
     names = [_path_str(p) for p, _ in leaves_with_path]
     leaves = [jnp.asarray(l) for _, l in leaves_with_path]
     policies = [config.leaf_policy(l) for l in leaves]
 
-    ad_idx = [i for i, p in enumerate(policies) if p in (LeafPolicy.AD, LeafPolicy.HORIZON)]
+    eng = _engine_for(fn, treedef, names, leaves, policies, config)
+    if engine == "host":
+        return _scrutinize_host(eng, names, leaves, policies, config, key)
+    return _scrutinize_device(eng, names, leaves, policies, config, key,
+                              mask_shardings)
 
-    # --- reverse-mode sweep over AD leaves -----------------------------
+
+def _scrutinize_device(eng: _SweepEngine, names, leaves, policies,
+                       config: ScrutinyConfig, key,
+                       mask_shardings) -> DeviceReport:
+    stats: Dict[str, Any] = {
+        "engine": "device", "probes": eng.probes, "d2h_bytes": 0,
+        "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead)}
+    mags = eng.run(leaves, key)
+
+    words: Dict[int, jnp.ndarray] = {}
+    counts: Dict[int, jnp.ndarray] = {}
+    for i, mag in mags.items():
+        w, c = mask_ops.threshold_bitpack(mag, config.zero_tol)
+        if mask_shardings:
+            sh = mask_shardings.get(names[i])
+            if sh is not None:
+                w = jax.device_put(w, sh)
+        words[i] = w
+        counts[i] = c
+    # one host sync for every per-tile count summary (4 B per tile)
+    counts_h = jax.device_get(counts)
+    stats["d2h_bytes"] += sum(c.nbytes for c in counts_h.values())
+
+    reports: Dict[str, DeviceLeafReport] = {}
+    for i, (name, leaf, pol) in enumerate(zip(names, leaves, policies)):
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        if i in words:
+            reports[name] = DeviceLeafReport(
+                name, leaf.shape, leaf.dtype, pol, n,
+                critical=int(counts_h[i].sum()), words_dev=words[i],
+                magnitude_dev=mags[i], stats=stats)
+        elif pol == LeafPolicy.ALWAYS_CRITICAL:
+            reports[name] = DeviceLeafReport(name, leaf.shape, leaf.dtype,
+                                             pol, n, critical=n, stats=stats)
+        else:  # ALWAYS_UNCRITICAL, or an AD leaf dead in the jaxpr
+            reports[name] = DeviceLeafReport(name, leaf.shape, leaf.dtype,
+                                             pol, n, critical=0, stats=stats)
+    return DeviceReport(reports, stats)
+
+
+def _scrutinize_host(eng: _SweepEngine, names, leaves, policies,
+                     config: ScrutinyConfig, key) -> CriticalityReport:
+    """Reference engine: un-jitted per-probe vjp with full-gradient D2H.
+
+    Bit-identical masks to the device engine — both share the probe-key
+    schedule, the |grad| accumulation dtype, and the threshold semantics
+    (tests/test_device_scrutiny.py asserts word-for-word equality).
+    """
+    stats: Dict[str, Any] = {
+        "engine": "host", "probes": eng.probes, "d2h_bytes": 0,
+        "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead)}
+
     magnitudes: Dict[int, np.ndarray] = {}
-    if ad_idx:
-        keep_mag = True  # cheap; needed for precision tiers + report rendering
+    if eng.ad_idx:
+        diff = [leaves[i] for i in eng.ad_idx]
 
-        def g(diff_leaves):
-            full = list(leaves)
-            for i, leaf in zip(ad_idx, diff_leaves):
-                full[i] = leaf
-            out = fn(jax.tree_util.tree_unflatten(treedef, full))
-            out_leaves = [o for o in jax.tree_util.tree_leaves(out)
-                          if jnp.issubdtype(jnp.asarray(o).dtype, jnp.inexact)]
-            if not out_leaves:
-                raise ValueError(
-                    "scrutinize: fn produced no differentiable outputs; "
-                    "criticality via AD is undefined."
-                )
-            return out_leaves
+        def g(dl):
+            return eng._g(dl, leaves)
 
-        diff_leaves = [leaves[i] for i in ad_idx]
-        accum = [np.zeros(int(np.prod(l.shape)) or 1, dtype=np.float64) for l in diff_leaves]
-
-        probe_key = key
-        primal = diff_leaves
+        accum = [np.zeros(s, dtype=d)
+                 for s, d in zip(eng.sizes, eng.accum_dtypes)]
+        primal = diff
         vjp_fn = None
         out_shape = None
-        for probe in range(max(1, config.probes)):
-            probe_key, ct_key, jit_key = jax.random.split(probe_key, 3)
+        for probe in range(eng.probes):
+            ct_key, jit_key = _probe_keys(key, probe)
             if config.input_jitter > 0.0 and probe > 0:
-                jkeys = jax.random.split(jit_key, len(diff_leaves))
+                jkeys = jax.random.split(jit_key, len(diff))
                 primal = [_jitter_leaf(k, l, config.input_jitter)
-                          for k, l in zip(jkeys, diff_leaves)]
+                          for k, l in zip(jkeys, diff)]
                 vjp_fn = None  # primal changed → fresh linearization
             if vjp_fn is None:
                 out_shape, vjp_fn = jax.vjp(g, primal)
-            cts = _random_like_output(ct_key, out_shape)
-            (grads,) = vjp_fn(cts)
+            (grads,) = vjp_fn(_random_like_output(ct_key, out_shape))
             for j, grad in enumerate(grads):
-                mag = np.abs(np.asarray(grad, dtype=np.complex128 if jnp.issubdtype(grad.dtype, jnp.complexfloating) else np.float64))
-                mag = np.asarray(np.abs(mag), dtype=np.float64).reshape(-1)
+                gh = np.asarray(grad)               # D2H: the full gradient
+                stats["d2h_bytes"] += gh.nbytes
+                mag = np.abs(gh).astype(accum[j].dtype).reshape(-1)
                 np.maximum(accum[j], mag, out=accum[j])
-
-        for j, i in enumerate(ad_idx):
+        for j, i in enumerate(eng.ad_idx):
             magnitudes[i] = accum[j]
 
-    # --- assemble per-leaf reports --------------------------------------
     reports: Dict[str, LeafReport] = {}
     for i, (name, leaf, pol) in enumerate(zip(names, leaves, policies)):
         n = int(np.prod(leaf.shape)) if leaf.ndim else 1
-        if pol in (LeafPolicy.AD, LeafPolicy.HORIZON):
-            mask = magnitudes[i] > config.zero_tol
+        if i in magnitudes:
+            mag = magnitudes[i]
+            mask = mag > np.asarray(config.zero_tol, mag.dtype)
         elif pol == LeafPolicy.ALWAYS_CRITICAL:
-            mask = np.ones(n, dtype=bool)
-        else:  # ALWAYS_UNCRITICAL
-            mask = np.zeros(n, dtype=bool)
-        table = RegionTable.from_mask(mask, itemsize=np.dtype(leaf.dtype).itemsize)
+            mask, mag = np.ones(n, dtype=bool), None
+        else:  # ALWAYS_UNCRITICAL, or an AD leaf dead in the jaxpr
+            mask, mag = np.zeros(n, dtype=bool), None
+        table = RegionTable.from_mask(mask,
+                                      itemsize=np.dtype(leaf.dtype).itemsize)
         table.validate()
         reports[name] = LeafReport(
-            name=name,
-            shape=tuple(leaf.shape),
-            dtype=np.dtype(leaf.dtype),
-            policy=pol,
-            mask=mask,
-            table=table,
-            magnitude=magnitudes.get(i),
-        )
-    return CriticalityReport(leaves=reports)
+            name=name, shape=tuple(leaf.shape), dtype=np.dtype(leaf.dtype),
+            policy=pol, mask=mask, table=table, magnitude=mag)
+    return CriticalityReport(leaves=reports, stats=stats)
 
 
 def scrutinize_jaxpr_reads(fn: Callable[[Any], Any], state: Any) -> Dict[str, bool]:
     """Cheap structural pre-pass: which *whole leaves* reach any output.
 
     Complements the element-level AD sweep — a leaf that is dead in the jaxpr
-    is uncritical in toto without a backward pass.  Element-granular analysis
-    still requires AD (this is the paper's key point).
+    is uncritical in toto without a backward pass.  ``scrutinize`` runs this
+    automatically (``ScrutinyConfig.jaxpr_prepass``) and skips the vjp sweep
+    for dead leaves.  Element-granular analysis still requires AD (this is
+    the paper's key point).
     """
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
     names = [_path_str(p) for p, _ in leaves_with_path]

@@ -98,9 +98,21 @@ class ScrutinyConfig:
     between probes to move off gradient zero-crossings (ReLU-dead-zone
     style false-uncriticals).
     ``zero_tol``: |grad| ≤ zero_tol counts as zero.  The paper uses exact 0;
-    we default to exact 0 too, jitter + probes handle robustness.
+    we default to exact 0 too, jitter + probes handle robustness.  Applied
+    in the accumulator dtype (f32, or f64 for double-precision leaves).
     ``leaf_policy``: dtype → LeafPolicy map (see default_leaf_policy).
     ``precision``: beyond-paper sensitivity tiering of critical elements.
+    ``engine``: "device" (default via "auto") runs the whole multi-probe
+    sweep as one compiled ``lax.fori_loop`` and thresholds + bit-packs the
+    masks on device — only 1 bit/element + per-tile count summaries ever
+    cross D2H, and ``scrutinize`` returns a ``DeviceReport`` whose masks
+    stay resident for the device save path.  "host" is the reference
+    engine: un-jitted per-probe vjp, full gradients moved to host each
+    probe (the two produce bit-identical masks;
+    tests/test_device_scrutiny.py).
+    ``jaxpr_prepass``: run ``scrutinize_jaxpr_reads`` first and skip the
+    vjp sweep for leaves that are dead in the jaxpr (all-zero mask without
+    a backward pass).
     """
 
     probes: int = 3
@@ -108,3 +120,5 @@ class ScrutinyConfig:
     zero_tol: float = 0.0
     leaf_policy: Callable[[Any], LeafPolicy] = default_leaf_policy
     precision: PrecisionPolicy = DEFAULT_PRECISION
+    engine: str = "auto"               # auto | device | host
+    jaxpr_prepass: bool = True

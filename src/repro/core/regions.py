@@ -107,6 +107,15 @@ class RegionTable:
         mask = np.asarray(mask).reshape(-1)
         return cls(regions=mask_to_regions(mask), size=int(mask.size), itemsize=int(itemsize))
 
+    @classmethod
+    def from_words(cls, words: np.ndarray, n: int, itemsize: int
+                   ) -> "RegionTable":
+        """Region table from bit-packed mask words (np.packbits order) —
+        the lazy host-materialization path of a device scrutiny report."""
+        mask = np.unpackbits(np.asarray(words, np.uint8), count=n
+                             ).astype(bool) if n else np.zeros(0, bool)
+        return cls.from_mask(mask, itemsize)
+
     @property
     def num_regions(self) -> int:
         return int(len(self.regions))

@@ -193,6 +193,62 @@ def cache_shardings(cfg, mesh: Mesh, cache_shape):
 # Scrutinized checkpoint save path: pack per shard *before* any gather.
 # --------------------------------------------------------------------------
 
+def _as_flat_mask(mask):
+    """Flat view of a criticality mask without forcing a host round-trip:
+    resident device masks (a ``DeviceReport``'s) stay on device — the whole
+    point of the device scrutiny engine is that saves never re-upload the
+    mask — while host numpy masks keep the original behaviour."""
+    if isinstance(mask, jax.Array):
+        return jnp.ravel(mask)
+    return np.asarray(mask).reshape(-1)
+
+
+def _mask_segment(mask, lo: int, hi: int, data):
+    """Slice ``mask[lo:hi]`` for one leading-axis shard, colocated with the
+    shard's ``data`` when the mask is a device array (a sharded/resident
+    mask's slice may live elsewhere; jitted pack rejects mixed devices)."""
+    seg = mask[lo:hi]
+    if isinstance(mask, jax.Array):
+        seg = jax.device_put(seg, next(iter(data.devices())))
+    return seg
+
+
+def scrutiny_words_shardings(state, shardings) -> Dict[str, Any]:
+    """Per-leaf shardings for the scrutiny engine's bit-packed mask words.
+
+    For every leaf whose sharding tiles only the leading axis into
+    byte-aligned flat segments (the DP/FSDP parameter layouts that
+    ``pack_sharded_payload`` packs per shard), the flat word array
+    ``(ceil(n/8),)`` can carry the same leading-axis spec — per-shard mask
+    words then land on the device whose shard they describe.  Leaves with
+    any other layout map to ``None`` (words stay wherever the sweep puts
+    them).  Feed the result to ``scrutinize(..., mask_shardings=...)``.
+    """
+    flat_t = jax.tree_util.tree_flatten_with_path(state)[0]
+    # None entries mean "no sharding for this leaf" and must stay leaves
+    # (bare tree_leaves would silently drop them and misalign the zip)
+    flat_s = jax.tree_util.tree_leaves(
+        shardings,
+        is_leaf=lambda x: x is None or isinstance(x, NamedSharding))
+    out: Dict[str, Any] = {}
+    for (path, leaf), sh in zip(flat_t, flat_s):
+        name = _path_str(path)
+        out[name] = None
+        if not isinstance(sh, NamedSharding) or not len(leaf.shape):
+            continue
+        spec = tuple(sh.spec) + (None,) * (len(leaf.shape) - len(sh.spec))
+        if spec[0] is None or any(d is not None for d in spec[1:]):
+            continue
+        axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+        nshards = int(np.prod([sh.mesh.shape[a] for a in axes]))
+        row = int(np.prod(leaf.shape[1:])) if len(leaf.shape) > 1 else 1
+        if nshards <= 1 or leaf.shape[0] % nshards:
+            continue
+        if (leaf.shape[0] // nshards * row) % 8:
+            continue  # shard boundary splits a word byte: keep replicated
+        out[name] = NamedSharding(sh.mesh, P(spec[0]))
+    return out
+
 def _leading_axis_shards(leaf) -> Optional[List[Tuple[int, int, Any]]]:
     """If ``leaf``'s addressable shards tile only the leading axis (all other
     dims full), return [(start, stop, shard_data)] sorted and exactly covering
@@ -243,8 +299,11 @@ def pack_sharded_payload(leaf, mask: np.ndarray, *, block: int = BLOCK,
 
     Returns ``(payload, counts, d2h_bytes)`` with ``payload`` in global flat
     (C) order — identical bytes to the host path.
+
+    ``mask`` may be a host bool array or a resident device mask (from a
+    ``DeviceReport``) — the latter never round-trips through the host.
     """
-    mask = np.asarray(mask).reshape(-1)
+    mask = _as_flat_mask(mask)
     segs = None
     if getattr(leaf, "is_fully_addressable", True) and \
             len(getattr(leaf, "addressable_shards", ()) or ()) > 1:
@@ -257,8 +316,8 @@ def pack_sharded_payload(leaf, mask: np.ndarray, *, block: int = BLOCK,
     payloads, counts, moved = [], [], 0
     for s, e, data in segs:
         p, c, m = mask_ops.pack_critical(
-            jnp.ravel(data), mask[s * row:e * row], block=block,
-            use_kernel=use_kernel, interpret=interpret)
+            jnp.ravel(data), _mask_segment(mask, s * row, e * row, data),
+            block=block, use_kernel=use_kernel, interpret=interpret)
         payloads.append(p)
         counts.append(c)
         moved += m
@@ -293,9 +352,11 @@ def pack_sharded_payload_device(leaf, mask: np.ndarray, *, block: int = BLOCK,
 
     Returns ``(payload_dev, counts_h, d2h_bytes)``.  Note the concatenation
     gathers the *packed* payloads onto one device; cross-device traffic is
-    ∝ the critical fraction, never the full leaf.
+    ∝ the critical fraction, never the full leaf.  Like
+    :func:`pack_sharded_payload`, a resident device mask is consumed
+    without any host round-trip.
     """
-    mask = np.asarray(mask).reshape(-1)
+    mask = _as_flat_mask(mask)
     segs = None
     if getattr(leaf, "is_fully_addressable", True) and \
             len(getattr(leaf, "addressable_shards", ()) or ()) > 1:
@@ -308,8 +369,8 @@ def pack_sharded_payload_device(leaf, mask: np.ndarray, *, block: int = BLOCK,
     payloads, counts, moved = [], [], 0
     for s, e, data in segs:
         p, c, m = _pack_payload_device(
-            jnp.ravel(data), mask[s * row:e * row], block=block,
-            use_kernel=use_kernel, interpret=interpret)
+            jnp.ravel(data), _mask_segment(mask, s * row, e * row, data),
+            block=block, use_kernel=use_kernel, interpret=interpret)
         payloads.append(p)
         counts.append(c)
         moved += m

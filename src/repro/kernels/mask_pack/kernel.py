@@ -39,6 +39,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 512
 
+# Elements per bitpack grid tile (→ block/8 = 128 output lanes per tile).
+BITPACK_BLOCK = 1024
+
 # jax renamed TPUCompilerParams → CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
@@ -177,6 +180,51 @@ def scatter_blocks_kernel(payload_pad: jnp.ndarray, starts: jnp.ndarray,
         interpret=interpret,
     )(starts.astype(jnp.int32), payload_pad, payload_pad, mb, fill_arr)
     return out.reshape(-1)
+
+
+def _bitpack_kernel(m_ref, tol_ref, w_ref, c_ref, *, block: int):
+    """Threshold + bit-pack one tile of |grad| magnitudes.
+
+    The pack is a 0/1-weighted matmul on the MXU (same trick as the
+    compaction kernel): ``W[j, k] = 2^(7 - j%8)`` iff ``j // 8 == k``, so
+    ``bits @ W`` yields one byte value per 8 elements in np.packbits
+    (big-endian) bit order.  Byte values ≤ 255 are exact in float32.
+    """
+    m = m_ref[0, :]
+    bits = (m > tol_ref[0]).astype(jnp.float32)
+    j = jax.lax.broadcasted_iota(jnp.int32, (block, block // 8), 0)
+    k = jax.lax.broadcasted_iota(jnp.int32, (block, block // 8), 1)
+    weight = jnp.where(j // 8 == k, jnp.int32(1) << (7 - j % 8), 0)
+    words = jax.lax.dot_general(bits[None, :], weight.astype(jnp.float32),
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    w_ref[0, :] = words[0].astype(jnp.uint8)
+    c_ref[0] = bits.sum().astype(jnp.int32)
+
+
+def bitpack_blocks_kernel(mag: jnp.ndarray, tol,
+                          block: int = BITPACK_BLOCK,
+                          interpret: bool = False):
+    """mag: (N,) float32, N % block == 0.  Returns
+    (words (N//block, block//8) uint8 in np.packbits bit order,
+    counts (N//block,) int32 per-tile critical counts)."""
+    n = mag.shape[0]
+    nb = n // block
+    mb = mag.reshape(nb, block)
+    tol_arr = jnp.full((nb,), tol, mag.dtype)
+    return pl.pallas_call(
+        functools.partial(_bitpack_kernel, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((1, block // 8), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block // 8), jnp.uint8),
+                   jax.ShapeDtypeStruct((nb,), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(mb, tol_arr)
 
 
 def _delta_kernel(c_ref, b_ref, out_ref):

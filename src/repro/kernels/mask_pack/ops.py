@@ -39,12 +39,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.mask_pack.kernel import (BLOCK, delta_blocks_kernel,
+from repro.kernels.mask_pack.kernel import (BITPACK_BLOCK, BLOCK,
+                                            bitpack_blocks_kernel,
+                                            delta_blocks_kernel,
                                             pack_blocks_kernel,
                                             scatter_blocks_kernel,
                                             unpack_blocks_kernel)
-from repro.kernels.mask_pack.ref import (delta_blocks_ref, pack_blocks_ref,
-                                         scatter_blocks_ref,
+from repro.kernels.mask_pack.ref import (bitpack_blocks_ref, delta_blocks_ref,
+                                         pack_blocks_ref, scatter_blocks_ref,
                                          unpack_blocks_ref)
 
 # dtypes the MXU kernel packs exactly (everything else → jnp oracle).
@@ -210,6 +212,41 @@ def unpack_critical(payload, counts, mask, *, n: int, block: int = BLOCK,
     del counts
     return mask_scatter(payload, mask, n=n, block=block, fill=fill,
                         use_kernel=use_kernel, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "use_kernel", "interpret"))
+def threshold_bitpack(mag: jnp.ndarray, tol=0.0, *,
+                      block: int = BITPACK_BLOCK,
+                      use_kernel: bool | None = None,
+                      interpret: bool = False):
+    """Device-resident scrutiny output: threshold magnitudes and bit-pack
+    the criticality mask **on device**.
+
+    ``mag``: (N,) non-negative |∂out/∂x| magnitudes (any float dtype; the
+    MXU kernel handles f32, everything else routes to the exact jnp
+    oracle).  Bit ``i`` of the result is ``mag[i] > tol``, in ``np.packbits``
+    (big-endian per byte) order, so the words are directly consumable as
+    ``core.bitset.BitMask`` words, the checkpoint bitmap aux encoding, and
+    ``expand_mask_bits`` input.  Tail bits of the last byte are always 0.
+
+    Returns ``(words, counts)``: words ``(ceil(N/8),)`` uint8 and per-tile
+    int32 critical counts ``(ceil(N/block),)`` — the only scrutiny outputs
+    that ever need to cross D2H (1 bit/element + 4 B/tile summaries).
+    """
+    n = mag.shape[0]
+    pad = (-n) % block
+    if pad:
+        # -inf padding can never exceed tol, so padded bits (including the
+        # tail bits of a kept byte when N % 8 != 0) stay 0.
+        mag = jnp.pad(mag, (0, pad), constant_values=-jnp.inf)
+    uk = _on_tpu() if use_kernel is None else use_kernel
+    if uk and mag.dtype == jnp.float32:
+        words, counts = bitpack_blocks_kernel(mag, tol, block=block,
+                                              interpret=interpret)
+    else:
+        words, counts = bitpack_blocks_ref(mag, tol, block=block)
+    return words.reshape(-1)[:(n + 7) // 8], counts
 
 
 @functools.partial(jax.jit, static_argnames=("n",))

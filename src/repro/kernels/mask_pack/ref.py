@@ -14,6 +14,25 @@ import numpy as np
 
 BLOCK = 512
 
+# Elements per bitpack grid tile (→ block/8 output bytes per tile).
+BITPACK_BLOCK = 1024
+
+
+def bitpack_blocks_ref(mag: jnp.ndarray, tol, block: int = BITPACK_BLOCK):
+    """Threshold + bit-pack oracle (matches ``kernel.bitpack_blocks_kernel``).
+
+    mag: (N,) float magnitudes, N % block == 0; bit i is ``mag[i] > tol``.
+    Bit order matches ``np.packbits`` (big-endian within each byte), so the
+    words are directly usable as ``core.bitset.BitMask`` words / bitmap aux.
+    Returns (words (N//block, block//8) uint8, counts (N//block,) int32).
+    """
+    nb = mag.shape[0] // block
+    bits = mag > jnp.asarray(tol, mag.dtype)
+    w = jnp.asarray([128, 64, 32, 16, 8, 4, 2, 1], jnp.int32)
+    words = (bits.reshape(-1, 8).astype(jnp.int32) * w).sum(axis=1)
+    counts = bits.reshape(nb, block).sum(axis=1).astype(jnp.int32)
+    return words.astype(jnp.uint8).reshape(nb, block // 8), counts
+
 
 def pack_blocks_ref(flat: jnp.ndarray, mask: jnp.ndarray, block: int = BLOCK):
     """flat: (N,) values; mask: (N,) bool.  N % block == 0.

@@ -1,0 +1,338 @@
+"""Device-resident scrutiny engine: bit-exact equivalence with the host
+reference engine across dtypes × densities × jitter × odd leaf sizes, the
+threshold_bitpack op against np.packbits, DeviceReport lazy materialization,
+incremental re-scrutiny, and the manager round-trip (DeviceReport saves are
+byte-identical on disk to host-report saves).
+
+Pallas kernels run in ``interpret=True`` where exercised, so CPU CI covers
+the TPU code path.  x64 is enabled at module import (precedent:
+tests/test_taint.py) so the f64 rows of the matrix are genuinely double
+precision.
+"""
+
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, Level, load_checkpoint
+from repro.core import DeviceReport, LeafPolicy, ScrutinyConfig, scrutinize
+from repro.core.bitset import BitMask
+from repro.kernels.mask_pack import ops as mp_ops
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float64, jnp.int32]
+DENSITIES = [0.0, 0.03, 0.5, 1.0]
+
+
+def _sel(n, frac, seed=0):
+    """Exact-fraction boolean selector."""
+    if frac == 0.0:
+        return np.zeros(n, bool)
+    if frac == 1.0:
+        return np.ones(n, bool)
+    sel = np.zeros(n, bool)
+    k = max(1, int(round(n * frac)))
+    sel[np.random.RandomState(seed).choice(n, k, replace=False)] = True
+    return sel
+
+
+def _state_and_fn(n, dtype, frac, seed=0):
+    """State with one ``dtype`` leaf whose criticality is exactly ``sel``
+    (0/1 weights make the gradient structurally zero off-selection), plus
+    an integer control leaf."""
+    rng = np.random.RandomState(seed + 1)
+    sel = _sel(n, frac, seed)
+    if dtype == jnp.int32:
+        x = jnp.asarray(rng.randint(-2**30, 2**30, n), jnp.int32)
+    else:
+        # values in [1, 2): exactly representable as nonzero in bf16 too
+        x = jnp.asarray(1.0 + rng.rand(n), dtype)
+    w = jnp.asarray(sel, dtype if dtype != jnp.int32 else jnp.float32)
+
+    def fn(state):
+        x = state["x"]
+        if x.dtype == jnp.int32:
+            return jnp.sum(x.astype(jnp.float32)) * 0.0 + state["y"].sum()
+        return jnp.sum((x * w).astype(jnp.float32)) + state["y"].sum()
+
+    state = {"x": x, "y": jnp.asarray(rng.randn(17), jnp.float32),
+             "step": jnp.asarray(3, jnp.int32)}
+    return state, fn, sel
+
+
+# --------------------------------------------------------------------------
+# threshold_bitpack: device words == np.packbits(host mask)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 8, 1023, 1024, 3000])
+@pytest.mark.parametrize("frac", DENSITIES)
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_threshold_bitpack_matches_packbits(n, frac, use_kernel):
+    rng = np.random.RandomState(n + int(frac * 100))
+    mag = (np.abs(rng.randn(n)) * _sel(n, frac, seed=n)).astype(np.float32)
+    words, counts = mp_ops.threshold_bitpack(
+        jnp.asarray(mag), 0.0, use_kernel=use_kernel, interpret=True)
+    expect = np.packbits(mag > 0)
+    np.testing.assert_array_equal(np.asarray(words), expect)
+    assert int(np.asarray(counts).sum()) == int((mag > 0).sum())
+    # words are directly consumable as BitMask words (tail bits zero)
+    bm = BitMask.from_words(np.asarray(words), n)
+    assert bm.count() == int((mag > 0).sum())
+
+
+def test_threshold_bitpack_f64_routes_to_oracle():
+    mag = jnp.asarray([0.0, 1e-300, 1.0, 0.0, 2.0], jnp.float64)
+    words, counts = mp_ops.threshold_bitpack(mag, 0.0, use_kernel=True,
+                                             interpret=True)
+    # 1e-300 is nonzero in f64 — an f32 detour would squash it to zero
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.packbits([0, 1, 1, 0, 1]))
+
+
+# --------------------------------------------------------------------------
+# device engine == host engine, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("frac", DENSITIES)
+def test_device_matches_host_masks(dtype, frac):
+    n = 1037                                     # odd: padded words path
+    state, fn, sel = _state_and_fn(n, dtype, frac)
+    key = jax.random.PRNGKey(11)
+    cfg_d = ScrutinyConfig(probes=2)
+    cfg_h = ScrutinyConfig(probes=2, engine="host")
+    rd = scrutinize(fn, state, config=cfg_d, key=key)
+    rh = scrutinize(fn, state, config=cfg_h, key=key)
+    assert isinstance(rd, DeviceReport) and not isinstance(rh, DeviceReport)
+    for name in state:
+        assert rd[name].critical == rh[name].critical
+        np.testing.assert_array_equal(
+            rd[name].mask_words, np.packbits(rh[name].mask),
+            err_msg=f"leaf {name} dtype {dtype} frac {frac}")
+        np.testing.assert_array_equal(rd[name].mask, rh[name].mask)
+    if dtype == jnp.int32:
+        assert rd["x"].policy == LeafPolicy.ALWAYS_CRITICAL
+        assert rd["x"].mask.all()
+    else:
+        np.testing.assert_array_equal(rd["x"].mask, sel)
+
+
+@pytest.mark.parametrize("jitter", [0.0, 0.05])
+def test_device_matches_host_with_jitter(jitter):
+    n = 777
+    state, fn, sel = _state_and_fn(n, jnp.float32, 0.3, seed=5)
+    key = jax.random.PRNGKey(13)
+    rd = scrutinize(fn, state,
+                    config=ScrutinyConfig(probes=3, input_jitter=jitter),
+                    key=key)
+    rh = scrutinize(fn, state,
+                    config=ScrutinyConfig(probes=3, input_jitter=jitter,
+                                          engine="host"), key=key)
+    np.testing.assert_array_equal(rd["x"].mask_words,
+                                  np.packbits(rh["x"].mask))
+    np.testing.assert_array_equal(rd["x"].mask, sel)
+
+
+@pytest.mark.parametrize("n", [1, 7, 513, 1037])
+def test_odd_leaf_sizes_padded_words(n):
+    state, fn, sel = _state_and_fn(n, jnp.float32, 0.5, seed=n)
+    rd = scrutinize(fn, state, config=ScrutinyConfig(probes=1))
+    leaf = rd["x"]
+    assert leaf.mask_words.size == (n + 7) // 8
+    # tail bits past n are zero → BitMask popcount == mask popcount
+    assert leaf.bitmask().count() == int(leaf.mask.sum()) == leaf.critical
+    np.testing.assert_array_equal(leaf.mask, sel)
+
+
+def test_jaxpr_prepass_skips_dead_leaves():
+    def fn(state):
+        return state["a"].sum()
+
+    state = {"a": jnp.ones(33, jnp.float32), "dead": jnp.ones(44, jnp.float32)}
+    rep = scrutinize(fn, state, config=ScrutinyConfig(probes=2))
+    assert rep.stats["dead_leaves"] == 1 and rep.stats["sweep_leaves"] == 1
+    assert rep["dead"].critical == 0 and not rep["dead"].mask.any()
+    assert rep["a"].mask.all()
+    # prepass off: the sweep itself must find the same all-zero mask
+    rep2 = scrutinize(fn, state,
+                      config=ScrutinyConfig(probes=2, jaxpr_prepass=False))
+    assert rep2.stats["dead_leaves"] == 0 and rep2.stats["sweep_leaves"] == 2
+    np.testing.assert_array_equal(rep2["dead"].mask, rep["dead"].mask)
+
+
+def test_device_report_lazy_d2h_accounting():
+    n = 4096
+    state, fn, _ = _state_and_fn(n, jnp.float32, 0.3, seed=9)
+    rep = scrutinize(fn, state, config=ScrutinyConfig(probes=2))
+    before = rep.stats["d2h_bytes"]
+    assert before < n // 8          # summaries only: ≪ 1 bit/element
+    # aggregates from the summaries need no materialization
+    assert rep["x"].uncritical > 0 and rep.total_elements >= n
+    assert rep.stats["d2h_bytes"] == before
+    rep.materialize()
+    after = rep.stats["d2h_bytes"]
+    assert before < after <= before + (n + 17 + 1) // 8 + 16
+
+
+# --------------------------------------------------------------------------
+# manager: DeviceReport saves are byte-identical to host-report saves
+# --------------------------------------------------------------------------
+
+def test_manager_device_report_disk_identity(tmp_path):
+    n = 3000
+    state, fn, sel = _state_and_fn(n, jnp.float32, 0.25, seed=21)
+    state["z"] = jnp.asarray(np.random.RandomState(2).randn(500), jnp.float64)
+
+    def fn2(s):
+        return fn(s) + jnp.sum(s["z"][:100] ** 2)
+
+    key = jax.random.PRNGKey(3)
+    dirs = {}
+    for mode, engine in (("device", "auto"), ("host", "host")):
+        cfg = ScrutinyConfig(probes=2, engine=engine)
+        d = str(tmp_path / mode)
+        mgr = CheckpointManager(
+            [Level(d)],
+            scrutiny_fn=lambda s, cfg=cfg: scrutinize(fn2, s, config=cfg,
+                                                      key=key),
+            save_mode=mode, pack_interpret=True, pack_use_kernel=False)
+        mgr.save(1, state, block=True)
+        if mode == "device":
+            assert mgr.last_save_stats["mode"] == "device"
+            assert mgr.last_save_stats["packed_leaves"] >= 2
+            assert isinstance(mgr._report, DeviceReport)
+        dirs[mode] = d
+    for fname in ("manifest.json", "shard_0.bin"):
+        with open(os.path.join(dirs["device"], "step_1", fname), "rb") as f:
+            a = f.read()
+        with open(os.path.join(dirs["host"], "step_1", fname), "rb") as f:
+            b = f.read()
+        assert a == b, f"{fname} differs between DeviceReport and host saves"
+    # and the loader round-trips critical elements bit-exactly
+    _, leaves = load_checkpoint(dirs["device"])
+    x = np.asarray(state["x"]).copy()
+    x[~sel] = 0
+    np.testing.assert_array_equal(leaves["x"], x)
+
+
+def test_scrutiny_words_shardings_single_device():
+    """Helper shape on one device: every leaf maps to an entry; nothing is
+    shardable (nshards == 1) so all values are None — and scrutinize
+    accepts the dict as a no-op."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import scrutiny_words_shardings
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    state = {"w": jnp.ones((8, 16), jnp.float32),
+             "step": jnp.asarray(1, jnp.int32)}
+    shardings = {"w": NamedSharding(mesh, P("data", None)),
+                 "step": NamedSharding(mesh, P())}
+    ws = scrutiny_words_shardings(state, shardings)
+    assert set(ws) == {"w", "step"} and all(v is None for v in ws.values())
+    rep = scrutinize(lambda s: s["w"].sum(), state,
+                     config=ScrutinyConfig(probes=1), mask_shardings=ws)
+    assert rep["w"].mask.all()
+
+
+def test_multidevice_sharded_scrutiny_and_save():
+    """End-to-end on 4 virtual CPU devices: the sweep runs on a sharded
+    leaf, per-shard mask words land on the packing devices
+    (scrutiny_words_shardings), and the manager's device save consumes the
+    resident DeviceReport mask per shard (XLA device-count flag must be
+    set before jax init → subprocess)."""
+    import subprocess
+    import sys
+
+    prog = r"""
+import numpy as np, jax, jax.numpy as jnp, os, tempfile
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager, Level, load_checkpoint
+from repro.core import DeviceReport, ScrutinyConfig, scrutinize
+from repro.distributed.sharding import scrutiny_words_shardings
+assert len(jax.devices()) == 4
+mesh = Mesh(np.array(jax.devices()).reshape(4, 1), ("data", "model"))
+s = NamedSharding(mesh, P("data", None))
+rng = np.random.RandomState(0)
+arr = rng.randn(64, 32).astype(np.float32)
+sel = rng.rand(64, 32) < 0.3
+w = jnp.asarray(sel, jnp.float32)
+leaf = jax.device_put(jnp.asarray(arr), s)
+state = {"x": leaf, "step": jnp.asarray(2, jnp.int32)}
+def fn(st):
+    return jnp.sum(st["x"] * w)
+ws = scrutiny_words_shardings(state, {"x": s, "step": None})
+assert ws["x"] is not None          # 16 rows * 32 = 512 bits/shard: aligned
+rep = scrutinize(fn, state, config=ScrutinyConfig(probes=2),
+                 mask_shardings=ws)
+assert isinstance(rep, DeviceReport)
+assert len(rep.leaves["x"].words_dev.sharding.device_set) == 4
+np.testing.assert_array_equal(rep["x"].mask, sel.reshape(-1))
+d = tempfile.mkdtemp()
+mgr = CheckpointManager([Level(d)], scrutiny_fn=lambda st: rep,
+                        save_mode="device", pack_interpret=True,
+                        pack_use_kernel=False)
+mgr.save(1, state, block=True)
+assert mgr.last_save_stats["mode"] == "device"
+assert mgr.last_save_stats["packed_leaves"] == 1
+_, leaves = load_checkpoint(d)
+np.testing.assert_array_equal(
+    leaves["x"].reshape(-1), np.where(sel, arr, 0).reshape(-1))
+mgr.close()
+print("SHARDED_SCRUTINY_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    res = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "SHARDED_SCRUTINY_OK" in res.stdout, res.stderr
+
+
+def test_manager_incremental_rescrutiny(tmp_path):
+    n = 512
+    rng = np.random.RandomState(7)
+    state = {"x": jnp.asarray(rng.randn(n), jnp.float32),
+             "gate": jnp.asarray((rng.rand(n) < 0.5).astype(np.float32)),
+             "step": jnp.asarray(1, jnp.int32)}
+
+    def resume(s):
+        return jnp.sum(s["x"] * s["gate"])
+
+    mgr = CheckpointManager(
+        [Level(str(tmp_path / "lv"))],
+        scrutiny_fn=lambda s: scrutinize(resume, s,
+                                         config=ScrutinyConfig(probes=2),
+                                         key=jax.random.PRNGKey(5)),
+        rescrutinize_every=1, save_mode="device",
+        pack_interpret=True, pack_use_kernel=False)
+    mgr.save(1, state, block=True)
+    rep1 = mgr._report
+    assert isinstance(rep1, DeviceReport)
+    # same state → identical masks → the very same report object survives
+    mgr.save(2, state, block=True)
+    assert mgr._report is rep1
+    assert mgr.last_scrutiny_stats["reused_leaves"] == len(rep1.leaves)
+    assert mgr.last_scrutiny_stats["changed_leaves"] == 0
+    # flip the gate → x's mask changes, gate's own mask (grad = x ≠ 0)
+    # and step stay put and their leaf objects are reused
+    new_gate = np.asarray(state["gate"]).copy()
+    new_gate[:n // 4] = 1.0 - new_gate[:n // 4]
+    state2 = dict(state, gate=jnp.asarray(new_gate))
+    mgr.save(3, state2, block=True)
+    rep3 = mgr._report
+    assert rep3 is not rep1
+    assert rep3.leaves["gate"] is rep1.leaves["gate"]
+    assert rep3.leaves["step"] is rep1.leaves["step"]
+    assert rep3.leaves["x"] is not rep1.leaves["x"]
+    assert mgr.last_scrutiny_stats["changed_leaves"] == 1
+    np.testing.assert_array_equal(rep3["x"].mask, new_gate != 0)
+    mgr.close()
