@@ -5,16 +5,17 @@ from repro.checkpoint.manager import CheckpointManager, Level
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
                                       delta_encode_host, leaf_mask,
                                       pack_leaf, pack_leaf_from_payload,
-                                      unpack_leaf)
-from repro.checkpoint.store import (chain_steps, list_steps, load_checkpoint,
-                                    load_checkpoint_raw, read_manifest,
-                                    restore_state, save_checkpoint,
-                                    save_delta_checkpoint, step_of_entry,
-                                    tmp_step_of_entry)
+                                      packed_leaf_stub, unpack_leaf)
+from repro.checkpoint.store import (StreamLeaf, chain_steps, list_steps,
+                                    load_checkpoint, load_checkpoint_raw,
+                                    read_manifest, restore_state,
+                                    save_checkpoint, save_delta_checkpoint,
+                                    step_of_entry, tmp_step_of_entry)
 
 __all__ = [
-    "CheckpointManager", "Level", "PackedLeaf", "DeltaLeaf", "pack_leaf",
-    "pack_leaf_from_payload", "unpack_leaf", "leaf_mask", "apply_delta",
+    "CheckpointManager", "Level", "PackedLeaf", "DeltaLeaf", "StreamLeaf",
+    "pack_leaf", "pack_leaf_from_payload", "packed_leaf_stub",
+    "unpack_leaf", "leaf_mask", "apply_delta",
     "delta_encode_host", "list_steps", "load_checkpoint",
     "load_checkpoint_raw", "restore_state", "save_checkpoint",
     "save_delta_checkpoint", "step_of_entry", "tmp_step_of_entry",

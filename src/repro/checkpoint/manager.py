@@ -1,48 +1,76 @@
 """Async, multi-level, differential checkpoint manager with scrutinized
-reduction and device-resident save *and* restore paths.
+reduction, device-resident save *and* restore paths, and a **pipelined
+asynchronous save engine**.
 
-- **Async**: saves run on a writer thread; the train loop only blocks if a
-  previous save of the same level is still in flight (double buffering) —
-  checkpoint I/O is off the critical path (straggler mitigation).  The
-  writer threads only touch host bytes and files; all device work and D2H
-  happens synchronously in ``save`` so device buffers never cross threads.
+- **Pipelined async save**: ``save()`` only blocks the caller for the
+  device-side snapshot (stage 1); everything else runs off the critical
+  path as a three-stage pipeline:
+
+    stage 1 (device)   batched pack — one compiled ``pack_group`` call per
+                       (device, dtype) group compacts every scrutinized
+                       leaf (payload sizes come from the criticality
+                       report, so the compiled call is cached per
+                       treedef/report epoch and **no counts D2H** is needed
+                       to size the gather);
+    stage 2 (transfer) chunked D2H — the payload streams host-ward in
+                       fixed-size chunks via non-blocking double-buffered
+                       copies, overlapping transfer with remaining device
+                       work, disk I/O, and the training step;
+    stage 3 (I/O)      streamed shard writes — ``store._write_stream``
+                       places chunks at their final shard offsets with
+                       incremental CRC as they arrive (no full-payload
+                       host materialization), with per-shard writes
+                       overlapped on the ``io_threads`` pool.
+
+  On the CPU backend the "host engine" specializes the same pipeline:
+  device memory *is* host memory, so stage 1 pins zero-copy views and the
+  pack is a vectorized gather on the writer side.  On-disk bytes are
+  byte-identical across engines and to the pre-pipeline path
+  (tests/test_pipeline_save.py).
+
+- **Snapshot isolation**: the caller may mutate, replace, or donate the
+  state buffers immediately after ``save(step, state, block=False)``; the
+  in-flight checkpoint is unaffected.  jax arrays are immutable and their
+  buffers are pinned by the snapshot's views/dispatched reads; mutable
+  host numpy leaves are copied synchronously (tests/test_async_save.py).
+
+- **Async**: per level at most one write is in flight (double buffering);
+  ``io_threads`` (default: scales with the level shard counts) bounds the
+  transfer/writer parallelism; ``close()``/``wait()`` drain and surface
+  writer errors exactly once.
+
 - **Multi-level**: a list of (directory, interval) levels — e.g. node-RAM
   (/dev/shm) every step, local disk every 10, global store every 100 —
   restore picks the newest complete level.
 - **Scrutinized**: a CriticalityReport (from repro.core) reduces what is
-  written; re-scrutinize every ``rescrutinize_every`` saves (masks can
-  drift as control state evolves).  With the device scrutiny engine the
-  report is a ``DeviceReport`` whose masks stay resident on device — the
-  save path consumes them directly (no per-save mask H2D upload), and
-  re-scrutiny is **incremental**: new mask words are diffed against the
-  previous report on device (``DeviceReport.reuse_unchanged``), unchanged
-  leaves keep their cached region tables / host masks, and a re-scrutiny
-  that changes nothing keeps the very same report object so differential
+  written; re-scrutinize every ``rescrutinize_every`` saves.  With the
+  device scrutiny engine the report is a ``DeviceReport`` whose masks stay
+  resident on device — the save path consumes them directly, and
+  re-scrutiny is incremental (``DeviceReport.reuse_unchanged``); an
+  unchanged re-scrutiny keeps the same report object so differential
   chains stay alive.  ``last_scrutiny_stats`` records the engine's D2H
   bytes and reused/changed leaf counts.
-- **Device-resident fast path** (``save_mode``): with a report available,
-  each masked leaf is compacted *on device* (kernels/mask_pack, per shard
-  when the leaf is sharded along its leading axis) and only the critical
-  payload + per-tile counts cross D2H — save cost scales with the critical
-  fraction end-to-end, not the state size.  The on-disk bytes are identical
-  to the host path (tests/test_device_save.py).  ``last_save_stats`` records
-  measured D2H bytes per save.
 - **Differential chains** (``Level.max_chain``): a level keeps its previous
-  save's payloads resident (on device on the device path) and writes only
-  byte-chunks that changed since the previous step — a *delta* checkpoint
-  referencing its predecessors (store.save_delta_checkpoint).  After
-  ``max_chain`` deltas, or whenever the report / state structure changes,
-  the chain is squashed with a fresh base.  ``_gc`` is chain-aware: a base
-  (or intermediate delta) is never collected while a kept step needs it.
+  save's payload sources resident (on device on the xla engine) and writes
+  only byte-chunks that changed since the previous step — a *delta*
+  checkpoint referencing its predecessors (store.save_delta_checkpoint).
+  After ``max_chain`` deltas, or whenever the report / state structure
+  changes, the chain is squashed with a fresh base.  ``_gc`` is
+  chain-aware: a base (or intermediate delta) is never collected while a
+  kept step needs it.
 - **Device-resident restore** (``restore_mode``): ``restore`` streams each
   leaf's payload from disk (store.load_checkpoint_raw reconstructs delta
   chains), moves only the critical payload + bit-packed mask H2D, and
   re-expands on device via the ``mask_scatter`` kernel — per shard of the
   target sharding when it tiles the leading axis.  ``last_restore_stats``
-  records measured H2D bytes and any leaves the checkpoint did not cover
-  (elastic restore of grown models falls back to the ``state_like`` leaf).
+  records measured H2D bytes and any leaves the checkpoint did not cover.
 - **Retention**: keep_n restorable steps per level + their chain
   dependencies; stale ``.tmp_step_*`` dirs from crashed writers are swept.
+
+``last_save_stats`` adds pipeline observability: ``blocked_s`` (how long
+``save()`` held the caller), ``stages`` (per-stage seconds), and
+``engine``.  Timing fields are finalized when the write lands (always the
+case after ``save(..., block=True)`` / ``wait()``).
 """
 
 from __future__ import annotations
@@ -52,24 +80,29 @@ import dataclasses
 import os
 import shutil
 import threading
+import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf,
                                       delta_encode_host, leaf_mask,
-                                      pack_leaf, pack_leaf_from_payload,
+                                      pack_leaf, packed_leaf_stub,
                                       unpack_leaf)
-from repro.checkpoint.store import (chain_steps, load_checkpoint_raw,
-                                    read_manifest, save_checkpoint,
-                                    save_delta_checkpoint, step_of_entry,
-                                    tmp_step_of_entry)
+from repro.checkpoint.pipeline import (D2H_CHUNK_BYTES, QueueSource,
+                                       TransferStream, ViewSource,
+                                       fetch_to_host, run_transfers)
+from repro.checkpoint.store import (StreamLeaf, chain_steps,
+                                    load_checkpoint_raw, read_manifest,
+                                    save_checkpoint, save_delta_checkpoint,
+                                    step_of_entry, tmp_step_of_entry)
 from repro.core.criticality import (CriticalityReport, DeviceReport,
                                     _path_str)
 from repro.core.policy import PrecisionPolicy
-from repro.distributed.sharding import (pack_sharded_payload,
+from repro.distributed.sharding import (leaf_segments,
                                         pack_sharded_payload_device,
                                         scatter_sharded_payload)
 from repro.kernels.mask_pack import ops as mask_ops
@@ -89,26 +122,58 @@ class Level:
 
 @dataclasses.dataclass
 class _ChainState:
-    """Per-level differential-chain bookkeeping: the previous save's
-    payloads stay resident (device arrays on the device path) so the next
-    save can diff against them without re-reading disk."""
+    """Per-level differential-chain bookkeeping.  ``kinds``/``meta`` are
+    filled synchronously at plan time; ``sources`` (the previous save's
+    payloads — numpy arrays on the host engine, device arrays on the xla
+    engine) is filled by that save's pipeline job.  The double buffer
+    drains the job before the next save for the level plans, so a planned
+    delta always sees resolved sources."""
     base_step: int
     chain: List[int]                   # delta steps since base, in order
     report: Optional[CriticalityReport]
-    sources: Dict[str, Any]            # name -> device array | host uint8
     kinds: Dict[str, str]              # name -> dev_payload | dev_raw | host
     meta: Dict[str, Tuple]             # name -> (shape, dtype)
+    sources: Optional[Dict[str, Any]] = None
+
+
+def _host_snapshot(leaf) -> np.ndarray:
+    """Isolation-safe host snapshot of one leaf.
+
+    jax arrays are immutable and ``np.asarray`` is zero-copy on the CPU
+    backend — the view *pins* the underlying buffer, so a later donation
+    copies instead of reusing it (tests/test_async_save.py).  Mutable host
+    numpy leaves alias caller memory and must be copied.
+    """
+    if isinstance(leaf, np.ndarray):
+        return np.array(leaf, copy=True)
+    return np.asarray(leaf)
+
+
+def _entry_nbytes(e) -> int:
+    """Disk-accounting bytes of a delta-save entry (payload + aux)."""
+    if isinstance(e, StreamLeaf):
+        return int(e.length) + len(e.leaf.aux) + len(e.leaf.region_tiers)
+    return int(e.nbytes)
 
 
 class _SaveSnapshot:
-    """One save's view of the state: classifies each leaf, lazily
-    materializes device payloads / host arrays / packed leaves (each at
-    most once, shared across levels), and tracks actual D2H bytes."""
+    """One save's frozen view of the state.
+
+    Construction runs synchronously inside ``save()`` (this is *all* the
+    caller blocks for): leaf classification, snapshot isolation (host
+    views/copies), and the stage-1 batched pack dispatch.  Everything else
+    — payload materialization, manifest metas, delta diffs, transfers —
+    happens lazily on the pipeline job threads, memoized so several levels
+    share one snapshot's work.
+    """
 
     def __init__(self, mgr: "CheckpointManager", state, report):
         self.mgr = mgr
         self.report = report
         self.device = mgr._device_eligible(report)
+        self.engine = mgr._engine if self.device else "host"
+        self.tiered = (mgr.precision is not None
+                       and getattr(mgr.precision, "enabled", True))
         flat, self.treedef = jax.tree_util.tree_flatten_with_path(state)
         self.items: List[Tuple[str, Any, Any, str]] = []
         self.full_bytes = 0
@@ -126,141 +191,281 @@ class _SaveSnapshot:
             self.items.append((name, leaf, rep, kind))
             self.full_bytes += (leaf.nbytes if is_dev
                                 else np.asarray(leaf).nbytes)
-        # Writer threads only touch host bytes: pre-force the lazy host
-        # masks (and magnitudes when tiers need them) of every leaf the
-        # writer itself will pack, so a DeviceReport never does D2H off
-        # the save thread.  dev_payload leaves materialize theirs in
-        # packed() below, which also runs synchronously.
-        tiered = (mgr.precision is not None
-                  and getattr(mgr.precision, "enabled", True))
+        self._by_name = {it[0]: it for it in self.items}
+        self._kinds_meta = None
+        # stage 1 (synchronous): pin host views / dispatch batched packs
+        self._views: Dict[str, np.ndarray] = {}
+        self._flats: Dict[str, Any] = {}          # xla: flat device leaves
+        self._payload_dev: Dict[str, Any] = {}    # xla: sharded leaf payloads
+        self._groups: Dict[Any, Dict[str, Any]] = {}
+        self._pin_and_dispatch()
+        # lazy job-side state
+        self._lock = threading.Lock()
+        self._entries: Dict[str, Any] = {}
+        self._payloads: Dict[str, np.ndarray] = {}   # host payload arrays
+        self._group_host: Dict[Any, np.ndarray] = {}
+        self._sources: Dict[str, Any] = {}
+        self._queues: Dict[str, QueueSource] = {}
+        self._group_sinks: Dict[Any, List] = {}
+        self._stream_specs: List[Tuple[str, Any]] = []
+        self._abort = threading.Event()
+        self.use_stream = False       # set by the manager before jobs run
+        self.stats: Optional[Dict[str, Any]] = None
+        self._stats_lock = threading.Lock()
+
+    # stats are shared by every level job of this save: guard the
+    # read-modify-write updates so concurrent jobs don't drop each other's
+    def stat_add(self, key: str, v) -> None:
+        with self._stats_lock:
+            self.stats[key] += v
+
+    def stage_max(self, name: str, v: float) -> None:
+        with self._stats_lock:
+            stages = self.stats["stages"]
+            stages[name] = max(stages.get(name, 0.0), v)
+
+    # ---------------- stage 1: pin + batched pack dispatch ----------------
+
+    def _pin_and_dispatch(self):
         for name, leaf, rep, kind in self.items:
-            if rep is None or kind == "dev_payload":
+            if kind == "host" or self.engine == "host":
+                self._views[name] = _host_snapshot(leaf)
                 continue
-            rep.mask
-            if tiered:
-                rep.magnitude
-        self.d2h = 0
-        self._payload_dev: Dict[str, Any] = {}
-        self._host_arr: Dict[str, np.ndarray] = {}
-        self._packed: Dict[str, PackedLeaf] = {}
-        self._legacy = None
-
-    # -- lazy materializers ----------------------------------------------
-
-    def payload_dev(self, name, leaf, rep):
-        if name not in self._payload_dev:
-            # device_mask(): resident for a DeviceReport (no H2D upload),
-            # a one-off upload for host reports (the original behaviour)
-            payload, counts, moved = pack_sharded_payload_device(
-                leaf, rep.device_mask(), **self.mgr._pack_opts)
-            self._payload_dev[name] = payload
-            self.d2h += moved
-        return self._payload_dev[name]
-
-    def host_arr(self, name, leaf) -> np.ndarray:
-        if name not in self._host_arr:
-            arr = np.asarray(leaf)
-            self._host_arr[name] = arr
-            self.d2h += arr.nbytes
-        return self._host_arr[name]
-
-    def packed(self, name, leaf, rep, kind) -> PackedLeaf:
-        """Full PackedLeaf for a base write — byte-identical to the host
-        pack path (tests/test_device_save.py)."""
-        if name in self._packed:
-            return self._packed[name]
-        if kind == "dev_payload":
-            if name in self._payload_dev:
-                # chain keeps the payload device-resident: one D2H from it
-                payload_h = np.asarray(self._payload_dev[name])
-                self.d2h += payload_h.nbytes
-            else:
-                # no chain: per-shard pack straight to host (PR-1 path)
-                payload_h, _, moved = pack_sharded_payload(
+            # xla engine, device kinds: dispatch now so the buffers are
+            # read (and thus safe against donation) before save() returns
+            if kind == "dev_raw":
+                self._flats[name] = jnp.ravel(leaf)
+                continue
+            if leaf_segments(leaf) is not None:
+                # sharded scrutinized leaf: per-shard on-device pack; the
+                # (critical-fraction-sized) payload stays device-resident
+                # and streams through stage 2 like a group payload
+                payload, _counts, _ = pack_sharded_payload_device(
                     leaf, rep.device_mask(), **self.mgr._pack_opts)
-                self.d2h += moved
-            p = pack_leaf_from_payload(name, leaf.shape, str(leaf.dtype),
-                                       rep.mask, payload_h)
-        else:
-            arr = self.host_arr(name, leaf)
+                self._payload_dev[name] = payload
+                continue
+            key = (str(leaf.dtype),
+                   tuple(sorted(str(d) for d in leaf.devices()))
+                   if hasattr(leaf, "devices") else ())
+            g = self._groups.setdefault(
+                key, {"names": [], "flats": [], "masks": [], "totals": []})
+            g["names"].append(name)
+            g["flats"].append(jnp.ravel(leaf))
+            g["masks"].append(rep.device_mask())
+            g["totals"].append(int(rep.critical))
+        for g in self._groups.values():
+            payload, counts = mask_ops.pack_group(
+                g["flats"], g["masks"], g["totals"],
+                use_kernel=self.mgr._pack_opts["use_kernel"],
+                interpret=self.mgr._pack_opts["interpret"])
+            ranges, lo = {}, 0
+            for n_, t in zip(g["names"], g["totals"]):
+                ranges[n_] = (lo, lo + t)
+                lo += t
+            g["payload"], g["counts"], g["ranges"] = payload, counts, ranges
+
+    # ---------------- accounting ------------------------------------------
+
+    def d2h_estimate(self, delta_only: bool = False) -> int:
+        """Bytes that cross (or on the host engine: would cross) the
+        device→host boundary for a base save — the critical payload for
+        packed leaves, full bytes otherwise.  Unlike the pre-pipeline
+        path, per-tile counts never move: payload sizes come from the
+        criticality report, so the old 4 B/tile counts D2H is gone.  For
+        delta-only saves the payload stays resident too and the jobs add
+        the measured flag/changed-chunk traffic on top of this floor."""
+        est = 0
+        for name, leaf, rep, kind in self.items:
+            if kind == "dev_payload":
+                if not delta_only:
+                    est += int(rep.critical) * np.dtype(leaf.dtype).itemsize
+            elif kind == "dev_raw":
+                est += int(leaf.nbytes) if not delta_only else 0
+            else:
+                est += int(self._views[name].nbytes)
+        return est
+
+    def kinds_meta(self):
+        if self._kinds_meta is None:
+            kinds = {name: kind for name, _, _, kind in self.items}
+            meta = {name: (tuple(getattr(leaf, "shape", ())),
+                           str(getattr(leaf, "dtype", "")))
+                    for name, leaf, _, _ in self.items}
+            self._kinds_meta = (kinds, meta)
+        return self._kinds_meta
+
+    def abort(self):
+        self._abort.set()
+
+    # ---------------- entries (manifest metas + payload sources) ----------
+
+    def entry(self, name: str):
+        with self._lock:
+            if name not in self._entries:
+                self._entries[name] = self._build_entry(*self._by_name[name])
+            return self._entries[name]
+
+    def entries_all(self) -> List[Any]:
+        return [self.entry(name) for name, *_ in self.items]
+
+    def _build_entry(self, name, leaf, rep, kind):
+        if kind == "host":
+            arr = self._views[name]
             mask = rep.mask if rep is not None else None
-            # magnitudes only feed precision tiers; don't force a
-            # DeviceReport's lazy magnitude D2H when tiering is off
-            tiered = (self.mgr.precision is not None
-                      and getattr(self.mgr.precision, "enabled", True))
-            mag = rep.magnitude if rep is not None and tiered else None
-            p = pack_leaf(name, arr, mask, mag, self.mgr.precision)
-        self._packed[name] = p
-        return p
-
-    def packed_all(self) -> Dict[str, PackedLeaf]:
-        return {name: self.packed(name, leaf, rep, kind)
-                for name, leaf, rep, kind in self.items}
-
-    # -- delta sources ----------------------------------------------------
-
-    def delta_source(self, name, leaf, rep, kind):
-        """Current payload for diffing: a device array (dev kinds) or a
-        host uint8 view of the packed payload (host kind)."""
-        if kind == "dev_payload":
-            return self.payload_dev(name, leaf, rep)
+            mag = rep.magnitude if (rep is not None and self.tiered) else None
+            return pack_leaf(name, arr, mask, mag, self.mgr.precision)
+        shape = tuple(leaf.shape)
+        dtype = str(leaf.dtype)
+        chunk = self.mgr._chunk_bytes
         if kind == "dev_raw":
-            return leaf
-        p = self.packed(name, leaf, rep, kind)
-        return np.frombuffer(p.payload, np.uint8)
+            stub = packed_leaf_stub(name, shape, dtype, None,
+                                    int(leaf.nbytes))
+            return StreamLeaf(stub, int(leaf.nbytes),
+                              self._raw_source(name, leaf, chunk))
+        # dev_payload: aux from the (cached) host mask/regions; the payload
+        # itself streams — byte-identical to pack_leaf on the host array.
+        mask = rep.mask
+        regions = rep.table.regions
+        plen = int(rep.critical) * np.dtype(leaf.dtype).itemsize
+        stub = packed_leaf_stub(name, shape, dtype, mask, plen,
+                                regions=regions)
+        return StreamLeaf(stub, plen,
+                          self._payload_source(name, leaf, rep, plen, chunk))
 
-    def chain_entries(self):
-        """(sources, kinds, meta) capturing this snapshot for the next
-        delta diff."""
-        sources, kinds, meta = {}, {}, {}
-        for name, leaf, rep, kind in self.items:
-            sources[name] = self.delta_source(name, leaf, rep, kind)
-            kinds[name] = kind
-            meta[name] = (tuple(getattr(leaf, "shape", ())),
-                          str(getattr(leaf, "dtype", "")))
-        return sources, kinds, meta
+    def _raw_source(self, name, leaf, chunk):
+        if self.engine == "host":
+            return ViewSource([self._views[name]], chunk)
+        flat = self._flats[name]
+        if not self.use_stream:
+            return ViewSource([fetch_to_host([flat], chunk)], chunk)
+        q = QueueSource(int(leaf.nbytes), abort=self._abort)
+        self._queues[name] = q
+        self._stream_specs.append(("flat", name))
+        return q
 
-    # -- legacy (non-chained) writer inputs -------------------------------
+    def _payload_source(self, name, leaf, rep, plen, chunk):
+        if self.engine == "host":
+            return ViewSource([self._host_payload(name, leaf, rep)], chunk)
+        if name in self._payload_dev:                  # sharded leaf
+            if not self.use_stream:
+                return ViewSource(
+                    [fetch_to_host([self._payload_dev[name]], chunk)], chunk)
+            q = QueueSource(plen, abort=self._abort)
+            self._queues[name] = q
+            self._stream_specs.append(("shard", name))
+            return q
+        key, (lo, hi) = self._group_of(name)
+        if not self.use_stream:
+            g = self._groups[key]
+            if key not in self._group_host:
+                self._group_host[key] = fetch_to_host([g["payload"]], chunk)
+            itemsize = np.dtype(leaf.dtype).itemsize
+            return ViewSource(
+                [self._group_host[key][lo * itemsize:hi * itemsize]], chunk)
+        q = QueueSource(plen, abort=self._abort)
+        self._queues[name] = q
+        self._group_sinks.setdefault(key, [])
+        if not self._group_sinks[key]:
+            self._stream_specs.append(("group", key))
+        self._group_sinks[key].append((q, lo, hi))
+        return q
 
-    def legacy(self):
-        """(host_state, prepacked) exactly as the pre-chain manager built
-        them: masked device leaves prepacked, everything else a host array
-        (the writer thread packs those, keeping pack cost off the critical
-        path)."""
-        if self._legacy is None:
-            prepacked: Dict[str, PackedLeaf] = {}
-            leaves = []
-            for name, leaf, rep, kind in self.items:
-                if kind == "dev_payload":
-                    prepacked[name] = self.packed(name, leaf, rep, kind)
-                    leaves.append(leaf)     # placeholder; writer skips it
-                else:
-                    leaves.append(self.host_arr(name, leaf))
-            host_state = jax.tree_util.tree_unflatten(self.treedef, leaves)
-            self._legacy = (host_state, prepacked or None)
-        return self._legacy
+    def _group_of(self, name):
+        for key, g in self._groups.items():
+            if name in g["ranges"]:
+                return key, g["ranges"][name]
+        raise KeyError(name)
 
-    def build_deltas(self, cs: _ChainState, chunk_bytes: int
-                     ) -> Dict[str, Any]:
-        """Diff every leaf against the chain's resident previous payloads;
-        device kinds diff on device (only changed chunks cross D2H).  A
-        leaf whose payload size changed falls back to a full entry."""
+    def _host_payload(self, name, leaf, rep) -> np.ndarray:
+        """Host-engine pack: one vectorized gather off the pinned view —
+        identical bytes to the device compaction path."""
+        if name not in self._payloads:
+            flat = self._views[name].reshape(-1)
+            self._payloads[name] = flat[rep.mask]
+        return self._payloads[name]
+
+    # ---------------- stage 2: transfer streams ---------------------------
+
+    def build_streams(self):
+        """(streams, write_order) for the single-consumer streaming mode:
+        one producer feeds every entry queue in exactly this order, and the
+        writer consumes entries in the same order — deadlock-free under
+        bounded queues regardless of pool size."""
+        idx_of = {it[0]: i for i, it in enumerate(self.items)}
+        chunk = self.mgr._chunk_bytes
+        streams, order = [], []
+        for what, key in self._stream_specs:
+            if what == "flat":
+                arr = self._flats[key]
+                sinks = [(self._queues[key], 0, int(arr.shape[0]))]
+                order.append(idx_of[key])
+            elif what == "shard":
+                arr = self._payload_dev[key]
+                sinks = [(self._queues[key], 0, int(arr.shape[0]))]
+                order.append(idx_of[key])
+            else:
+                g = self._groups[key]
+                arr = g["payload"]
+                sinks = self._group_sinks[key]
+                order.extend(idx_of[n]
+                             for n in g["names"] if n in self._queues)
+            streams.append(TransferStream(arr, sinks, chunk))
+        seen = set(order)
+        order += [i for i in range(len(self.items)) if i not in seen]
+        return streams, order
+
+    # ---------------- delta sources / diffs -------------------------------
+
+    def delta_source(self, name: str):
+        with self._lock:
+            if name not in self._sources:
+                self._sources[name] = self._build_source(*self._by_name[name])
+            return self._sources[name]
+
+    def _build_source(self, name, leaf, rep, kind):
+        if kind == "host":
+            p = self._entries.get(name)
+            if p is None:
+                p = self._build_entry(name, leaf, rep, kind)
+                self._entries[name] = p
+            return np.frombuffer(p.payload, np.uint8)
+        if kind == "dev_raw":
+            return (self._views[name] if self.engine == "host"
+                    else self._flats[name])
+        if self.engine == "host":
+            return self._host_payload(name, leaf, rep)
+        if name in self._payload_dev:
+            return self._payload_dev[name]
+        key, (lo, hi) = self._group_of(name)
+        return self._groups[key]["payload"][lo:hi]
+
+    def chain_sources(self) -> Dict[str, Any]:
+        return {name: self.delta_source(name) for name, *_ in self.items}
+
+    def build_deltas(self, prev_sources: Dict[str, Any], chunk_bytes: int):
+        """Diff every leaf against the chain's resident previous sources.
+        numpy-vs-numpy pairs diff on host (byte-identical to the device
+        encoder); device pairs diff on device so only changed chunks cross
+        D2H.  A leaf whose payload size/kind changed falls back to a full
+        entry.  Returns (entries dict, measured/equivalent moved bytes)."""
         out: Dict[str, Any] = {}
+        moved_total = 0
         for name, leaf, rep, kind in self.items:
-            prev = cs.sources[name]
-            curr = self.delta_source(name, leaf, rep, kind)
+            prev = prev_sources[name]
+            curr = self.delta_source(name)
             try:
-                if kind == "host":
+                host_pair = isinstance(curr, np.ndarray)
+                if host_pair != isinstance(prev, np.ndarray):
+                    raise ValueError("delta source kind changed")
+                if host_pair:
                     idx, pay = delta_encode_host(curr, prev, chunk_bytes)
+                    moved = pay.nbytes + (-(-int(curr.nbytes) // chunk_bytes))
                 else:
                     idx, pay, moved = mask_ops.delta_encode(
                         curr, prev, chunk_bytes=chunk_bytes,
                         **self.mgr._pack_opts)
-                    self.d2h += moved
             except (ValueError, TypeError):
-                # payload size changed, or a dtype the device bitcast
-                # can't diff (complex): write the leaf in full instead
-                out[name] = self.packed(name, leaf, rep, kind)
+                out[name] = self.entry(name)
                 continue
             pay_b = pay.tobytes()
             out[name] = DeltaLeaf(
@@ -268,21 +473,31 @@ class _SaveSnapshot:
                 dtype=str(getattr(leaf, "dtype", "")),
                 chunk_bytes=chunk_bytes, total_bytes=int(curr.nbytes),
                 idx=idx, payload=pay_b, checksum=zlib.crc32(pay_b))
-        return out
+            moved_total += int(moved)
+        return out, moved_total
 
 
 class CheckpointManager:
     """``save_mode``: "auto" packs scrutinized leaves on device whenever a
     report is available and precision tiering is off (tiers need host-side
     magnitudes); "device" forces the device path where eligible; "host"
-    always snapshots the full state to host first (the original behaviour).
+    always snapshots the full state to host first.
+
+    ``pipeline_engine``: "auto" picks the save-pipeline execution engine —
+    "host" on the CPU backend (zero-copy views + vectorized host gather),
+    "xla" on accelerators (batched ``pack_group`` + chunked D2H streaming).
+    Forcing "xla" on CPU exercises the accelerator code path (tests).
+
+    ``io_threads``: transfer/writer parallelism (default scales with the
+    largest level shard count).  ``io_chunk_bytes`` overrides the
+    D2H/write chunk size.
 
     ``restore_mode``: "auto"/"device" expand masked leaves on device
     (payload-only H2D via the mask_scatter kernel); "host" expands on host
-    and moves full arrays (the original behaviour).
+    and moves full arrays.
 
     Supports ``with CheckpointManager(...) as mgr:`` — exit drains in-flight
-    writes and shuts the writer pool down (``close()``).
+    writes and shuts the writer pools down (``close()``).
     """
 
     def __init__(self, levels: Sequence[Level],
@@ -293,11 +508,16 @@ class CheckpointManager:
                  restore_mode: str = "auto",
                  delta_chunk_bytes: int = mask_ops.DELTA_CHUNK_BYTES,
                  pack_use_kernel: Optional[bool] = None,
-                 pack_interpret: bool = False):
+                 pack_interpret: bool = False,
+                 io_threads: Optional[int] = None,
+                 pipeline_engine: str = "auto",
+                 io_chunk_bytes: Optional[int] = None):
         if save_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown save_mode {save_mode!r}")
         if restore_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown restore_mode {restore_mode!r}")
+        if pipeline_engine not in ("auto", "host", "xla"):
+            raise ValueError(f"unknown pipeline_engine {pipeline_engine!r}")
         self.levels = list(levels)
         for lv in self.levels:
             os.makedirs(lv.directory, exist_ok=True)
@@ -309,10 +529,26 @@ class CheckpointManager:
         self.delta_chunk_bytes = delta_chunk_bytes
         self._pack_opts = dict(use_kernel=pack_use_kernel,
                                interpret=pack_interpret)
+        if pipeline_engine == "auto":
+            pipeline_engine = ("host" if jax.default_backend() == "cpu"
+                               else "xla")
+        self._engine = pipeline_engine
+        max_shards = max((lv.shards for lv in self.levels), default=1)
+        self.io_threads = (int(io_threads) if io_threads is not None
+                           else max(2, max_shards))
+        if self.io_threads < 1:
+            raise ValueError("io_threads must be >= 1")
+        self._chunk_bytes = (int(io_chunk_bytes) if io_chunk_bytes
+                             else D2H_CHUNK_BYTES)
         self._report: Optional[CriticalityReport] = None
         self._saves = 0
+        # job pool: one pipeline job per level write (double-buffered, so
+        # at most len(levels) jobs are ever live)
         self._pool: Optional[cf.ThreadPoolExecutor] = \
-            cf.ThreadPoolExecutor(max_workers=2)
+            cf.ThreadPoolExecutor(max_workers=max(1, len(self.levels)))
+        # io pool: transfer producers + overlapped per-shard writes
+        self._io_pool: Optional[cf.ThreadPoolExecutor] = \
+            cf.ThreadPoolExecutor(max_workers=self.io_threads)
         self._inflight: Dict[str, cf.Future] = {}
         self._chains: Dict[str, _ChainState] = {}
         self._lock = threading.Lock()
@@ -330,14 +566,17 @@ class CheckpointManager:
 
     def close(self):
         """Drain in-flight writes (propagating any writer exception) and
-        shut the writer pool down.  Idempotent; ``save`` raises afterwards."""
+        shut the pools down.  Idempotent; ``save`` raises afterwards."""
         if self._pool is None:
             return
         try:
             self.wait()
         finally:
             self._pool.shutdown(wait=True)
+            if self._io_pool is not None:
+                self._io_pool.shutdown(wait=True)
             self._pool = None
+            self._io_pool = None
 
     def wait(self):
         """Block until every in-flight write lands.  Clears the in-flight
@@ -389,31 +628,42 @@ class CheckpointManager:
     def _delta_ok(self, lv: Level, cs: Optional[_ChainState],
                   snap: _SaveSnapshot) -> bool:
         """A delta save is legal only while the chain's world is frozen:
-        same report (masks), same leaves, chain not past max_chain."""
-        if cs is None or len(cs.chain) >= lv.max_chain:
+        same report (masks), same leaves, chain not past max_chain, and the
+        previous save's sources resolved (its job has landed)."""
+        if cs is None or cs.sources is None or len(cs.chain) >= lv.max_chain:
             return False
         if snap.report is not cs.report:
             return False
-        if len(snap.items) != len(cs.kinds):
-            return False
-        for name, leaf, rep, kind in snap.items:
-            if cs.kinds.get(name) != kind:
-                return False
-            if cs.meta.get(name) != (tuple(getattr(leaf, "shape", ())),
-                                     str(getattr(leaf, "dtype", ""))):
-                return False
-        return True
+        kinds, meta = snap.kinds_meta()
+        return kinds == cs.kinds and meta == cs.meta
 
     def save(self, step: int, state, block: bool = False) -> List[cf.Future]:
-        """Snapshot (device-pack or host-copy), then write async per level —
-        a full base or a delta against the level's resident chain."""
+        """Snapshot (pin views / dispatch the batched device pack), plan a
+        base or delta write per firing level, and hand the rest to the
+        pipeline — the caller is only blocked for the snapshot."""
+        t0 = time.perf_counter()
         if self._pool is None:
             raise RuntimeError("CheckpointManager is closed")
         report = self.maybe_report(state)
         self._saves += 1
+        t1 = time.perf_counter()
         snap = _SaveSnapshot(self, state, report)
         level_stats: Dict[str, Any] = {}
-        futs = []
+        stats = {
+            "mode": "device" if snap.device else "host",
+            "engine": snap.engine,
+            "d2h_bytes": 0,
+            "full_bytes": int(snap.full_bytes),
+            "packed_leaves": sum(1 for *_, k in snap.items
+                                 if k == "dev_payload"),
+            "levels": level_stats,
+            "stages": {"snapshot_s": time.perf_counter() - t1},
+            "blocked_s": 0.0,
+        }
+        self.last_save_stats = stats
+        snap.stats = stats
+        plans: List[Tuple[Level, Callable[[], str]]] = []
+        any_base = False
         for lv in self.levels:
             if step % lv.interval:
                 continue
@@ -423,76 +673,54 @@ class CheckpointManager:
 
             cs = self._chains.get(lv.directory)
             if lv.max_chain > 0 and self._delta_ok(lv, cs, snap):
-                deltas = snap.build_deltas(cs, self.delta_chunk_bytes)
+                prev_sources = cs.sources
+                kinds, meta = snap.kinds_meta()
+                cs.kinds, cs.meta = dict(kinds), dict(meta)
+                cs.sources = None          # resolved by this save's job
                 chain = [cs.base_step] + list(cs.chain)
-                sources, kinds, meta = snap.chain_entries()
-                cs.sources, cs.kinds, cs.meta = sources, kinds, meta
                 cs.chain.append(step)
-                delta_bytes = sum(d.nbytes for d in deltas.values())
                 level_stats[lv.directory] = {
                     "kind": "delta", "base_step": cs.base_step,
-                    "chain_len": len(cs.chain),
-                    "delta_bytes": int(delta_bytes)}
+                    "chain_len": len(cs.chain)}
 
-                def write(lv=lv, step=step, deltas=deltas, chain=chain,
-                          cs=cs):
-                    try:
-                        path = save_delta_checkpoint(
-                            lv.directory, step, deltas, chain,
-                            shards=lv.shards, parity=lv.parity)
-                    except BaseException:
-                        self._drop_chain(lv, cs)
-                        raise
-                    self._gc(lv)
-                    return path
+                def write(lv=lv, step=step, snap=snap, cs=cs, chain=chain,
+                          prev_sources=prev_sources):
+                    return self._run_delta(lv, step, snap, cs, chain,
+                                           prev_sources)
             elif lv.max_chain > 0:
-                # chain_entries first: it pins payloads device-resident so
-                # packed_all reuses them instead of re-packing to host
-                sources, kinds, meta = snap.chain_entries()
-                prepacked = snap.packed_all()
+                kinds, meta = snap.kinds_meta()
                 cs = _ChainState(base_step=step, chain=[], report=report,
-                                 sources=sources, kinds=kinds, meta=meta)
+                                 kinds=dict(kinds), meta=dict(meta))
                 self._chains[lv.directory] = cs
                 level_stats[lv.directory] = {"kind": "base"}
+                any_base = True
 
-                def write(lv=lv, step=step, state=state,
-                          prepacked=prepacked, cs=cs):
-                    try:
-                        path = save_checkpoint(lv.directory, step, state,
-                                               precision=self.precision,
-                                               shards=lv.shards,
-                                               parity=lv.parity,
-                                               prepacked=prepacked)
-                    except BaseException:
-                        self._drop_chain(lv, cs)
-                        raise
-                    self._gc(lv)
-                    return path
+                def write(lv=lv, step=step, snap=snap, cs=cs):
+                    return self._run_base(lv, step, snap, capture=cs)
             else:
-                host_state, prepacked = snap.legacy()
                 level_stats[lv.directory] = {"kind": "base"}
+                any_base = True
 
-                def write(lv=lv, host_state=host_state, report=report,
-                          step=step, prepacked=prepacked):
-                    path = save_checkpoint(lv.directory, step, host_state,
-                                           report=report,
-                                           precision=self.precision,
-                                           shards=lv.shards,
-                                           parity=lv.parity,
-                                           prepacked=prepacked)
-                    self._gc(lv)
-                    return path
+                def write(lv=lv, step=step, snap=snap):
+                    return self._run_base(lv, step, snap, capture=None)
 
+            plans.append((lv, write))
+
+        # chunked D2H streaming needs a single consumer: enabled for a
+        # lone base write on the xla engine (several levels writing the
+        # same step share materialized payloads instead)
+        snap.use_stream = (snap.engine == "xla"
+                           and self._io_pool is not None
+                           and any_base and len(plans) == 1)
+        stats["d2h_bytes"] = (snap.d2h_estimate(delta_only=not any_base)
+                              if plans else 0)
+
+        futs = []
+        for lv, write in plans:
             fut = self._pool.submit(write)
             self._inflight[lv.directory] = fut
             futs.append(fut)
-        self.last_save_stats = {
-            "mode": "device" if snap.device else "host",
-            "d2h_bytes": int(snap.d2h),
-            "full_bytes": int(snap.full_bytes),
-            "packed_leaves": sum(1 for *_, k in snap.items
-                                 if k == "dev_payload"),
-            "levels": level_stats}
+        stats["blocked_s"] = time.perf_counter() - t0
         if block:
             errs = []
             for f in futs:
@@ -509,6 +737,77 @@ class CheckpointManager:
             if errs:
                 raise errs[0]
         return futs
+
+    # --- pipeline jobs (writer threads) -----------------------------------
+
+    def _submit_io(self):
+        return self._io_pool.submit if self._io_pool is not None else None
+
+    def _run_base(self, lv: Level, step: int, snap: _SaveSnapshot,
+                  capture: Optional[_ChainState]) -> str:
+        try:
+            t0 = time.perf_counter()
+            entries = snap.entries_all()
+            if capture is not None:
+                capture.sources = snap.chain_sources()
+            snap.stage_max("pack_s", time.perf_counter() - t0)
+            producer = None
+            order = None
+            if snap.use_stream:
+                streams, order = snap.build_streams()
+                if streams:
+                    producer = self._io_pool.submit(run_transfers, streams)
+            err: Optional[BaseException] = None
+            t1 = time.perf_counter()
+            path = None
+            try:
+                path = save_checkpoint(lv.directory, step, None,
+                                       precision=self.precision,
+                                       shards=lv.shards, parity=lv.parity,
+                                       stream=entries,
+                                       submit=self._submit_io(),
+                                       order=order)
+            except BaseException as e:   # noqa: BLE001 - re-raised below
+                err = e
+                snap.abort()             # unblock a producer on full queues
+            if producer is not None:
+                try:
+                    producer.result()
+                except BaseException as pe:  # noqa: BLE001
+                    if err is None:
+                        err = pe
+            if err is not None:
+                raise err
+            snap.stage_max("write_s", time.perf_counter() - t1)
+        except BaseException:
+            if capture is not None:
+                self._drop_chain(lv, capture)
+            raise
+        self._gc(lv)
+        return path
+
+    def _run_delta(self, lv: Level, step: int, snap: _SaveSnapshot,
+                   cs: _ChainState, chain: List[int],
+                   prev_sources: Dict[str, Any]) -> str:
+        try:
+            t0 = time.perf_counter()
+            deltas, moved = snap.build_deltas(prev_sources,
+                                              self.delta_chunk_bytes)
+            cs.sources = snap.chain_sources()
+            snap.stat_add("d2h_bytes", int(moved))
+            snap.stage_max("delta_s", time.perf_counter() - t0)
+            snap.stats["levels"][lv.directory]["delta_bytes"] = int(
+                sum(_entry_nbytes(d) for d in deltas.values()))
+            t1 = time.perf_counter()
+            path = save_delta_checkpoint(lv.directory, step, deltas, chain,
+                                         shards=lv.shards, parity=lv.parity,
+                                         submit=self._submit_io())
+            snap.stage_max("write_s", time.perf_counter() - t1)
+        except BaseException:
+            self._drop_chain(lv, cs)
+            raise
+        self._gc(lv)
+        return path
 
     def _drop_chain(self, lv: Level, cs: _ChainState):
         """A chained write failed on the writer thread: later saves must
@@ -616,7 +915,6 @@ class CheckpointManager:
         shard_flat = (jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: hasattr(x, "spec"))
             if shardings is not None else [None] * len(flat))
-        import jax.numpy as jnp
 
         h2d = 0
         full = 0

@@ -236,6 +236,45 @@ def pack_leaf_from_payload(name: str, shape: Tuple[int, ...], dtype: str,
                       payload=payload, checksum=zlib.crc32(payload))
 
 
+def packed_leaf_stub(name: str, shape: Tuple[int, ...], dtype: str,
+                     mask: Optional[np.ndarray], payload_nbytes: int,
+                     regions: Optional[np.ndarray] = None) -> PackedLeaf:
+    """Manifest-side ``PackedLeaf`` for a payload that streams later.
+
+    Same encoding/aux decision as :func:`pack_leaf_from_payload`, but the
+    payload bytes are *not* attached — the pipelined save engine streams
+    them chunk-by-chunk to the shard writer, which computes the checksum
+    incrementally and finalizes the manifest entry.  ``payload`` is empty
+    and ``checksum`` 0 until then.
+
+    ``regions`` may pass the leaf's already-computed region table (the
+    criticality report caches one) to skip re-scanning the mask; it must
+    equal ``mask_to_regions(mask)``.
+    """
+    itemsize = _np_dtype(dtype).itemsize
+    if mask is None:
+        return PackedLeaf(name=name, shape=tuple(shape), dtype=dtype,
+                          encoding="full", aux=b"", num_regions=1,
+                          payload=b"", checksum=0)
+    mask = np.asarray(mask, dtype=bool).reshape(-1)
+    if regions is None:
+        regions = mask_to_regions(mask)
+    count = int(regions[:, 1].sum() - regions[:, 0].sum()) if len(regions) \
+        else 0
+    if count == mask.size:
+        return PackedLeaf(name=name, shape=tuple(shape), dtype=dtype,
+                          encoding="full", aux=b"", num_regions=1,
+                          payload=b"", checksum=0)
+    if payload_nbytes != count * itemsize:
+        raise ValueError(
+            f"payload for leaf {name} is {payload_nbytes} bytes; mask marks "
+            f"{count} critical elements of {itemsize} bytes")
+    encoding, aux = _choose_aux(mask, regions)
+    return PackedLeaf(name=name, shape=tuple(shape), dtype=dtype,
+                      encoding=encoding, aux=aux, num_regions=len(regions),
+                      payload=b"", checksum=0)
+
+
 # --------------------------------------------------------------------------
 # Differential (delta) leaves: byte-chunk patches against a base payload
 # --------------------------------------------------------------------------

@@ -1,0 +1,260 @@
+"""Streaming primitives for the pipelined asynchronous save engine.
+
+The save path is a three-stage pipeline (manager.py orchestrates it):
+
+    stage 1 (device)   batched pack  — one compiled call per (device, dtype)
+                       group compacts every scrutinized leaf
+    stage 2 (transfer) chunked D2H   — fixed-size payload chunks fetched via
+                       non-blocking ``copy_to_host_async`` on double-buffered
+                       slices, overlapping transfer with device work, disk
+                       I/O, and the training step
+    stage 3 (I/O)      streamed writes — store._write_stream consumes chunk
+                       sources and streams them to per-shard files with
+                       incremental CRC (no full-payload host materialization)
+
+This module owns the stage-2 plumbing: byte-chunk *sources* that the store
+writer consumes, and the chunked device→host fetch loop that feeds them.
+
+Two execution engines share these primitives:
+
+- **host engine** (CPU backend): device memory *is* host memory, so
+  ``np.asarray`` of a leaf is a zero-copy view; "transfer" degenerates to
+  handing read-only views to the writer (``ViewSource``) and the pack is a
+  vectorized numpy gather.  Crucially the views taken synchronously in
+  ``save()`` pin the underlying buffers, so a training step that donates or
+  replaces the state right after ``save(block=False)`` cannot corrupt the
+  in-flight checkpoint (snapshot isolation; tests/test_async_save.py).
+- **xla engine** (TPU/GPU, or forced for tests): stage 1 runs
+  ``kernels/mask_pack.pack_group`` and stage 2 streams the device payload in
+  ``D2H_CHUNK_BYTES`` chunks through bounded ``QueueSource`` queues — the
+  writer starts on the first chunk while the rest is still in flight.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Fixed D2H / write chunk size.  Big enough to amortize per-chunk dispatch,
+# small enough that double buffering bounds host memory for the stream.
+D2H_CHUNK_BYTES = 4 << 20
+
+# Bounded depth of each QueueSource (chunks in flight between the transfer
+# thread and the writer): backpressure instead of unbounded host buffering.
+QUEUE_CHUNKS = 4
+
+
+def as_u8(arr: np.ndarray) -> np.ndarray:
+    """Flat uint8 (bitcast) view of a host array — zero-copy for any
+    contiguous dtype (bf16 included), so writer/CRC code only ever sees
+    plain byte buffers."""
+    arr = np.asarray(arr)
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    return arr.reshape(-1).view(np.uint8)
+
+
+class ByteSource:
+    """A length-known, ordered stream of byte chunks for one manifest entry.
+
+    ``ready`` sources can be consumed more than once and in any order
+    (host views / bytes); streaming sources (``QueueSource``) are
+    single-consumer and must be drained in global entry order — the store
+    writer picks its consumption strategy accordingly.
+    """
+
+    nbytes: int = 0
+    ready: bool = True
+
+    def chunks(self) -> Iterator[Any]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class BytesSource(ByteSource):
+    def __init__(self, data: bytes):
+        self.data = data
+        self.nbytes = len(data)
+
+    def chunks(self):
+        if self.data:
+            yield self.data
+
+
+class ViewSource(ByteSource):
+    """Zero-copy chunks over host arrays (one or more segments, in order).
+    The source holds references to the arrays, pinning zero-copy views of
+    device buffers for the lifetime of the write."""
+
+    def __init__(self, arrays: Sequence[np.ndarray],
+                 chunk_bytes: int = D2H_CHUNK_BYTES):
+        self.views = [as_u8(a) for a in arrays]
+        self.chunk_bytes = int(chunk_bytes)
+        self.nbytes = sum(v.nbytes for v in self.views)
+
+    def chunks(self):
+        for v in self.views:
+            for off in range(0, v.nbytes, self.chunk_bytes):
+                yield v[off:off + self.chunk_bytes]
+
+
+class QueueSource(ByteSource):
+    """Single-consumer bounded chunk queue fed by a transfer thread.
+
+    The producer calls ``put`` per chunk then ``close``; on error it calls
+    ``fail(exc)`` so a blocked consumer raises instead of hanging.  When the
+    *consumer* dies first, the shared ``abort`` event unblocks a producer
+    stuck on a full queue (the put raises and the transfer loop fails the
+    remaining sinks).
+    """
+
+    _DONE = object()
+    ready = False
+
+    def __init__(self, nbytes: int, maxsize: int = QUEUE_CHUNKS,
+                 abort: Optional[threading.Event] = None):
+        self.nbytes = int(nbytes)
+        self.abort = abort
+        self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
+
+    def _put(self, item) -> None:
+        while True:
+            if self.abort is not None and self.abort.is_set():
+                raise RuntimeError("save pipeline aborted: writer failed")
+            try:
+                self._q.put(item, timeout=0.2)
+                return
+            except queue.Full:
+                continue
+
+    def put(self, chunk) -> None:
+        self._put(chunk)
+
+    def close(self) -> None:
+        self._put(self._DONE)
+
+    def fail(self, exc: BaseException) -> None:
+        # must land even on a full queue whose consumer is gone: evict.
+        while True:
+            try:
+                self._q.put_nowait(exc)
+                return
+            except queue.Full:
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    pass
+
+    def chunks(self):
+        while True:
+            item = self._q.get()
+            if item is self._DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+
+
+def _copy_to_host_async(x) -> None:
+    fn = getattr(x, "copy_to_host_async", None)
+    if fn is not None:
+        try:
+            fn()
+        except Exception:       # noqa: BLE001 - async copy is best-effort
+            pass
+
+
+def device_chunks(arr, chunk_bytes: int) -> Iterator[np.ndarray]:
+    """Walk a flat device array in fixed-size element chunks with
+    double-buffered D2H (``copy_to_host_async`` on chunk i+1 while chunk i
+    is consumed), yielding host uint8 views — the one prefetch loop both
+    the streaming and the materializing transfer paths share."""
+    n = int(arr.shape[0])
+    itemsize = np.dtype(arr.dtype).itemsize
+    chunk_elems = max(1, int(chunk_bytes) // itemsize)
+    slices = [arr[i:i + chunk_elems] for i in range(0, n, chunk_elems)]
+    for s in slices[:1]:
+        _copy_to_host_async(s)
+    for i, s in enumerate(slices):
+        if i + 1 < len(slices):
+            _copy_to_host_async(slices[i + 1])
+        yield as_u8(np.asarray(s))
+
+
+class TransferStream:
+    """One flat device array whose bytes feed one or more entry queues.
+
+    ``sinks`` maps element ranges of the flat array to ``QueueSource``s (in
+    order, covering [0, n)); ``run`` walks the ``device_chunks`` stream and
+    splits each host chunk across the sink boundaries it covers.
+    """
+
+    def __init__(self, dev_flat, sinks: List[Tuple[QueueSource, int, int]],
+                 chunk_bytes: int = D2H_CHUNK_BYTES):
+        self.dev_flat = dev_flat
+        self.sinks = sinks
+        self.chunk_bytes = int(chunk_bytes)
+
+    def run(self) -> int:
+        """Stream the array into its sinks; returns bytes moved."""
+        itemsize = np.dtype(self.dev_flat.dtype).itemsize
+        moved = 0
+        si = 0                                  # current sink index
+        sink_off = 0                            # elements already fed to it
+        for host in device_chunks(self.dev_flat, self.chunk_bytes):
+            moved += host.nbytes
+            off = 0                             # bytes consumed of the chunk
+            while off < host.nbytes and si < len(self.sinks):
+                sink, lo, hi = self.sinks[si]
+                take = min((hi - lo - sink_off) * itemsize, host.nbytes - off)
+                if take > 0:
+                    sink.put(host[off:off + take])
+                    off += take
+                    sink_off += take // itemsize
+                if lo + sink_off >= hi:
+                    sink.close()
+                    si += 1
+                    sink_off = 0
+        while si < len(self.sinks):             # zero-length trailing sinks
+            self.sinks[si][0].close()
+            si += 1
+        return moved
+
+
+def fetch_to_host(dev_flats: Sequence[Any],
+                  chunk_bytes: int = D2H_CHUNK_BYTES) -> np.ndarray:
+    """Materialize flat device segments into one contiguous host uint8
+    buffer via the same double-buffered chunked fetch (used when a stream
+    cannot be consumed exactly once, e.g. several levels writing the same
+    step)."""
+    total = sum(int(a.shape[0]) * np.dtype(a.dtype).itemsize
+                for a in dev_flats)
+    out = np.empty(total, np.uint8)
+    off = 0
+    for arr in dev_flats:
+        for h in device_chunks(arr, chunk_bytes):
+            out[off:off + h.nbytes] = h
+            off += h.nbytes
+    return out
+
+
+def run_transfers(streams: Sequence[TransferStream]) -> int:
+    """Producer loop: feed every stream's sinks in entry order (matching the
+    writer's consumption order — one producer for the whole save keeps the
+    bounded queues deadlock-free regardless of pool size).  On error every
+    unclosed sink is failed so the consumer raises instead of hanging."""
+    moved = 0
+    try:
+        for st in streams:
+            moved += st.run()
+    except BaseException as e:
+        for st in streams:
+            for sink, _, _ in st.sinks:
+                try:
+                    sink.fail(e)
+                except Exception:   # noqa: BLE001 - best-effort unblock
+                    pass
+        raise
+    return moved

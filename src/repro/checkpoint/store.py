@@ -43,6 +43,7 @@ reconstruction.
 from __future__ import annotations
 
 import base64
+import dataclasses
 import json
 import os
 import shutil
@@ -54,6 +55,7 @@ import numpy as np
 
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
                                       pack_leaf, unpack_leaf)
+from repro.checkpoint.pipeline import BytesSource
 from repro.core.criticality import CriticalityReport
 from repro.core.policy import PrecisionPolicy
 
@@ -137,49 +139,160 @@ def _delta_entry(d: DeltaLeaf) -> Dict[str, Any]:
     }
 
 
-def _write_entries(root: str, step: int,
-                   entries: List[Tuple[Dict[str, Any], bytes]],
-                   shards: int, parity: bool,
-                   manifest_extra: Optional[Dict[str, Any]] = None) -> str:
-    """Shared atomic writer: round-robin shard the (meta, payload) entries,
-    write parity, manifest, then rename into place.  Clears any stale
-    ``.tmp_step_<N>`` from a crashed writer first."""
+@dataclasses.dataclass
+class StreamLeaf:
+    """A manifest entry whose payload bytes are *streamed* to the writer.
+
+    ``leaf`` carries the manifest metadata (``packing.packed_leaf_stub`` —
+    payload empty, checksum 0); ``source`` yields the payload's byte chunks
+    in order (``pipeline.ByteSource``), ``length`` is known upfront so the
+    shard layout is computed before a single byte arrives.  The writer
+    CRCs chunks incrementally and finalizes the manifest entry — on-disk
+    bytes are identical to a buffered ``PackedLeaf`` write.
+    """
+    leaf: PackedLeaf
+    length: int
+    source: Any
+
+
+def _assign_shards(lengths: List[int], shards: int):
+    """Greedy round-robin layout (identical to the original buffered
+    writer): entries by descending size onto the currently-smallest shard;
+    offsets follow entry-index order within each shard."""
+    order = sorted(range(len(lengths)), key=lambda i: -lengths[i])
+    shard_of = {}
+    shard_sizes = [0] * shards
+    for i in order:
+        k = int(np.argmin(shard_sizes))
+        shard_of[i] = k
+        shard_sizes[k] += lengths[i]
+    offsets = [0] * len(lengths)
+    cursor = [0] * shards
+    for i, n in enumerate(lengths):
+        k = shard_of[i]
+        offsets[i] = cursor[k]
+        cursor[k] += n
+    return shard_of, offsets, shard_sizes
+
+
+def _pwrite_all(fd: int, buf, off: int) -> None:
+    mv = memoryview(buf)
+    if mv.format != "B":
+        mv = mv.cast("B")
+    while mv.nbytes:
+        n = os.pwrite(fd, mv, off)
+        off += n
+        mv = mv[n:]
+
+
+_PARITY_CHUNK = 4 << 20
+
+
+def _write_parity(tmp: str, shards: int, sizes: List[int]) -> None:
+    """Partner-XOR parity, streamed from the written shard files in fixed
+    chunks (byte-identical to XOR-ing whole buffers with zero padding)."""
+    for k in range(shards):
+        a_path = os.path.join(tmp, f"shard_{k}.bin")
+        b_path = os.path.join(tmp, f"shard_{(k + 1) % shards}.bin")
+        n = max(sizes[k], sizes[(k + 1) % shards])
+        with open(a_path, "rb") as fa, open(b_path, "rb") as fb, \
+                open(os.path.join(tmp, f"parity_{k}.bin"), "wb") as out:
+            done = 0
+            while done < n:
+                m = min(_PARITY_CHUNK, n - done)
+                pa = np.frombuffer(fa.read(m).ljust(m, b"\0"), np.uint8)
+                pb = np.frombuffer(fb.read(m).ljust(m, b"\0"), np.uint8)
+                out.write((pa ^ pb).tobytes())
+                done += m
+
+
+def _write_stream(root: str, step: int,
+                  items: List[Tuple[Dict[str, Any], int, Any]],
+                  shards: int, parity: bool,
+                  manifest_extra: Optional[Dict[str, Any]] = None,
+                  submit=None, order: Optional[List[int]] = None) -> str:
+    """Stage-3 writer of the save pipeline: stream (meta, length, source)
+    entries into per-shard files with incremental CRC, then parity,
+    manifest, and the atomic rename.  Lengths are known upfront, so the
+    shard layout (identical to the original buffered writer) is fixed
+    before the first chunk arrives and every chunk is ``pwrite``-placed at
+    its final offset — no full-payload host materialization.
+
+    ``submit``: optional executor submit for overlapped per-shard writes —
+    used only when every source is re-consumable (``ready``); single-pass
+    queue-fed sources are drained serially in ``order`` (the transfer
+    producer's feed order) to stay deadlock-free under bounded queues.
+
+    A crash/exception mid-write leaves ``.tmp_step_<N>`` behind (never the
+    final dir); the next write of the same step clears it and the
+    manager's retention sweep collects orphans.
+    """
     tmp = os.path.join(root, f".tmp_step_{step}")
     final = os.path.join(root, f"step_{step}")
     if os.path.exists(tmp):            # crashed writer leftovers: never merge
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    # round-robin shard assignment by descending size
-    order = sorted(range(len(entries)), key=lambda i: -len(entries[i][1]))
-    shard_of = {}
-    shard_sizes = [0] * shards
-    for i in order:
-        k = int(np.argmin(shard_sizes))
-        shard_of[i] = k
-        shard_sizes[k] += len(entries[i][1])
+    lengths = [int(n) for _, n, _ in items]
+    shard_of, offsets, shard_sizes = _assign_shards(lengths, shards)
+    crcs = [0] * len(items)
 
-    buffers = [bytearray() for _ in range(shards)]
+    fds = [os.open(os.path.join(tmp, f"shard_{k}.bin"),
+                   os.O_CREAT | os.O_WRONLY, 0o666) for k in range(shards)]
+    try:
+        for k, fd in enumerate(fds):
+            os.ftruncate(fd, shard_sizes[k])
+
+        def write_entry(i: int) -> None:
+            fd = fds[shard_of[i]]
+            off = offsets[i]
+            crc = 0
+            for chunk in items[i][2].chunks():
+                _pwrite_all(fd, chunk, off)
+                nb = memoryview(chunk).nbytes
+                crc = zlib.crc32(chunk, crc)
+                off += nb
+            if off - offsets[i] != lengths[i]:
+                raise IOError(
+                    f"stream for leaf {items[i][0].get('name')} produced "
+                    f"{off - offsets[i]} bytes; manifest says {lengths[i]}")
+            crcs[i] = crc
+
+        all_ready = all(getattr(s, "ready", True) for _, _, s in items)
+        if submit is not None and all_ready and shards > 1:
+            by_shard: Dict[int, List[int]] = {}
+            for i in range(len(items)):
+                by_shard.setdefault(shard_of[i], []).append(i)
+
+            def run(idxs):
+                for i in idxs:
+                    write_entry(i)
+
+            futs = [submit(run, idxs) for idxs in by_shard.values()]
+            errs = []
+            for f in futs:
+                try:
+                    f.result()
+                except Exception as e:      # noqa: BLE001 - re-raised below
+                    errs.append(e)
+            if errs:
+                raise errs[0]
+        else:
+            for i in (order if order is not None else range(len(items))):
+                write_entry(i)
+
+        if parity and shards > 1:
+            _write_parity(tmp, shards, shard_sizes)
+    finally:
+        for fd in fds:
+            os.close(fd)
+
     index = []
-    for i, (meta, payload) in enumerate(entries):
-        k = shard_of[i]
+    for i, (meta, _, _) in enumerate(items):
         meta = dict(meta)
-        meta.update(shard=k, offset=len(buffers[k]), length=len(payload))
-        buffers[k].extend(payload)
+        meta["checksum"] = crcs[i]
+        meta.update(shard=shard_of[i], offset=offsets[i], length=lengths[i])
         index.append(meta)
-
-    for k, buf in enumerate(buffers):
-        with open(os.path.join(tmp, f"shard_{k}.bin"), "wb") as f:
-            f.write(bytes(buf))
-    if parity and shards > 1:
-        for k in range(shards):
-            a, b = bytes(buffers[k]), bytes(buffers[(k + 1) % shards])
-            n = max(len(a), len(b))
-            pa = np.frombuffer(a.ljust(n, b"\0"), np.uint8)
-            pb = np.frombuffer(b.ljust(n, b"\0"), np.uint8)
-            with open(os.path.join(tmp, f"parity_{k}.bin"), "wb") as f:
-                f.write((pa ^ pb).tobytes())
-
     manifest = {"step": step, "shards": shards, "parity": parity,
                 "leaves": index,
                 "payload_bytes": int(sum(shard_sizes))}
@@ -194,11 +307,37 @@ def _write_entries(root: str, step: int,
     return final
 
 
+def _as_stream_item(e) -> Tuple[Dict[str, Any], int, Any]:
+    """Normalize a write entry — ``PackedLeaf`` / ``DeltaLeaf`` (buffered
+    bytes) or ``StreamLeaf`` (chunk stream) — to (meta, length, source)."""
+    if isinstance(e, StreamLeaf):
+        return _packed_entry(e.leaf), int(e.length), e.source
+    if isinstance(e, DeltaLeaf):
+        payload = bytes(e.payload)
+        return _delta_entry(e), len(payload), BytesSource(payload)
+    payload = bytes(e.payload)
+    return _packed_entry(e), len(payload), BytesSource(payload)
+
+
+def _write_entries(root: str, step: int,
+                   entries: List[Tuple[Dict[str, Any], bytes]],
+                   shards: int, parity: bool,
+                   manifest_extra: Optional[Dict[str, Any]] = None) -> str:
+    """Buffered-entry writer, now a thin wrapper over the streaming one:
+    identical bytes by construction (single write path)."""
+    items = [(meta, len(payload), BytesSource(bytes(payload)))
+             for meta, payload in entries]
+    return _write_stream(root, step, items, shards, parity,
+                         manifest_extra=manifest_extra)
+
+
 def save_checkpoint(root: str, step: int, state: Any,
                     report: Optional[CriticalityReport] = None,
                     precision: Optional[PrecisionPolicy] = None,
                     shards: int = 1, parity: bool = False,
-                    prepacked: Optional[Dict[str, PackedLeaf]] = None) -> str:
+                    prepacked: Optional[Dict[str, PackedLeaf]] = None,
+                    stream: Optional[List[Any]] = None,
+                    submit=None, order: Optional[List[int]] = None) -> str:
     """Write ``state`` (pytree) at ``step``; if ``report`` is given, only
     critical elements are stored (the paper's reduced checkpoint).
 
@@ -206,7 +345,21 @@ def save_checkpoint(root: str, step: int, state: Any,
     save path builds these from device-gathered payloads); those leaves are
     written as-is and their state entries are never touched — no D2H copy
     happens here for them.
+
+    ``stream`` (the pipelined save engine): an ordered list of
+    ``PackedLeaf`` / ``StreamLeaf`` manifest entries replacing ``state``
+    entirely — payloads are streamed to the shard files as their chunks
+    arrive (``submit``/``order`` are forwarded to the stream writer).  The
+    on-disk result is byte-identical to the buffered path.
     """
+    if stream is not None:
+        items = [_as_stream_item(e) for e in stream]
+        full_bytes = int(sum(
+            int(np.prod(m["shape"] or [1])) * np.dtype(m["dtype"]).itemsize
+            for m, _, _ in items))
+        return _write_stream(root, step, items, shards, parity,
+                             manifest_extra={"full_bytes": full_bytes},
+                             submit=submit, order=order)
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
     packed: List[PackedLeaf] = []
     for path, leaf in flat:
@@ -237,24 +390,22 @@ def save_checkpoint(root: str, step: int, state: Any,
 def save_delta_checkpoint(root: str, step: int,
                           deltas: Dict[str, Union[DeltaLeaf, PackedLeaf]],
                           chain: List[int],
-                          shards: int = 1, parity: bool = False) -> str:
+                          shards: int = 1, parity: bool = False,
+                          submit=None) -> str:
     """Write a differential checkpoint: per leaf either a ``DeltaLeaf``
-    patch against the predecessor step's payload or a full ``PackedLeaf``
-    replacement.  ``chain`` lists the predecessor steps in apply order
-    (base first); every one must be retained until this step is collected.
+    patch against the predecessor step's payload, a full ``PackedLeaf``
+    replacement, or a ``StreamLeaf`` (a full replacement whose payload
+    streams in chunks).  ``chain`` lists the predecessor steps in apply
+    order (base first); every one must be retained until this step is
+    collected.
     """
     if not chain:
         raise ValueError("delta checkpoint needs a non-empty chain")
-    entries = []
-    for d in deltas.values():
-        if isinstance(d, DeltaLeaf):
-            entries.append((_delta_entry(d), bytes(d.payload)))
-        else:
-            entries.append((_packed_entry(d), bytes(d.payload)))
+    items = [_as_stream_item(d) for d in deltas.values()]
     extra = {"chain": {"base_step": int(chain[0]),
                        "delta_chain": [int(s) for s in chain]}}
-    return _write_entries(root, step, entries, shards, parity,
-                          manifest_extra=extra)
+    return _write_stream(root, step, items, shards, parity,
+                         manifest_extra=extra, submit=submit)
 
 
 # --------------------------------------------------------------------------

@@ -285,6 +285,17 @@ def _leading_axis_shards(leaf) -> Optional[List[Tuple[int, int, Any]]]:
     return [(s, stops[s], uniq[s]) for s in starts]
 
 
+def leaf_segments(leaf) -> Optional[List[Tuple[int, int, Any]]]:
+    """Public wrapper for the pipelined save engine: the leading-axis
+    [(start, stop, shard_data)] tiling of a multi-shard addressable leaf,
+    or ``None`` for single-device / unsupported layouts (the caller then
+    treats the leaf as one flat segment)."""
+    if getattr(leaf, "is_fully_addressable", True) and \
+            len(getattr(leaf, "addressable_shards", ()) or ()) > 1:
+        return _leading_axis_shards(leaf)
+    return None
+
+
 def pack_sharded_payload(leaf, mask: np.ndarray, *, block: int = BLOCK,
                          use_kernel: Optional[bool] = None,
                          interpret: bool = False):

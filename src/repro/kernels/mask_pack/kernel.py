@@ -56,14 +56,18 @@ def _perm_matrix(m_i32):
     return p.astype(jnp.float32)
 
 
-def _pack_kernel(v_ref, m_ref, out_ref, cnt_ref):
-    v = v_ref[0, :].astype(jnp.float32)
-    m = m_ref[0, :].astype(jnp.int32)
-    p = _perm_matrix(m)
-    packed = jax.lax.dot_general(p, v[:, None], (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)[:, 0]
-    out_ref[0, :] = packed.astype(out_ref.dtype)
-    cnt_ref[0] = m.sum().astype(jnp.int32)
+def _pack_kernel(v_ref, m_ref, out_ref, cnt_ref, *, rows: int):
+    # One grid step compacts ``rows`` consecutive tiles (statically
+    # unrolled): fewer grid steps / larger DMA windows per step than the
+    # original one-tile-per-step grid, same per-tile matmul.
+    for r in range(rows):
+        v = v_ref[r, :].astype(jnp.float32)
+        m = m_ref[r, :].astype(jnp.int32)
+        p = _perm_matrix(m)
+        packed = jax.lax.dot_general(p, v[:, None], (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)[:, 0]
+        out_ref[r, :] = packed.astype(out_ref.dtype)
+        cnt_ref[r] = m.sum().astype(jnp.int32)
 
 
 def _unpack_kernel(pk_ref, m_ref, fill_ref, out_ref):
@@ -77,20 +81,28 @@ def _unpack_kernel(pk_ref, m_ref, fill_ref, out_ref):
 
 
 def pack_blocks_kernel(flat: jnp.ndarray, mask_i8: jnp.ndarray,
-                       block: int = BLOCK, interpret: bool = False):
-    """flat: (N,) float; mask_i8: (N,) int8; N % block == 0.
-    Returns (packed (N//block, block) in flat.dtype, counts (N//block,) i32)."""
+                       block: int = BLOCK, interpret: bool = False,
+                       rows: int = 1):
+    """flat: (N,) float; mask_i8: (N,) int8; N % (block * rows) == 0.
+    Returns (packed (N//block, block) in flat.dtype, counts (N//block,) i32).
+
+    ``rows`` consecutive tiles are processed per grid step (superblock
+    batching for the pipelined save engine's batched pack); ``ops.pack``
+    pads the tile count to a ``rows`` multiple — padded tiles carry mask 0
+    and just produce zero counts."""
     n = flat.shape[0]
     nb = n // block
+    if nb % rows:
+        raise ValueError(f"tile count {nb} not a multiple of rows={rows}")
     vb = flat.reshape(nb, block)
     mb = mask_i8.reshape(nb, block)
     return pl.pallas_call(
-        _pack_kernel,
-        grid=(nb,),
-        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
-                  pl.BlockSpec((1, block), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
-                   pl.BlockSpec((1,), lambda i: (i,))],
+        functools.partial(_pack_kernel, rows=rows),
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rows,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((nb, block), flat.dtype),
                    jax.ShapeDtypeStruct((nb,), jnp.int32)],
         compiler_params=_CompilerParams(

@@ -46,11 +46,16 @@ from repro.kernels.mask_pack.kernel import (BITPACK_BLOCK, BLOCK,
                                             scatter_blocks_kernel,
                                             unpack_blocks_kernel)
 from repro.kernels.mask_pack.ref import (bitpack_blocks_ref, delta_blocks_ref,
-                                         pack_blocks_ref, scatter_blocks_ref,
+                                         gather_payload_ref, pack_blocks_ref,
+                                         scatter_blocks_ref,
                                          unpack_blocks_ref)
 
 # dtypes the MXU kernel packs exactly (everything else → jnp oracle).
 _KERNEL_EXACT = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+# Tiles per kernel grid step (superblock batching; see
+# kernel.pack_blocks_kernel).  ops.pack pads the tile count to a multiple.
+PACK_ROWS = 8
 
 # Chunk granularity of the delta format, in bytes — a multiple of every
 # leaf itemsize so chunks never split an element.  Single source of truth:
@@ -69,21 +74,40 @@ def _use_kernel(flat: jnp.ndarray, use_kernel) -> bool:
     return bool(uk) and flat.dtype in _KERNEL_EXACT
 
 
+def _pack_traced(flat: jnp.ndarray, mask: jnp.ndarray, *, block: int,
+                 use_kernel, interpret: bool):
+    """Trace-time pack body shared by :func:`pack` and :func:`pack_group`:
+    pads to the (superblocked) grid, dispatches kernel/oracle, and slices
+    the padding tiles back off."""
+    n = flat.shape[0]
+    nb = -(-n // block)
+    if n and _use_kernel(flat, use_kernel):
+        nb_pad = -(-nb // PACK_ROWS) * PACK_ROWS
+        pad = nb_pad * block - n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+            mask = jnp.pad(mask, (0, pad))
+        packed, counts = pack_blocks_kernel(flat, mask.astype(jnp.int8),
+                                            block=block, interpret=interpret,
+                                            rows=PACK_ROWS)
+        if nb_pad != nb:
+            packed, counts = packed[:nb], counts[:nb]
+        return packed, counts
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    return pack_blocks_ref(flat, mask, block=block)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block", "use_kernel", "interpret"))
 def pack(flat: jnp.ndarray, mask: jnp.ndarray, *, block: int = BLOCK,
          use_kernel: bool | None = None, interpret: bool = False):
     """flat: (N,) any dtype; mask: (N,) bool — any N (padded to the grid).
     Returns (packed (ceil(N/block), block), counts (ceil(N/block),))."""
-    n = flat.shape[0]
-    pad = (-n) % block
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-        mask = jnp.pad(mask, (0, pad))
-    if _use_kernel(flat, use_kernel):
-        return pack_blocks_kernel(flat, mask.astype(jnp.int8), block=block,
-                                  interpret=interpret)
-    return pack_blocks_ref(flat, mask, block=block)
+    return _pack_traced(flat, mask, block=block, use_kernel=use_kernel,
+                        interpret=interpret)
 
 
 @functools.partial(jax.jit,
@@ -108,15 +132,50 @@ def unpack(packed: jnp.ndarray, mask: jnp.ndarray, *, n: int,
 def gather_payload(packed: jnp.ndarray, counts: jnp.ndarray, *, total: int):
     """Device-side: compact the per-tile critical prefixes into one dense
     (total,) payload — the only big buffer that crosses D2H on save."""
-    nb, block = packed.shape
-    if total == 0:
-        return packed.reshape(-1)[:0]
-    ends = jnp.cumsum(counts)
-    starts = ends - counts
-    j = jnp.arange(total)
-    tile = jnp.searchsorted(ends, j, side="right")
-    slot = j - starts[tile]
-    return packed.reshape(-1)[tile * block + slot]
+    return gather_payload_ref(packed, counts, total)
+
+
+@functools.partial(jax.jit, static_argnames=("totals", "block", "use_kernel",
+                                             "interpret"))
+def _pack_group_jit(flats, masks, *, totals, block, use_kernel, interpret):
+    payloads, counts = [], []
+    for f, m, t in zip(flats, masks, totals):
+        packed, cnt = _pack_traced(f, m, block=block, use_kernel=use_kernel,
+                                   interpret=interpret)
+        counts.append(cnt)
+        if t:
+            payloads.append(gather_payload_ref(packed, cnt, t))
+    dtype = flats[0].dtype if flats else jnp.float32
+    payload = (jnp.concatenate(payloads) if payloads
+               else jnp.zeros((0,), dtype))
+    cnt = (jnp.concatenate(counts) if counts
+           else jnp.zeros((0,), jnp.int32))
+    return payload, cnt
+
+
+def pack_group(flats, masks, totals, *, block: int = BLOCK,
+               use_kernel: bool | None = None, interpret: bool = False):
+    """Batched device pack for the pipelined save engine: **one compiled
+    call** compacts every leaf of a same-dtype group (pad to the grid, pack,
+    per-leaf payload gather, concat) — per-leaf dispatch and recompile
+    overhead disappears from the save hot loop.
+
+    ``flats``: same-dtype flat device arrays; ``masks``: matching flat bool
+    masks (resident device masks are consumed as-is); ``totals``: *static*
+    per-leaf critical counts — the manager reads them off the criticality
+    report, so sizing the gather needs **no counts D2H** and the compiled
+    call is cached per (treedef shapes, report epoch).
+
+    Returns ``(payload_dev, counts_dev)``: the concatenated per-leaf
+    payloads (leaf order — slice with running ``totals`` offsets) and the
+    concatenated per-tile counts, both still on device.
+    """
+    totals = tuple(int(t) for t in totals)
+    if len(flats) != len(masks) or len(flats) != len(totals):
+        raise ValueError("pack_group: flats/masks/totals length mismatch")
+    return _pack_group_jit(tuple(flats), tuple(masks), totals=totals,
+                           block=block, use_kernel=use_kernel,
+                           interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

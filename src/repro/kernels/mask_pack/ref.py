@@ -51,6 +51,23 @@ def pack_blocks_ref(flat: jnp.ndarray, mask: jnp.ndarray, block: int = BLOCK):
     return packed, counts
 
 
+def gather_payload_ref(packed: jnp.ndarray, counts: jnp.ndarray, total: int):
+    """Inter-tile gap removal: compact the per-tile critical prefixes of
+    ``packed`` (nb, block) into one dense (total,) payload — the only big
+    buffer that crosses D2H on save.  ``total`` must equal ``counts.sum()``
+    (static; the manager derives it from the criticality report so no
+    counts D2H is needed to size the gather)."""
+    nb, block = packed.shape
+    if total == 0:
+        return packed.reshape(-1)[:0]
+    ends = jnp.cumsum(counts)
+    starts = ends - counts
+    j = jnp.arange(total)
+    tile = jnp.searchsorted(ends, j, side="right")
+    slot = j - starts[tile]
+    return packed.reshape(-1)[tile * block + slot]
+
+
 def unpack_blocks_ref(packed: jnp.ndarray, mask: jnp.ndarray, fill=0.0):
     """Inverse of pack_blocks_ref: scatter compacted values back to their
     positions; uncritical positions get ``fill``."""

@@ -275,7 +275,11 @@ def test_save_after_writer_error_propagates_once(tmp_path, monkeypatch):
         return real(*a, **k)
 
     monkeypatch.setattr(manager_mod, "save_checkpoint", flaky)
-    mgr.save(1, make_state(13))
+    futs = mgr.save(1, make_state(13))
+    # let the pipelined write actually fail before disarming the fault
+    # (the job runs concurrently; the future stays in _inflight)
+    import concurrent.futures
+    concurrent.futures.wait(futs)
     fail["on"] = False
     # the double-buffer drain surfaces the previous failure...
     with pytest.raises(RuntimeError, match="torn write"):
