@@ -1,23 +1,30 @@
 """Scrutinized checkpoint/restart: region-packed, sharded, async,
-multi-level, partner-redundant, elastic, differential."""
+multi-level, partner-redundant, elastic, differential, and multi-host
+coordinated (two-phase commit + global manifests + resharded restore)."""
 
+from repro.checkpoint.coordinator import (CoordinatedCheckpointManager,
+                                          GlobalManifest, StateShapeError)
 from repro.checkpoint.manager import CheckpointManager, Level
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
                                       delta_encode_host, leaf_mask,
                                       pack_leaf, pack_leaf_from_payload,
                                       packed_leaf_stub, unpack_leaf)
-from repro.checkpoint.store import (StreamLeaf, chain_steps, list_steps,
+from repro.checkpoint.store import (StreamLeaf, chain_steps,
+                                    is_step_committed, list_steps,
                                     load_checkpoint, load_checkpoint_raw,
                                     read_manifest, restore_state,
                                     save_checkpoint, save_delta_checkpoint,
-                                    step_of_entry, tmp_step_of_entry)
+                                    step_of_entry, tmp_owner_of_entry,
+                                    tmp_step_of_entry)
 
 __all__ = [
-    "CheckpointManager", "Level", "PackedLeaf", "DeltaLeaf", "StreamLeaf",
+    "CheckpointManager", "CoordinatedCheckpointManager", "GlobalManifest",
+    "StateShapeError", "Level", "PackedLeaf", "DeltaLeaf", "StreamLeaf",
     "pack_leaf", "pack_leaf_from_payload", "packed_leaf_stub",
     "unpack_leaf", "leaf_mask", "apply_delta",
     "delta_encode_host", "list_steps", "load_checkpoint",
     "load_checkpoint_raw", "restore_state", "save_checkpoint",
     "save_delta_checkpoint", "step_of_entry", "tmp_step_of_entry",
-    "read_manifest", "chain_steps",
+    "tmp_owner_of_entry", "is_step_committed", "read_manifest",
+    "chain_steps",
 ]

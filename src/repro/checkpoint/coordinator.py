@@ -1,0 +1,797 @@
+"""Multi-host coordinated checkpointing: collective two-phase commit over
+per-host owned shards, one global manifest, and elastic resharded restore.
+
+The single-process ``CheckpointManager`` owns a directory end to end: one
+process scrutinizes, packs, and writes every shard.  A production job is
+many processes, each holding (or owning) a slice of the global state — the
+``CoordinatedCheckpointManager`` makes the same scrutinized 3-stage save
+multi-process-correct:
+
+**Ownership.**  Every leaf's flat element range is partitioned across
+processes *deterministically* (``distributed.collective.process_segments``:
+the leading-axis tiling of the leaf's ``PartitionSpec`` when its mesh spans
+processes, a near-equal contiguous split otherwise; replicated/scalar
+leaves belong to the leader).  Each host packs and writes **only the bytes
+it owns** — the union covers every element exactly once, so no host ever
+materializes (or moves over D2H) another host's shard.
+
+**Two-phase commit.**
+
+::
+
+    host 0..P-1   write shard_h<p>_<k>.bin + manifest.host<p>.json
+                  into <level>/.pending_step_<N>          (phase 1)
+    all           ── barrier("land") ──
+    leader        fuse per-host manifests → manifest.json (global,
+                  per-leaf ordered segments), validate exact coverage,
+                  rename .pending_step_<N> → step_<N>,
+                  write commit.json marker                (phase 2)
+    all           ── barrier("commit") ──
+
+A step is *visible* only when committed: ``latest()`` (here and in the
+single-process manager) treats a coordinated ``step_<N>`` without its
+``commit.json`` as partial — a leader death between the rename and the
+marker — and falls back to the newest fully-committed step.  A host death
+*before* commit trips the barrier timeout on the survivors: the save
+raises, the pending dir stays hidden (dot-prefixed), and the previous step
+remains the latest.  Stale pending dirs and dead partial commits are swept
+by the leader's retention pass.
+
+**Differential chains** ride along (``Level.max_chain``): each host keeps
+its previous owned-segment payloads resident and writes per-segment
+byte-chunk deltas; the leader validates every host made the same
+base/delta decision before fusing (chains carry the same
+``chain`` manifest section as single-process saves).
+
+**Elastic resharded restore.**  The global manifest records every leaf's
+global shape and saving layout, so ``restore(state_like, shardings=...)``
+on a *different* process/device count reads only the byte ranges of each
+saved segment that intersect its local shards: per-segment masks (bitmap /
+regions aux) give prefix-sum payload offsets, ``ShardReader.read_range``
+fetches exactly those bytes, and the device path expands them through the
+``mask_scatter`` kernel per target device — a checkpoint saved on 4
+processes restores onto 1, 2, or 8 without any host materializing a full
+leaf.  Plain single-process checkpoints restore through the same range
+reads (one whole-leaf segment), so every save↔restore topology pair
+composes (tests/test_coordinated.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import (CheckpointManager, Level,
+                                      update_report)
+from repro.checkpoint.packing import (DeltaLeaf, delta_encode_host,
+                                      packed_leaf_stub, unpack_leaf)
+from repro.checkpoint.pipeline import BytesSource, ViewSource
+from repro.checkpoint.store import (ShardReader, _delta_entry,
+                                    _packed_entry, chain_steps,
+                                    committed_steps, fuse_global_manifest,
+                                    load_checkpoint_raw,
+                                    pending_step_of_entry, read_manifest,
+                                    segment_mask, sweep_retention,
+                                    tmp_writer_alive, write_commit_marker,
+                                    write_host_entries)
+from repro.core.criticality import _path_str
+from repro.distributed.collective import (Collective, get_collective,
+                                          owned_ranges, process_segments)
+from repro.distributed.sharding import leading_axis_device_segments
+from repro.kernels.mask_pack import ops as mask_ops
+
+
+class StateShapeError(RuntimeError):
+    """The restoring state's leaf shape contradicts the checkpoint's.
+
+    Deliberately *not* one of the skip-and-try-next-step errors: a shape
+    mismatch is a configuration bug that would fail identically on every
+    candidate step, and silently returning ``None`` (→ fresh start) from
+    ``restore`` would be data loss."""
+
+
+@dataclasses.dataclass
+class GlobalManifest:
+    """Parsed view of a checkpoint manifest with a uniform *segment*
+    interface: coordinated leaves expose their per-host segments, plain
+    leaves one whole-range pseudo-segment — restore code never branches on
+    the on-disk flavor."""
+    step: int
+    manifest: Dict[str, Any]
+
+    @classmethod
+    def load(cls, root: str, step: int) -> "GlobalManifest":
+        return cls(step=step, manifest=read_manifest(root, step))
+
+    @property
+    def coordinated(self) -> bool:
+        return "coordinated" in self.manifest
+
+    @property
+    def process_count(self) -> int:
+        return int(self.manifest.get("coordinated", {})
+                   .get("process_count", 1))
+
+    @property
+    def chain(self) -> List[int]:
+        return chain_steps(self.manifest)
+
+    def leaves(self) -> Dict[str, Dict[str, Any]]:
+        return {e["name"]: e for e in self.manifest["leaves"]}
+
+    @staticmethod
+    def segments_of(entry: Dict[str, Any]) -> List[Dict[str, Any]]:
+        """Ordered segment entries tiling the leaf's flat range."""
+        if entry.get("encoding") == "segmented":
+            return sorted(entry["segments"], key=lambda s: int(s["start"]))
+        n = int(np.prod(entry["shape"] or [1]))
+        return [dict(entry, start=0, stop=n)]
+
+
+@dataclasses.dataclass
+class _CoordChain:
+    """Per-level differential-chain bookkeeping of *this host's* owned
+    segments (mirrors manager._ChainState at segment granularity)."""
+    base_step: int
+    chain: List[int]
+    report: Any
+    layout: Tuple                       # ((name, start, stop, dtype), ...)
+    sources: Optional[Dict[Tuple[str, int, int], np.ndarray]] = None
+
+
+class CoordinatedCheckpointManager:
+    """Drop-in coordinated variant of ``CheckpointManager``.
+
+    ``collective`` supplies process identity + barriers
+    (``distributed.collective.get_collective()`` default: the jax runtime's
+    fabric barrier on a real multi-controller job, filesystem rendezvous
+    under the ``REPRO_PROCESS_*`` simulation, no-op when single-process).
+    On a single-process job every call delegates to an inner
+    ``CheckpointManager`` — the fully pipelined async save path — so
+    wiring the coordinator in unconditionally costs nothing
+    (``force_coordinated=True`` runs the coordinated format/protocol even
+    on one process: exercising the commit path, or pre-creating global
+    manifests a later multi-host restart will reshard from).
+
+    ``shardings``: optional pytree of ``NamedSharding``s matching the state;
+    when a leaf's spec tiles its leading axis over a multi-process mesh,
+    ownership follows device placement instead of the uniform split.
+
+    Coordinated saves are synchronous (two barriers bound the commit) and
+    do not support precision tiering or parity (per-host files carry their
+    own checksums; replication is a future level).
+    """
+
+    def __init__(self, levels: Sequence[Level],
+                 collective: Optional[Collective] = None,
+                 scrutiny_fn=None,
+                 rescrutinize_every: int = 0,
+                 save_mode: str = "auto",
+                 restore_mode: str = "auto",
+                 shardings: Any = None,
+                 delta_chunk_bytes: int = mask_ops.DELTA_CHUNK_BYTES,
+                 pack_use_kernel: Optional[bool] = None,
+                 pack_interpret: bool = False,
+                 barrier_timeout_s: Optional[float] = None,
+                 pending_ttl_s: float = 600.0,
+                 force_coordinated: bool = False,
+                 **manager_kwargs):
+        if save_mode not in ("auto", "host", "device"):
+            raise ValueError(f"unknown save_mode {save_mode!r}")
+        if restore_mode not in ("auto", "host", "device"):
+            raise ValueError(f"unknown restore_mode {restore_mode!r}")
+        self.coll = collective if collective is not None else get_collective()
+        self.ctx = self.coll.ctx
+        self.levels = list(levels)
+        self.scrutiny_fn = scrutiny_fn
+        self.rescrutinize_every = rescrutinize_every
+        self.save_mode = save_mode
+        self.restore_mode = restore_mode
+        self.shardings = shardings
+        self.delta_chunk_bytes = int(delta_chunk_bytes)
+        self._pack_opts = dict(use_kernel=pack_use_kernel,
+                               interpret=pack_interpret)
+        self.barrier_timeout_s = barrier_timeout_s
+        self.pending_ttl_s = float(pending_ttl_s)
+        self._inner: Optional[CheckpointManager] = None
+        if self.ctx.count == 1 and not force_coordinated:
+            self._inner = CheckpointManager(
+                levels, scrutiny_fn=scrutiny_fn,
+                rescrutinize_every=rescrutinize_every, save_mode=save_mode,
+                restore_mode=restore_mode,
+                delta_chunk_bytes=delta_chunk_bytes,
+                pack_use_kernel=pack_use_kernel,
+                pack_interpret=pack_interpret, **manager_kwargs)
+        else:
+            if manager_kwargs:
+                # only meaningful on the single-process delegate path;
+                # silently discarding them would also hide typos
+                raise TypeError(
+                    "CoordinatedCheckpointManager (multi-process): "
+                    f"unsupported keyword(s) {sorted(manager_kwargs)} — "
+                    "these tune the single-process pipelined manager only")
+            for lv in self.levels:
+                os.makedirs(lv.directory, exist_ok=True)
+        self._seq = 0
+        self._saves = 0
+        self._closed = False
+        self._report = None
+        self._chains: Dict[str, _CoordChain] = {}
+        self.last_save_stats: Optional[Dict[str, Any]] = None
+        self.last_restore_stats: Optional[Dict[str, Any]] = None
+        self.last_scrutiny_stats: Optional[Dict[str, Any]] = None
+
+    # --- lifecycle -------------------------------------------------------
+
+    def __enter__(self) -> "CoordinatedCheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._inner is not None:
+            self._inner.close()
+        if not self._closed:
+            self.coll.close()
+        self._closed = True
+
+    def wait(self) -> None:
+        if self._inner is not None:
+            self._inner.wait()
+
+    # --- scrutiny --------------------------------------------------------
+
+    def _maybe_report(self, state):
+        """Same schedule as the single-process manager (shared
+        ``manager.update_report``; every host runs it locally, and
+        determinism of ``scrutiny_fn`` keeps decisions aligned — the
+        leader additionally validates at fuse time)."""
+        new, ran = update_report(self.scrutiny_fn, self._report,
+                                 self._saves, self.rescrutinize_every,
+                                 state)
+        if ran:
+            self.last_scrutiny_stats = getattr(new, "stats", None)
+        self._report = new
+        return self._report
+
+    # --- save ------------------------------------------------------------
+
+    def save(self, step: int, state, block: bool = False):
+        """Coordinated save: each firing level runs the two-phase commit.
+        Always synchronous on the coordinated path — returns when the step
+        is committed (or raises on any host/leader failure; the step is
+        then not visible anywhere).  ``block`` only matters on the
+        single-process delegate path, where it keeps the inner manager's
+        pipelined-async default."""
+        if self._inner is not None:
+            return self._inner.save(step, state, block=block)
+        if self._closed:
+            raise RuntimeError("CoordinatedCheckpointManager is closed")
+        report = self._maybe_report(state)
+        self._saves += 1
+        stats = {"mode": "coordinated", "process": self.ctx.index,
+                 "process_count": self.ctx.count, "levels": {},
+                 "host_bytes_written": 0, "d2h_bytes": 0}
+        self.last_save_stats = stats
+        for lv in self.levels:
+            if step % lv.interval:
+                continue
+            self._save_level(lv, step, state, report, stats)
+        return []
+
+    @staticmethod
+    def _shard_leaves(shardings, flat, what: str):
+        """Flatten a shardings pytree alongside ``flat`` state leaves,
+        refusing silently-truncating mismatches (a dropped leaf here would
+        mean a leaf missing from the checkpoint — silent data loss)."""
+        if shardings is None:
+            return [None] * len(flat)
+        out = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+        if len(out) != len(flat):
+            raise ValueError(
+                f"{what}: shardings pytree has {len(out)} leaves but the "
+                f"state has {len(flat)} — they must match one-to-one "
+                f"(use None entries for unsharded leaves)")
+        return out
+
+    def _flat_state(self, state):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        shard_flat = self._shard_leaves(self.shardings, flat, "save")
+        out = []
+        for (path, leaf), sh in zip(flat, shard_flat):
+            out.append((_path_str(path), leaf,
+                        sh if hasattr(sh, "spec") else None))
+        return out, treedef
+
+    @staticmethod
+    def _local_flat_segment(leaf, flo: int, fhi: int, row: int):
+        """Flat ``[flo, fhi)`` of a non-fully-addressable array, served
+        from the locally addressable shard that contains it (ownership
+        follows device placement, so the bytes this host owns are the
+        bytes it already holds).  Raises when no local shard covers the
+        range — a layout ``process_segments`` should not have assigned."""
+        for shard in getattr(leaf, "addressable_shards", ()) or ():
+            idx = shard.index
+            if not idx:
+                continue
+            sl0 = idx[0]
+            s = (sl0.start or 0) * row
+            e = (leaf.shape[0] if sl0.stop is None else sl0.stop) * row
+            if s <= flo and fhi <= e:
+                return jnp.ravel(shard.data)[flo - s:fhi - s]
+        raise NotImplementedError(
+            f"coordinated save: owned range [{flo}, {fhi}) of a "
+            f"non-fully-addressable leaf is not covered by any locally "
+            f"addressable shard — pass `shardings` whose PartitionSpec "
+            f"tiles the leading axis, or keep the state replicated")
+
+    def _owned_items(self, state, report, stats):
+        """Pack this host's owned segments of every leaf.  Returns
+        ``(items, sources, layout)``: stream items for the per-host writer,
+        the per-segment payload arrays (delta-chain sources), and the
+        hashable segment layout."""
+        device = (self.save_mode != "host" and report is not None)
+        items, sources, layout = [], {}, []
+        for name, leaf, sh in self._flat_state(state)[0]:
+            shape = tuple(getattr(leaf, "shape", ()))
+            dtype = (str(leaf.dtype) if hasattr(leaf, "dtype")
+                     else str(np.asarray(leaf).dtype))
+            rep = report.leaves.get(name) if report is not None else None
+            segs = owned_ranges(shape, self.ctx, sh)
+            row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+            distributed = (isinstance(leaf, jax.Array)
+                           and not getattr(leaf, "is_fully_addressable",
+                                           True))
+            host_flat = None
+            for flo, fhi in segs:
+                seg_n = fhi - flo
+                mask_seg = None
+                if rep is not None and not rep.all_critical:
+                    mask_seg = np.asarray(rep.mask[flo:fhi], bool)
+                use_dev = (device and mask_seg is not None
+                           and isinstance(leaf, jax.Array) and seg_n > 0)
+                if distributed and seg_n > 0:
+                    # real multi-controller: fetch only the local shard's
+                    # slice; np.asarray on the global array would throw
+                    flat_seg = self._local_flat_segment(leaf, flo, fhi, row)
+                elif use_dev:
+                    flat_seg = jnp.ravel(leaf)[flo:fhi]
+                else:
+                    flat_seg = None
+                if use_dev:
+                    payload, _counts, moved = mask_ops.pack_critical(
+                        flat_seg, mask_seg, **self._pack_opts)
+                    stats["d2h_bytes"] += int(moved)
+                elif flat_seg is not None:      # distributed, no device pack
+                    seg = np.asarray(flat_seg)
+                    payload = seg[mask_seg] if mask_seg is not None else seg
+                    stats["d2h_bytes"] += int(payload.nbytes)
+                else:
+                    if host_flat is None:
+                        host_flat = np.asarray(leaf).reshape(-1)
+                    seg = host_flat[flo:fhi]
+                    payload = seg[mask_seg] if mask_seg is not None else seg
+                    stats["d2h_bytes"] += int(payload.nbytes)
+                payload = np.ascontiguousarray(payload)
+                # stub meta: the stream writer CRCs chunks incrementally
+                # and finalizes the checksum (stage-3 reuse); the stub
+                # validates payload size against the segment mask
+                stub = packed_leaf_stub(name, (seg_n,), dtype, mask_seg,
+                                        int(payload.nbytes))
+                meta = _packed_entry(stub)
+                meta.update(shape=list(shape), start=int(flo), stop=int(fhi))
+                items.append((name, flo, fhi, meta, payload))
+                sources[(name, flo, fhi)] = payload.view(
+                    np.uint8).reshape(-1)
+                layout.append((name, flo, fhi, dtype))
+        return items, sources, tuple(layout)
+
+    def _delta_ok(self, lv: Level, cs: Optional[_CoordChain], report,
+                  layout) -> bool:
+        return (cs is not None and cs.sources is not None
+                and len(cs.chain) < lv.max_chain
+                and report is cs.report and layout == cs.layout)
+
+    def _save_level(self, lv: Level, step: int, state, report, stats):
+        t0 = time.perf_counter()
+        lv_index = self.levels.index(lv)
+        pending = os.path.join(lv.directory, f".pending_step_{step}")
+        os.makedirs(pending, exist_ok=True)
+        items, sources, layout = self._owned_items(state, report, stats)
+
+        cs = self._chains.get(lv.directory)
+        chain: List[int] = []
+        self._seq += 1
+        tag = f"q{self._seq}.L{lv_index}"
+        try:
+            if lv.max_chain > 0 and self._delta_ok(lv, cs, report, layout):
+                kind = "delta"
+                chain = [cs.base_step] + list(cs.chain) + [step]
+                entries = []
+                for name, flo, fhi, meta, payload in items:
+                    curr = sources[(name, flo, fhi)]
+                    prev = cs.sources[(name, flo, fhi)]
+                    idx, pay = delta_encode_host(curr, prev,
+                                                 self.delta_chunk_bytes)
+                    pay_b = pay.tobytes()
+                    d = DeltaLeaf(name=name, shape=tuple(meta["shape"]),
+                                  dtype=meta["dtype"],
+                                  chunk_bytes=self.delta_chunk_bytes,
+                                  total_bytes=int(curr.nbytes), idx=idx,
+                                  payload=pay_b, checksum=zlib.crc32(pay_b))
+                    dm = _delta_entry(d)
+                    dm.update(shape=meta["shape"], start=meta["start"],
+                              stop=meta["stop"])
+                    entries.append((dm, len(d.payload),
+                                    BytesSource(bytes(d.payload))))
+                cs.chain.append(step)
+                cs.sources = sources
+            else:
+                kind = "base"
+                # zero-copy chunked streams over the packed host payloads
+                # (stage-2 reuse: the writer consumes ViewSource chunks)
+                entries = [(meta, int(payload.nbytes), ViewSource([payload]))
+                           for _, _, _, meta, payload in items]
+                if lv.max_chain > 0:
+                    self._chains[lv.directory] = _CoordChain(
+                        base_step=step, chain=[], report=report,
+                        layout=layout, sources=sources)
+
+            extra = {"step": int(step), "process_count": self.ctx.count,
+                     "kind": kind}
+            if chain:
+                extra["chain"] = [int(s) for s in chain[:-1]]
+            write_host_entries(pending, self.ctx.index, entries,
+                               shards=lv.shards, extra=extra)
+            written = sum(int(n) for _, n, _ in entries)
+            stats["host_bytes_written"] += written
+            lv_stats = {"kind": kind, "host_bytes_written": written,
+                        "write_s": time.perf_counter() - t0}
+            stats["levels"][lv.directory] = lv_stats
+
+            t1 = time.perf_counter()
+            self.coll.barrier(f"{tag}.land",
+                              timeout=self.barrier_timeout_s)
+            lv_stats["land_barrier_s"] = time.perf_counter() - t1
+            if self.ctx.is_leader:
+                t2 = time.perf_counter()
+                self._fuse_and_commit(lv, step, pending, kind, chain)
+                lv_stats["commit_s"] = time.perf_counter() - t2
+            self.coll.barrier(f"{tag}.commit",
+                              timeout=self.barrier_timeout_s)
+        except BaseException:
+            # the chain must never reference a step that did not commit
+            self._chains.pop(lv.directory, None)
+            raise
+        self.coll.cleanup(self._seq - 1)
+        if self.ctx.is_leader:
+            self._gc(lv)
+        lv_stats["total_s"] = time.perf_counter() - t0
+
+    def _fuse_and_commit(self, lv: Level, step: int, pending: str,
+                         kind: str, chain: List[int]) -> None:
+        """Phase 2 (leader): validate host agreement, fuse, rename,
+        commit-mark."""
+        host_manifests = {}
+        for p in range(self.ctx.count):
+            path = os.path.join(pending, f"manifest.host{p}.json")
+            if not os.path.exists(path):
+                raise FileNotFoundError(
+                    f"coordinated step {step}: host {p} manifest missing")
+            with open(path) as f:
+                hm = json.load(f)
+            if hm.get("kind", "base") != kind:
+                raise ValueError(
+                    f"coordinated step {step}: host {p} wrote a "
+                    f"{hm.get('kind')!r} save but the leader planned "
+                    f"{kind!r} — chains diverged")
+            host_manifests[p] = hm
+        extra = {}
+        if kind == "delta":
+            extra["chain"] = {"base_step": int(chain[0]),
+                              "delta_chain": [int(s) for s in chain[:-1]]}
+        manifest = fuse_global_manifest(pending, step, self.ctx.count,
+                                        manifest_extra=extra,
+                                        host_manifests=host_manifests)
+        # A crashed prior attempt (possibly with a different process
+        # count) may have left foreign host files in the reused pending
+        # dir; only files the fused manifest references may be committed.
+        referenced = {"manifest.json"}
+        referenced.update(f"manifest.host{p}.json"
+                          for p in range(self.ctx.count))
+        for leaf in manifest["leaves"]:
+            referenced.update(s["file"] for s in leaf["segments"])
+        for f in os.listdir(pending):
+            if f not in referenced:
+                path = os.path.join(pending, f)
+                (shutil.rmtree if os.path.isdir(path)
+                 else os.unlink)(path)
+        final = os.path.join(lv.directory, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(pending, final)
+        write_commit_marker(final, {"step": int(step),
+                                    "process_count": self.ctx.count,
+                                    "kind": kind})
+
+    # --- retention (leader only) ----------------------------------------
+
+    def _gc(self, lv: Level) -> None:
+        try:
+            entries = os.listdir(lv.directory)
+        except FileNotFoundError:
+            return
+        for e in entries:
+            if pending_step_of_entry(e) is not None:
+                # liveness-file mtime (dir mtime fallback), like the tmp
+                # sweep: appends to existing shard files don't touch the
+                # dir mtime, so a long-streaming phase 1 must be judged by
+                # its refreshed .alive
+                if not tmp_writer_alive(lv.directory, e,
+                                        self.pending_ttl_s):
+                    shutil.rmtree(os.path.join(lv.directory, e),
+                                  ignore_errors=True)
+        sweep_retention(lv.directory, lv.keep_n)
+
+    # --- restore ---------------------------------------------------------
+
+    def latest(self) -> Optional[Tuple[int, str]]:
+        if self._inner is not None:
+            return self._inner.latest()
+        best = None
+        for lv in self.levels:
+            for s in committed_steps(lv.directory):
+                if best is None or s > best[0]:
+                    best = (s, lv.directory)
+        return best
+
+    def _candidates(self) -> List[Tuple[int, str]]:
+        if self._inner is not None:
+            return self._inner._candidates()
+        out = [(s, lv.directory) for lv in self.levels
+               for s in committed_steps(lv.directory)]
+        return sorted(out, key=lambda x: -x[0])
+
+    def restore(self, state_like, shardings=None, fill=0,
+                mode: Optional[str] = None, local_only: bool = False):
+        """Elastic resharded restore: newest committed step → (step, state).
+
+        Reads only the byte ranges of each saved segment intersecting this
+        host's target shards.  The target layout comes from ``shardings``
+        (per-device leading-axis segments — the real multi-controller
+        path, where each host fetches exactly its addressable shards) when
+        given; with ``local_only=True`` it falls back to this process's
+        deterministic ownership split of the restoring mesh (positions
+        outside the owned ranges then hold ``fill`` — for consumers that
+        shard the result themselves); otherwise every leaf is read whole
+        (replicated state, e.g. the single-controller-per-host train
+        loop).  Leaves absent from the checkpoint keep their
+        ``state_like`` value.  Delta-chain steps reconstruct segment
+        payloads first (chain walk), then slice.
+
+        ``last_restore_stats`` records ``bytes_read`` (disk bytes actually
+        fetched) and ``h2d_bytes``.
+        """
+        mode = self.restore_mode if mode is None else mode
+        if mode not in ("auto", "host", "device"):
+            raise ValueError(f"unknown restore mode {mode!r}")
+        skipped: List[Dict[str, Any]] = []
+        for step, root in self._candidates():
+            try:
+                return self._restore_step(root, step, state_like, shardings,
+                                          fill, mode, skipped, local_only)
+            except (OSError, ValueError, KeyError) as e:
+                skipped.append({"step": step, "root": root, "error": str(e)})
+                continue
+        self.last_restore_stats = {"skipped": skipped, "step": None}
+        return None
+
+    def _restore_step(self, root, step, state_like, shardings, fill, mode,
+                      skipped, local_only=False):
+        gm = GlobalManifest.load(root, step)
+        stats = {"step": step, "mode": mode, "bytes_read": 0,
+                 "h2d_bytes": 0, "missing_leaves": [], "skipped": skipped,
+                 "chain": bool(gm.chain)}
+        # Delta chains (and precision-tiered leaves, whose payloads are
+        # variable-width) cannot be range-addressed: reconstruct the full
+        # payloads once, then slice locally.
+        tiered = any(s.get("region_tiers")
+                     for e in gm.manifest["leaves"]
+                     for s in GlobalManifest.segments_of(e))
+        chain_packed = None
+        if gm.chain or tiered:
+            _, chain_packed, _ = load_checkpoint_raw(root, step)
+            stats["bytes_read"] = int(gm.manifest.get("payload_bytes", 0))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+        try:
+            shard_flat = self._shard_leaves(shardings, flat, "restore")
+        except ValueError as e:         # config bug, not a skippable step
+            raise StateShapeError(str(e)) from e
+        entries = gm.leaves()
+        d = os.path.join(root, f"step_{step}")
+        out = []
+        with ShardReader(d, int(gm.manifest.get("shards", 0) or 1)) as rd:
+            for (path, leaf), sh in zip(flat, shard_flat):
+                name = _path_str(path)
+                e = entries.get(name)
+                if e is None:
+                    stats["missing_leaves"].append(name)
+                    arr = np.asarray(leaf)
+                    out.append(jax.device_put(arr, sh)
+                               if sh is not None else jnp.asarray(arr))
+                    continue
+                out.append(self._restore_leaf(rd, e, leaf, sh, fill, mode,
+                                              stats, chain_packed,
+                                              local_only))
+        self.last_restore_stats = stats
+        return step, jax.tree_util.tree_unflatten(treedef, out)
+
+    def _target_ranges(self, shape, sh, local_only=False):
+        """This host's target leading-axis row ranges: per-device from the
+        sharding when given, else (``local_only``) this process's
+        ownership split, else the whole leaf."""
+        if sh is not None:
+            segs = leading_axis_device_segments(sh, shape)
+            if segs is not None:
+                return [(a, b, dev) for a, b, dev in segs], True
+        if local_only and self.ctx.count > 1 and shape:
+            return [(a, b, None) for a, b, owner
+                    in process_segments(shape, self.ctx.count)
+                    if owner == self.ctx.index], False
+        rows = shape[0] if shape else 1
+        return [(0, rows, None)], False
+
+    def _restore_leaf(self, rd, e, leaf, sh, fill, mode, stats,
+                      chain_packed, local_only=False):
+        shape = tuple(e["shape"])
+        dtype = np.dtype(e["dtype"])
+        want = tuple(getattr(leaf, "shape", ()))
+        if want and want != shape:
+            raise StateShapeError(
+                f"leaf {e['name']}: checkpoint shape {shape} "
+                f"vs state {want}")
+        row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        if chain_packed is not None:
+            # chain-reconstructed (or tiered) leaves: full unpack, slice
+            full = unpack_leaf(chain_packed[e["name"]],
+                               fill=fill).reshape(-1)
+            targets, devs = self._target_ranges(shape, sh, local_only)
+            pieces = [(a, b, dev, full[a * row:b * row])
+                      for a, b, dev in targets]
+            return self._assemble(e, shape, dtype, leaf, sh, fill, mode,
+                                  stats, pieces, devs)
+
+        targets, devs = self._target_ranges(shape, sh, local_only)
+        segs = GlobalManifest.segments_of(e)
+        itemsize = dtype.itemsize
+        # per-segment mask decode + prefix sums, computed once however
+        # many target ranges (devices) intersect the segment
+        seg_cache: Dict[int, Any] = {}
+
+        def seg_mask_cum(i, s):
+            if i not in seg_cache:
+                sm = segment_mask(s, int(s["stop"]) - int(s["start"]))
+                cum = (None if sm is None
+                       else np.concatenate([[0], np.cumsum(sm)]))
+                seg_cache[i] = (sm, cum)
+            return seg_cache[i]
+
+        def read_checked(s, start_b, nbytes):
+            """Range read; a read spanning the whole entry is CRC-checked
+            against the manifest (partial ranges cannot be — they are
+            counted so callers can audit the trade-off)."""
+            raw = rd.read_range(s, start_b, nbytes)
+            stats["bytes_read"] += nbytes
+            if start_b == 0 and nbytes == int(s["length"]):
+                if zlib.crc32(raw) != s["checksum"]:
+                    raise IOError(
+                        f"checksum mismatch for leaf {e['name']} segment "
+                        f"[{s['start']}, {s['stop']})")
+            else:
+                stats["unverified_ranges"] = \
+                    stats.get("unverified_ranges", 0) + 1
+            return raw
+
+        pieces = []
+        for a, b, dev in targets:
+            flo, fhi = a * row, b * row
+            local_n = fhi - flo
+            mask_piece = np.zeros(local_n, bool)
+            pay_parts = []
+            for i, s in enumerate(segs):
+                s0, s1 = int(s["start"]), int(s["stop"])
+                lo, hi = max(flo, s0), min(fhi, s1)
+                if lo >= hi:
+                    continue
+                sm, cum = seg_mask_cum(i, s)
+                if sm is None:          # full segment: raw element range
+                    pay_parts.append(read_checked(
+                        s, (lo - s0) * itemsize, (hi - lo) * itemsize))
+                    mask_piece[lo - flo:hi - flo] = True
+                    continue
+                p0, p1 = int(cum[lo - s0]), int(cum[hi - s0])
+                if p1 > p0:
+                    pay_parts.append(read_checked(
+                        s, p0 * itemsize, (p1 - p0) * itemsize))
+                mask_piece[lo - flo:hi - flo] = sm[lo - s0:hi - s0]
+            payload = np.frombuffer(b"".join(pay_parts), dtype)
+            pieces.append((a, b, dev, (payload, mask_piece)))
+        return self._assemble(e, shape, dtype, leaf, sh, fill, mode, stats,
+                              pieces, devs, packedform=True)
+
+    def _assemble(self, e, shape, dtype, leaf, sh, fill, mode, stats,
+                  pieces, per_device, packedform=False):
+        """Expand per-target-range pieces and assemble the leaf.
+
+        Device mode expands each range through ``mask_scatter`` (payload +
+        bit-packed mask H2D only); with a per-device target layout the
+        global array is built from single-device pieces, never
+        materializing the full leaf on host.
+        """
+        want_dtype = getattr(leaf, "dtype", dtype)
+        row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        use_dev = mode in ("auto", "device")
+
+        def expand_host(piece, local_n) -> np.ndarray:
+            if not packedform:          # already-dense host slice
+                return np.ascontiguousarray(piece)
+            payload, mask = piece
+            outp = np.full(local_n, fill, dtype)
+            outp[mask] = payload
+            return outp
+
+        def expand_dev(piece, local_n, device):
+            put = (lambda x: jax.device_put(x, device)) \
+                if device is not None else jnp.asarray
+            if not packedform:
+                a = np.ascontiguousarray(piece)
+                stats["h2d_bytes"] += a.nbytes
+                return put(a)
+            payload, mask = piece
+            bits = np.packbits(mask)
+            m_dev = mask_ops.expand_mask_bits(put(bits), n=local_n)
+            arr = mask_ops.mask_scatter(put(payload), m_dev, n=local_n,
+                                        fill=fill, **self._pack_opts)
+            stats["h2d_bytes"] += payload.nbytes + bits.nbytes
+            return arr
+
+        if per_device and sh is not None and use_dev:
+            devs = []
+            for a, b, dev, piece in pieces:
+                local = expand_dev(piece, (b - a) * row, dev)
+                local = local.reshape((b - a,) + shape[1:])
+                if str(local.dtype) != str(want_dtype):
+                    local = local.astype(want_dtype)
+                devs.append(local)
+            return jax.make_array_from_single_device_arrays(
+                tuple(shape), sh, devs)
+
+        # host-local assembly: owned ranges expanded, the rest is fill
+        full_n = int(np.prod(shape)) if shape else 1
+        if use_dev and sh is None and len(pieces) == 1 \
+                and pieces[0][0] == 0 and (pieces[0][1] * row == full_n
+                                           or not shape):
+            arr = expand_dev(pieces[0][3], full_n, None).reshape(shape)
+            if str(arr.dtype) != str(want_dtype):
+                arr = arr.astype(want_dtype)
+            return arr
+        outp = np.full(full_n, fill, dtype)
+        for a, b, _dev, piece in pieces:
+            outp[a * row:b * row] = expand_host(piece, (b - a) * row)
+        outp = outp.reshape(shape).astype(want_dtype, copy=False)
+        if sh is not None:
+            stats["h2d_bytes"] += outp.nbytes
+            return jax.device_put(outp, sh)
+        return jnp.asarray(outp)

@@ -96,9 +96,13 @@ from repro.checkpoint.pipeline import (D2H_CHUNK_BYTES, QueueSource,
                                        TransferStream, ViewSource,
                                        fetch_to_host, run_transfers)
 from repro.checkpoint.store import (StreamLeaf, chain_steps,
-                                    load_checkpoint_raw, read_manifest,
+                                    committed_steps, is_step_committed,
+                                    load_checkpoint_raw,
+                                    pending_step_of_entry, read_manifest,
                                     save_checkpoint, save_delta_checkpoint,
-                                    step_of_entry, tmp_step_of_entry)
+                                    step_of_entry, sweep_retention,
+                                    tmp_owner_of_entry, tmp_step_of_entry,
+                                    tmp_writer_alive)
 from repro.core.criticality import (CriticalityReport, DeviceReport,
                                     _path_str)
 from repro.core.policy import PrecisionPolicy
@@ -154,6 +158,27 @@ def _entry_nbytes(e) -> int:
     if isinstance(e, StreamLeaf):
         return int(e.length) + len(e.leaf.aux) + len(e.leaf.region_tiers)
     return int(e.nbytes)
+
+
+def update_report(scrutiny_fn, prev, saves: int, every: int, state):
+    """Shared scrutiny schedule (single-process manager and the multi-host
+    coordinator): run ``scrutiny_fn`` when there is no report yet or the
+    re-scrutinize interval fires; device reports re-scrutinize
+    incrementally (``DeviceReport.reuse_unchanged`` — an unchanged
+    re-scrutiny returns the *identical* report object, which is what keeps
+    differential chains keyed on report identity alive).  Returns
+    ``(report, ran)`` — ``ran`` tells the caller fresh scrutiny stats are
+    available on the report."""
+    if scrutiny_fn is None:
+        return None, False
+    need = prev is None or (every and saves % every == 0)
+    if not need:
+        return prev, False
+    new = scrutiny_fn(state)
+    if (new is not prev and isinstance(new, DeviceReport)
+            and isinstance(prev, DeviceReport)):
+        new = new.reuse_unchanged(prev)
+    return new, True
 
 
 class _SaveSnapshot:
@@ -511,7 +536,8 @@ class CheckpointManager:
                  pack_interpret: bool = False,
                  io_threads: Optional[int] = None,
                  pipeline_engine: str = "auto",
-                 io_chunk_bytes: Optional[int] = None):
+                 io_chunk_bytes: Optional[int] = None,
+                 writer_ttl_s: float = 600.0):
         if save_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown save_mode {save_mode!r}")
         if restore_mode not in ("auto", "host", "device"):
@@ -540,6 +566,12 @@ class CheckpointManager:
             raise ValueError("io_threads must be >= 1")
         self._chunk_bytes = (int(io_chunk_bytes) if io_chunk_bytes
                              else D2H_CHUNK_BYTES)
+        # Per-writer owner token: tmp dirs are written as
+        # ``.tmp_step_<N>.<token>`` with a liveness file inside, so two
+        # managers sharing one directory never sweep each other's
+        # in-flight step (the sweep skips live foreign tokens).
+        self._owner = os.urandom(4).hex()
+        self._writer_ttl_s = float(writer_ttl_s)
         self._report: Optional[CriticalityReport] = None
         self._saves = 0
         # job pool: one pipeline job per level write (double-buffered, so
@@ -602,19 +634,12 @@ class CheckpointManager:
         no-op re-scrutiny returns the identical report object — which is
         what keeps differential chains (`_delta_ok` keys on report
         identity) alive across ``rescrutinize_every=1``."""
-        if self.scrutiny_fn is None:
-            return None
-        need = (self._report is None or
-                (self.rescrutinize_every and
-                 self._saves % self.rescrutinize_every == 0))
-        if need:
-            new = self.scrutiny_fn(state)
-            prev = self._report
-            if (new is not prev and isinstance(new, DeviceReport)
-                    and isinstance(prev, DeviceReport)):
-                new = new.reuse_unchanged(prev)
-            self._report = new
+        new, ran = update_report(self.scrutiny_fn, self._report,
+                                 self._saves, self.rescrutinize_every,
+                                 state)
+        if ran:
             self.last_scrutiny_stats = getattr(new, "stats", None)
+        self._report = new
         return self._report
 
     def _device_eligible(self, report) -> bool:
@@ -766,7 +791,7 @@ class CheckpointManager:
                                        shards=lv.shards, parity=lv.parity,
                                        stream=entries,
                                        submit=self._submit_io(),
-                                       order=order)
+                                       order=order, owner=self._owner)
             except BaseException as e:   # noqa: BLE001 - re-raised below
                 err = e
                 snap.abort()             # unblock a producer on full queues
@@ -801,7 +826,8 @@ class CheckpointManager:
             t1 = time.perf_counter()
             path = save_delta_checkpoint(lv.directory, step, deltas, chain,
                                          shards=lv.shards, parity=lv.parity,
-                                         submit=self._submit_io())
+                                         submit=self._submit_io(),
+                                         owner=self._owner)
             snap.stage_max("write_s", time.perf_counter() - t1)
         except BaseException:
             self._drop_chain(lv, cs)
@@ -822,64 +848,54 @@ class CheckpointManager:
     def _gc(self, lv: Level):
         """Chain-aware retention: keep the newest ``keep_n`` restorable
         steps *plus* every chain predecessor they need; sweep stale
-        ``.tmp_step_*`` dirs from crashed writers.  (Writes per level are
-        double-buffered, so no other writer is active in this directory.)"""
+        ``.tmp_step_*`` dirs from crashed writers.  A tmp dir tagged with
+        *another* writer's token is swept only when its liveness file went
+        stale — a sibling manager's in-flight write survives.  (Writes per
+        level are double-buffered, so none of *this* manager's writers are
+        active in the directory during its own ``_gc``.)"""
         with self._lock:
             try:
                 entries = os.listdir(lv.directory)
             except FileNotFoundError:
                 return
             for e in entries:
-                if tmp_step_of_entry(e) is not None:
-                    shutil.rmtree(os.path.join(lv.directory, e),
-                                  ignore_errors=True)
-            steps = sorted(s for s in (step_of_entry(d) for d in entries)
-                           if s is not None)
-            if lv.keep_n <= 0:          # retention disabled: keep everything
-                return
-            keep = steps[-lv.keep_n:]
-            needed = set(keep)
-            for s in keep:
-                try:
-                    needed.update(chain_steps(read_manifest(lv.directory, s)))
-                except (OSError, ValueError, KeyError):
-                    continue           # unreadable manifest: no deps to pin
-            for s in steps:
-                if s not in needed:
-                    shutil.rmtree(os.path.join(lv.directory, f"step_{s}"),
-                                  ignore_errors=True)
+                if tmp_step_of_entry(e) is None:
+                    # orphaned coordinated pending dirs (a multi-host run
+                    # that died before commit, now resumed single-process)
+                    # are reclaimed here too once their liveness goes stale
+                    if pending_step_of_entry(e) is not None and \
+                            not tmp_writer_alive(lv.directory, e,
+                                                 self._writer_ttl_s):
+                        shutil.rmtree(os.path.join(lv.directory, e),
+                                      ignore_errors=True)
+                    continue
+                owner = tmp_owner_of_entry(e)
+                if (owner is not None and owner != self._owner
+                        and tmp_writer_alive(lv.directory, e,
+                                             self._writer_ttl_s)):
+                    continue           # live foreign writer: not ours to GC
+                shutil.rmtree(os.path.join(lv.directory, e),
+                              ignore_errors=True)
+            sweep_retention(lv.directory, lv.keep_n)
 
     # --- restore -----------------------------------------------------------
 
     def latest(self) -> Optional[Tuple[int, str]]:
+        """Newest *committed* (step, level dir): a coordinated step whose
+        leader died between the directory rename and the commit marker is
+        partial and falls through to the newest fully-committed step."""
         best = None
         for lv in self.levels:
-            try:
-                steps = [s for s in
-                         (step_of_entry(d) for d in os.listdir(lv.directory))
-                         if s is not None]
-            except FileNotFoundError:
-                continue
-            for s in steps:
-                if os.path.exists(os.path.join(lv.directory, f"step_{s}",
-                                               "manifest.json")):
-                    if best is None or s > best[0]:
-                        best = (s, lv.directory)
+            for s in committed_steps(lv.directory):
+                if best is None or s > best[0]:
+                    best = (s, lv.directory)
         return best
 
     def _candidates(self) -> List[Tuple[int, str]]:
-        """Every complete-looking (step, level dir), newest first."""
-        out = []
-        for lv in self.levels:
-            try:
-                entries = os.listdir(lv.directory)
-            except FileNotFoundError:
-                continue
-            for d in entries:
-                s = step_of_entry(d)
-                if s is not None and os.path.exists(
-                        os.path.join(lv.directory, d, "manifest.json")):
-                    out.append((s, lv.directory))
+        """Every committed (step, level dir), newest first — same
+        partial-commit tolerance as ``latest``."""
+        out = [(s, lv.directory) for lv in self.levels
+               for s in committed_steps(lv.directory)]
         return sorted(out, key=lambda x: -x[0])
 
     def restore(self, state_like, shardings=None, fill=0,

@@ -17,6 +17,28 @@ a crash mid-write never corrupts the latest complete checkpoint.  A stale
 of the same step — its partial shard/parity files must never leak into a
 finished checkpoint (tests/test_crash_recovery.py).
 
+**Directory sharing**: a managed writer tags its tmp dirs with a per-writer
+owner token (``.tmp_step_<N>.<token>``) and keeps a liveness file
+(``.alive``, mtime-refreshed as entries land) inside.  Retention sweeps in
+*other* writers skip a tokened tmp dir whose liveness file is fresh — two
+managers pointed at one directory cannot delete each other's in-flight
+step — while legacy untokened dirs and dirs whose owner stopped refreshing
+are swept as before (tests/test_coordinated.py).
+
+**Coordinated (multi-host) checkpoints** (checkpoint/coordinator.py): every
+process writes only the shards it owns (``shard_h<p>_<k>.bin`` + a per-host
+manifest) into a shared pending dir, then a leader fuses them into one
+*global* manifest whose leaves are ``segmented`` — per leaf, an ordered
+list of flat element ranges, each backed by one host's file — renames the
+dir into place, and lands a ``commit.json`` marker.  A coordinated step
+without its marker is *not* committed (a leader death mid-commit) and is
+invisible to ``latest()``; single-process checkpoints never carry a marker
+and their atomic rename remains the commit.  ``load_checkpoint_raw``
+reassembles segmented leaves (and per-segment delta chains) into ordinary
+``PackedLeaf``s, so every restore path works unchanged on coordinated
+checkpoints; the elastic resharded restore path instead reads only the
+byte ranges intersecting its local shards (``ShardReader.read_range``).
+
 Partner XOR parity: any single missing/corrupt shard is reconstructed from
 its two neighbours' parity files without touching the global store — the
 multi-level manager uses this to survive single-node loss.
@@ -47,6 +69,7 @@ import dataclasses
 import json
 import os
 import shutil
+import time
 import zlib
 from typing import Any, Dict, List, Optional, Tuple, Union
 
@@ -54,10 +77,12 @@ import jax
 import numpy as np
 
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
-                                      pack_leaf, unpack_leaf)
+                                      pack_leaf, pack_leaf_from_payload,
+                                      unpack_leaf)
 from repro.checkpoint.pipeline import BytesSource
 from repro.core.criticality import CriticalityReport
 from repro.core.policy import PrecisionPolicy
+from repro.core.regions import regions_to_mask
 
 
 def _path_str(path) -> str:
@@ -77,13 +102,98 @@ def step_of_entry(name: str) -> Optional[int]:
 
 
 def tmp_step_of_entry(name: str) -> Optional[int]:
-    """Parse an in-flight/stale ``.tmp_step_<N>`` directory name."""
+    """Parse an in-flight/stale tmp directory name — either the legacy
+    ``.tmp_step_<N>`` or the owner-tagged ``.tmp_step_<N>.<token>``."""
     if not name.startswith(".tmp_step_"):
         return None
     try:
-        return int(name[len(".tmp_step_"):])
+        return int(name[len(".tmp_step_"):].split(".", 1)[0])
     except ValueError:
         return None
+
+
+def tmp_owner_of_entry(name: str) -> Optional[str]:
+    """Owner token of a tagged ``.tmp_step_<N>.<token>`` dir; None for the
+    legacy untagged form (or anything unparsable)."""
+    if tmp_step_of_entry(name) is None:
+        return None
+    rest = name[len(".tmp_step_"):].split(".", 1)
+    return rest[1] if len(rest) == 2 and rest[1] else None
+
+
+# Liveness file kept inside an owner-tagged tmp dir; its mtime is refreshed
+# as entries land, so a sweeping sibling writer can tell an in-flight write
+# from a crashed one.
+ALIVE_FILE = ".alive"
+
+
+def tmp_writer_alive(root: str, entry: str, ttl_s: float) -> bool:
+    """True when the tmp dir's liveness file was refreshed within
+    ``ttl_s`` seconds (``ttl_s <= 0``: any liveness file counts live).
+    A dir whose liveness file is missing falls back to the dir's own
+    mtime — it covers the instants between ``mkdir`` and the liveness
+    file's creation, so a racing sweep can never kill a write it caught
+    mid-birth; a genuinely dead dir still ages out after ``ttl_s``."""
+    base = os.path.join(root, entry)
+    for path in (os.path.join(base, ALIVE_FILE), base):
+        try:
+            age = time.time() - os.path.getmtime(path)
+        except OSError:
+            continue
+        return ttl_s <= 0 or age < ttl_s
+    return False
+
+
+def pending_step_of_entry(name: str) -> Optional[int]:
+    """Parse a coordinated save's shared ``.pending_step_<N>`` dir name."""
+    if not name.startswith(".pending_step_"):
+        return None
+    try:
+        return int(name[len(".pending_step_"):])
+    except ValueError:
+        return None
+
+
+# Commit marker of a coordinated checkpoint: written by the leader *after*
+# the fused step directory is renamed into place.  A coordinated manifest
+# without it is a partial commit and must stay invisible.
+COMMIT_MARKER = "commit.json"
+
+
+def write_commit_marker(step_dir: str, info: Dict[str, Any]) -> None:
+    tmp = os.path.join(step_dir, f".{COMMIT_MARKER}.tmp")
+    with open(tmp, "w") as f:
+        json.dump(info, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, os.path.join(step_dir, COMMIT_MARKER))
+
+
+def is_step_committed(root: str, step: int) -> bool:
+    """Visibility rule shared by ``latest``/``_candidates``/restore: a step
+    is committed when its commit marker exists, or when its manifest is
+    readable and *not* coordinated (single-process saves commit via the
+    atomic rename and never write a marker).
+
+    The common cases are decided by ``stat`` alone — this runs per step
+    on every ``latest()``/``_gc`` — using the writers' file layouts:
+    single-process steps always contain ``shard_0.bin``, coordinated ones
+    never do but always keep ``manifest.host0.json``.  Only directories
+    matching neither layout (hand-forged / foreign) pay the JSON parse.
+    """
+    d = os.path.join(root, f"step_{step}")
+    if os.path.exists(os.path.join(d, COMMIT_MARKER)):
+        return True
+    if os.path.exists(os.path.join(d, "shard_0.bin")):       # single-proc
+        return os.path.exists(os.path.join(d, "manifest.json"))
+    if os.path.exists(os.path.join(d, host_manifest_name(0))):
+        return False              # coordinated layout, marker missing
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    return "coordinated" not in manifest
 
 
 def list_steps(root: str) -> List[int]:
@@ -94,6 +204,57 @@ def list_steps(root: str) -> List[int]:
         if s is not None:
             steps.append(s)
     return steps
+
+
+def sweep_retention(root: str, keep_n: int) -> None:
+    """The one committed-step retention policy (single-process manager and
+    coordinated leader both call this, so the rules cannot drift): reap
+    dead partial commits — an uncommitted step older than the newest
+    committed one, i.e. a commit nobody will ever finish — then keep the
+    newest ``keep_n`` committed steps plus every chain predecessor they
+    reference (``keep_n <= 0`` disables retention).  Tmp/pending-dir
+    sweeping stays with the callers (their liveness rules differ)."""
+    try:
+        entries = os.listdir(root)
+    except FileNotFoundError:
+        return
+    committed, uncommitted = [], []
+    for e in entries:
+        s = step_of_entry(e)
+        if s is None:
+            continue
+        (committed if is_step_committed(root, s) else uncommitted).append(s)
+    committed.sort()
+    for s in uncommitted:
+        if committed and s < committed[-1]:
+            shutil.rmtree(os.path.join(root, f"step_{s}"),
+                          ignore_errors=True)
+    if keep_n <= 0:
+        return
+    keep = committed[-keep_n:]
+    needed = set(keep)
+    for s in keep:
+        try:
+            needed.update(chain_steps(read_manifest(root, s)))
+        except (OSError, ValueError, KeyError):
+            continue               # unreadable manifest: no deps to pin
+    for s in committed:
+        if s not in needed:
+            shutil.rmtree(os.path.join(root, f"step_{s}"),
+                          ignore_errors=True)
+
+
+def committed_steps(root: str) -> List[int]:
+    """Sorted committed steps under ``root`` — the one visibility scan
+    behind every ``latest()``/``_candidates()`` (manager and coordinator),
+    so the partial-commit rule cannot drift between them.  A missing root
+    is just empty."""
+    try:
+        entries = os.listdir(root)
+    except FileNotFoundError:
+        return []
+    return sorted(s for s in (step_of_entry(d) for d in entries)
+                  if s is not None and is_step_committed(root, s))
 
 
 def read_manifest(root: str, step: int) -> Dict[str, Any]:
@@ -206,42 +367,51 @@ def _write_parity(tmp: str, shards: int, sizes: List[int]) -> None:
                 done += m
 
 
-def _write_stream(root: str, step: int,
-                  items: List[Tuple[Dict[str, Any], int, Any]],
-                  shards: int, parity: bool,
-                  manifest_extra: Optional[Dict[str, Any]] = None,
-                  submit=None, order: Optional[List[int]] = None) -> str:
-    """Stage-3 writer of the save pipeline: stream (meta, length, source)
-    entries into per-shard files with incremental CRC, then parity,
-    manifest, and the atomic rename.  Lengths are known upfront, so the
-    shard layout (identical to the original buffered writer) is fixed
-    before the first chunk arrives and every chunk is ``pwrite``-placed at
-    its final offset — no full-payload host materialization.
+def _stream_to_files(dirpath: str,
+                     items: List[Tuple[Dict[str, Any], int, Any]],
+                     shards: int, prefix: str = "shard_",
+                     submit=None, order: Optional[List[int]] = None,
+                     touch: Optional[str] = None):
+    """Core shard-file streamer shared by the single-process writer and the
+    coordinated per-host writer: stream (meta, length, source) entries into
+    ``<prefix><k>.bin`` files with incremental CRC, every chunk
+    ``pwrite``-placed at its final offset.  Returns the finalized index
+    entries (meta + shard/offset/length/checksum, ``file`` recorded for
+    non-default prefixes) and the per-shard sizes.
 
     ``submit``: optional executor submit for overlapped per-shard writes —
     used only when every source is re-consumable (``ready``); single-pass
     queue-fed sources are drained serially in ``order`` (the transfer
     producer's feed order) to stay deadlock-free under bounded queues.
-
-    A crash/exception mid-write leaves ``.tmp_step_<N>`` behind (never the
-    final dir); the next write of the same step clears it and the
-    manager's retention sweep collects orphans.
+    ``touch``: optional liveness file path whose mtime is refreshed as
+    entries land (sibling-writer sweeps use it to spot in-flight writes).
     """
-    tmp = os.path.join(root, f".tmp_step_{step}")
-    final = os.path.join(root, f"step_{step}")
-    if os.path.exists(tmp):            # crashed writer leftovers: never merge
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-
     lengths = [int(n) for _, n, _ in items]
     shard_of, offsets, shard_sizes = _assign_shards(lengths, shards)
     crcs = [0] * len(items)
 
-    fds = [os.open(os.path.join(tmp, f"shard_{k}.bin"),
+    fds = [os.open(os.path.join(dirpath, f"{prefix}{k}.bin"),
                    os.O_CREAT | os.O_WRONLY, 0o666) for k in range(shards)]
     try:
         for k, fd in enumerate(fds):
             os.ftruncate(fd, shard_sizes[k])
+
+        # liveness refresh is rate-limited per *chunk*, not per entry: a
+        # single huge leaf streaming for longer than the sweep TTL must
+        # keep looking alive to sibling managers
+        last_touch = [time.time()]
+
+        def refresh_alive() -> None:
+            if touch is None:
+                return
+            now = time.time()
+            if now - last_touch[0] < 5.0:
+                return
+            last_touch[0] = now
+            try:
+                os.utime(touch)
+            except OSError:
+                pass
 
         def write_entry(i: int) -> None:
             fd = fds[shard_of[i]]
@@ -252,11 +422,13 @@ def _write_stream(root: str, step: int,
                 nb = memoryview(chunk).nbytes
                 crc = zlib.crc32(chunk, crc)
                 off += nb
+                refresh_alive()
             if off - offsets[i] != lengths[i]:
                 raise IOError(
                     f"stream for leaf {items[i][0].get('name')} produced "
                     f"{off - offsets[i]} bytes; manifest says {lengths[i]}")
             crcs[i] = crc
+            refresh_alive()
 
         all_ready = all(getattr(s, "ready", True) for _, _, s in items)
         if submit is not None and all_ready and shards > 1:
@@ -280,9 +452,6 @@ def _write_stream(root: str, step: int,
         else:
             for i in (order if order is not None else range(len(items))):
                 write_entry(i)
-
-        if parity and shards > 1:
-            _write_parity(tmp, shards, shard_sizes)
     finally:
         for fd in fds:
             os.close(fd)
@@ -292,7 +461,51 @@ def _write_stream(root: str, step: int,
         meta = dict(meta)
         meta["checksum"] = crcs[i]
         meta.update(shard=shard_of[i], offset=offsets[i], length=lengths[i])
+        if prefix != "shard_":
+            meta["file"] = f"{prefix}{shard_of[i]}.bin"
         index.append(meta)
+    return index, shard_sizes
+
+
+def _write_stream(root: str, step: int,
+                  items: List[Tuple[Dict[str, Any], int, Any]],
+                  shards: int, parity: bool,
+                  manifest_extra: Optional[Dict[str, Any]] = None,
+                  submit=None, order: Optional[List[int]] = None,
+                  owner: Optional[str] = None) -> str:
+    """Stage-3 writer of the save pipeline: stream (meta, length, source)
+    entries into per-shard files with incremental CRC, then parity,
+    manifest, and the atomic rename.  Lengths are known upfront, so the
+    shard layout (identical to the original buffered writer) is fixed
+    before the first chunk arrives and every chunk is ``pwrite``-placed at
+    its final offset — no full-payload host materialization.
+
+    ``owner``: a managed writer's token — the tmp dir becomes
+    ``.tmp_step_<N>.<owner>`` and carries a liveness file so sibling
+    writers sharing the directory never sweep this in-flight write.
+
+    A crash/exception mid-write leaves the tmp dir behind (never the final
+    dir); the next write of the same step clears it and the manager's
+    retention sweep collects orphans.
+    """
+    suffix = f".{owner}" if owner else ""
+    tmp = os.path.join(root, f".tmp_step_{step}{suffix}")
+    final = os.path.join(root, f"step_{step}")
+    if os.path.exists(tmp):            # crashed writer leftovers: never merge
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    alive = None
+    if owner:
+        alive = os.path.join(tmp, ALIVE_FILE)
+        with open(alive, "w"):
+            pass
+
+    index, shard_sizes = _stream_to_files(tmp, items, shards,
+                                          submit=submit, order=order,
+                                          touch=alive)
+    if parity and shards > 1:
+        _write_parity(tmp, shards, shard_sizes)
+
     manifest = {"step": step, "shards": shards, "parity": parity,
                 "leaves": index,
                 "payload_bytes": int(sum(shard_sizes))}
@@ -304,6 +517,15 @@ def _write_stream(root: str, step: int,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    if alive is not None:
+        # removed only *after* the rename: a sibling sweep that catches
+        # the dir between liveness removal and rename would otherwise
+        # rmtree a fully-written checkpoint.  (A crash in this window
+        # leaves a harmless dotfile behind.)
+        try:
+            os.unlink(os.path.join(final, ALIVE_FILE))
+        except OSError:
+            pass
     return final
 
 
@@ -322,13 +544,147 @@ def _as_stream_item(e) -> Tuple[Dict[str, Any], int, Any]:
 def _write_entries(root: str, step: int,
                    entries: List[Tuple[Dict[str, Any], bytes]],
                    shards: int, parity: bool,
-                   manifest_extra: Optional[Dict[str, Any]] = None) -> str:
+                   manifest_extra: Optional[Dict[str, Any]] = None,
+                   owner: Optional[str] = None) -> str:
     """Buffered-entry writer, now a thin wrapper over the streaming one:
     identical bytes by construction (single write path)."""
     items = [(meta, len(payload), BytesSource(bytes(payload)))
              for meta, payload in entries]
     return _write_stream(root, step, items, shards, parity,
-                         manifest_extra=manifest_extra)
+                         manifest_extra=manifest_extra, owner=owner)
+
+
+# --------------------------------------------------------------------------
+# Coordinated (multi-host) writes: per-host shard files + manifests
+# --------------------------------------------------------------------------
+
+def host_manifest_name(host: int) -> str:
+    return f"manifest.host{int(host)}.json"
+
+
+def host_shard_prefix(host: int) -> str:
+    return f"shard_h{int(host)}_"
+
+
+def write_host_entries(pending_dir: str, host: int, entries: List[Any],
+                       shards: int = 1,
+                       extra: Optional[Dict[str, Any]] = None) -> str:
+    """Phase 1 of the coordinated commit: write one host's owned entries
+    into the shared pending dir.
+
+    Shard files are namespaced per host (``shard_h<p>_<k>.bin``) so hosts
+    never contend on a file, and the per-host manifest is written last via
+    rename — its presence means this host's bytes are durably complete.
+    ``entries``: either ready ``(meta, length, source)`` stream items or
+    ``PackedLeaf``/``DeltaLeaf``/``StreamLeaf`` values; metas must carry
+    the segment's flat element range (``start``/``stop``) and the leaf's
+    *global* shape.
+    """
+    items = [e if isinstance(e, tuple) else _as_stream_item(e)
+             for e in entries]
+    # shared liveness file (any host's refresh counts): a sweeping sibling
+    # leader must see a long-streaming phase 1 as alive, exactly like the
+    # single-process .tmp dirs
+    alive = os.path.join(pending_dir, ALIVE_FILE)
+    with open(alive, "w"):
+        pass
+    index, shard_sizes = _stream_to_files(pending_dir, items, shards,
+                                          prefix=host_shard_prefix(host),
+                                          touch=alive)
+    manifest = {"host": int(host), "shards": int(shards),
+                "payload_bytes": int(sum(shard_sizes)), "leaves": index}
+    if extra:
+        manifest.update(extra)
+    final = os.path.join(pending_dir, host_manifest_name(host))
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+    return final
+
+
+def fuse_global_manifest(pending_dir: str, step: int, process_count: int,
+                         manifest_extra: Optional[Dict[str, Any]] = None,
+                         host_manifests: Optional[Dict[int, Dict[str, Any]]]
+                         = None) -> Dict[str, Any]:
+    """Phase 2 (leader): fuse the per-host manifests into one *global*
+    manifest describing every leaf as an ordered list of segments.
+
+    Validates that all ``process_count`` hosts landed and that each leaf's
+    segments tile its flat range exactly once; raises on gaps/overlaps so a
+    mis-partitioned save can never commit.  The fused manifest is written
+    atomically as ``manifest.json`` inside the pending dir (the caller then
+    renames the dir and lands the commit marker).  ``host_manifests``:
+    already-parsed per-host manifests (the coordinator loads them once for
+    its agreement check) — missing hosts are still read from disk."""
+    hosts = dict(host_manifests or {})
+    for p in range(process_count):
+        if p in hosts:
+            continue
+        path = os.path.join(pending_dir, host_manifest_name(p))
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"coordinated step {step}: host {p} manifest missing")
+        with open(path) as f:
+            hosts[p] = json.load(f)
+
+    by_name: Dict[str, List[Dict[str, Any]]] = {}
+    info: Dict[str, Dict[str, Any]] = {}
+    order: List[str] = []
+    for p in sorted(hosts):
+        for e in hosts[p]["leaves"]:
+            name = e["name"]
+            if name not in by_name:
+                by_name[name] = []
+                order.append(name)
+            by_name[name].append(dict(e, host=p))
+            info.setdefault(name, {"shape": e["shape"],
+                                   "dtype": e["dtype"]})
+
+    leaves = []
+    payload_bytes = 0
+    full_bytes = 0
+    for name in order:
+        segs = sorted(by_name[name], key=lambda e: int(e["start"]))
+        shape = info[name]["shape"]
+        n = int(np.prod(shape or [1]))
+        cursor = 0
+        for s in segs:
+            if int(s["start"]) != cursor:
+                raise ValueError(
+                    f"coordinated step {step}: leaf {name} segments have a "
+                    f"gap/overlap at element {cursor} (next segment starts "
+                    f"at {s['start']})")
+            cursor = int(s["stop"])
+            payload_bytes += int(s["length"])
+        if cursor != n:
+            raise ValueError(
+                f"coordinated step {step}: leaf {name} segments cover "
+                f"[0, {cursor}) of {n} elements")
+        full_bytes += n * np.dtype(info[name]["dtype"]).itemsize
+        seg_entries = [{k: v for k, v in s.items() if k != "shape"}
+                       for s in segs]
+        leaves.append({"name": name, "shape": list(shape),
+                       "dtype": info[name]["dtype"],
+                       "encoding": "segmented", "segments": seg_entries})
+
+    manifest = {"step": int(step), "shards": 0, "parity": False,
+                "coordinated": {"process_count": int(process_count),
+                                "format": "coordinated-v1"},
+                "leaves": leaves,
+                "payload_bytes": int(payload_bytes),
+                "full_bytes": int(full_bytes)}
+    if manifest_extra:
+        manifest.update(manifest_extra)
+    tmp = os.path.join(pending_dir, ".manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, os.path.join(pending_dir, "manifest.json"))
+    return manifest
 
 
 def save_checkpoint(root: str, step: int, state: Any,
@@ -337,7 +693,8 @@ def save_checkpoint(root: str, step: int, state: Any,
                     shards: int = 1, parity: bool = False,
                     prepacked: Optional[Dict[str, PackedLeaf]] = None,
                     stream: Optional[List[Any]] = None,
-                    submit=None, order: Optional[List[int]] = None) -> str:
+                    submit=None, order: Optional[List[int]] = None,
+                    owner: Optional[str] = None) -> str:
     """Write ``state`` (pytree) at ``step``; if ``report`` is given, only
     critical elements are stored (the paper's reduced checkpoint).
 
@@ -359,7 +716,7 @@ def save_checkpoint(root: str, step: int, state: Any,
             for m, _, _ in items))
         return _write_stream(root, step, items, shards, parity,
                              manifest_extra={"full_bytes": full_bytes},
-                             submit=submit, order=order)
+                             submit=submit, order=order, owner=owner)
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
     packed: List[PackedLeaf] = []
     for path, leaf in flat:
@@ -384,14 +741,15 @@ def save_checkpoint(root: str, step: int, state: Any,
         for p in packed))
     entries = [(_packed_entry(p), bytes(p.payload)) for p in packed]
     return _write_entries(root, step, entries, shards, parity,
-                          manifest_extra={"full_bytes": full_bytes})
+                          manifest_extra={"full_bytes": full_bytes},
+                          owner=owner)
 
 
 def save_delta_checkpoint(root: str, step: int,
                           deltas: Dict[str, Union[DeltaLeaf, PackedLeaf]],
                           chain: List[int],
                           shards: int = 1, parity: bool = False,
-                          submit=None) -> str:
+                          submit=None, owner: Optional[str] = None) -> str:
     """Write a differential checkpoint: per leaf either a ``DeltaLeaf``
     patch against the predecessor step's payload, a full ``PackedLeaf``
     replacement, or a ``StreamLeaf`` (a full replacement whose payload
@@ -405,7 +763,7 @@ def save_delta_checkpoint(root: str, step: int,
     extra = {"chain": {"base_step": int(chain[0]),
                        "delta_chain": [int(s) for s in chain]}}
     return _write_stream(root, step, items, shards, parity,
-                         manifest_extra=extra, submit=submit)
+                         manifest_extra=extra, submit=submit, owner=owner)
 
 
 # --------------------------------------------------------------------------
@@ -414,13 +772,20 @@ def save_delta_checkpoint(root: str, step: int,
 
 class ShardReader:
     """Per-leaf streaming reads over one checkpoint directory: seeks into
-    shard files instead of slurping whole blobs; a missing/short shard
-    falls back to whole-shard partner-XOR reconstruction (cached)."""
+    shard files instead of slurping whole blobs; a missing/short numbered
+    shard falls back to whole-shard partner-XOR reconstruction (cached).
+
+    Entries carrying a ``file`` key (a coordinated checkpoint's per-host
+    shard files) read from that file directly — no parity exists for them.
+    ``read_range`` reads a byte sub-range *within* an entry's payload: the
+    elastic resharded restore path uses it to fetch only the bytes
+    intersecting its local shards.
+    """
 
     def __init__(self, d: str, shards: int):
         self.d = d
         self.shards = shards
-        self._handles: Dict[int, Any] = {}
+        self._handles: Dict[str, Any] = {}
         self._rebuilt: Dict[int, bytes] = {}
 
     def __enter__(self):
@@ -450,21 +815,40 @@ class ShardReader:
         return self._rebuilt[k]
 
     def read(self, entry: Dict[str, Any]) -> bytes:
-        k = int(entry["shard"])
-        off = int(entry["offset"])
-        length = int(entry["length"])
-        if k in self._rebuilt:
-            return self._rebuilt[k][off:off + length]
-        if k not in self._handles:
-            path = os.path.join(self.d, f"shard_{k}.bin")
+        return self.read_range(entry, 0, int(entry["length"]))
+
+    def read_range(self, entry: Dict[str, Any], start: int,
+                   length: int) -> bytes:
+        """Bytes ``[start, start + length)`` of one entry's payload."""
+        base = int(entry["offset"])
+        total = int(entry["length"])
+        if not 0 <= start <= start + length <= total:
+            raise ValueError(
+                f"range [{start}, {start + length}) outside entry of "
+                f"{total} bytes for leaf {entry.get('name')}")
+        fname = entry.get("file")
+        numbered = fname is None
+        if numbered:
+            k = int(entry["shard"])
+            fname = f"shard_{k}.bin"
+            if k in self._rebuilt:
+                return self._rebuilt[k][base + start:base + start + length]
+        if fname not in self._handles:
+            path = os.path.join(self.d, fname)
             if not os.path.exists(path):
-                return self._rebuild(k)[off:off + length]
-            self._handles[k] = open(path, "rb")
-        f = self._handles[k]
-        f.seek(off)
+                if numbered:
+                    return self._rebuild(k)[base + start:
+                                            base + start + length]
+                raise FileNotFoundError(
+                    f"shard file {fname} missing in {self.d}")
+            self._handles[fname] = open(path, "rb")
+        f = self._handles[fname]
+        f.seek(base + start)
         data = f.read(length)
         if len(data) != length:       # truncated shard: try parity rebuild
-            return self._rebuild(k)[off:off + length]
+            if numbered:
+                return self._rebuild(k)[base + start:base + start + length]
+            raise IOError(f"shard file {fname} truncated in {self.d}")
         return data
 
 
@@ -496,6 +880,65 @@ def _entry_to_packed(e: Dict[str, Any], payload: bytes) -> PackedLeaf:
         region_tiers=base64.b64decode(e.get("region_tiers", "")))
 
 
+def segment_mask(entry: Dict[str, Any], seg_n: int) -> Optional[np.ndarray]:
+    """Flat bool mask of one (segment or whole-leaf) entry's critical
+    elements over its ``seg_n`` elements; None for ``full`` entries."""
+    enc = entry["encoding"]
+    if enc == "full":
+        return None
+    aux = base64.b64decode(entry["aux"])
+    if enc == "regions":
+        regions = np.frombuffer(aux, np.int64).reshape(-1, 2)
+        return regions_to_mask(regions, seg_n)
+    if enc == "bitmap":
+        return np.unpackbits(
+            np.frombuffer(aux, np.uint8))[:seg_n].astype(bool)
+    raise ValueError(f"entry for leaf {entry.get('name')} has "
+                     f"non-base encoding {enc!r}")
+
+
+def _apply_chain_entry(key, e, raw, s, payloads, meta) -> None:
+    """Fold one (crc-verified) manifest entry into the chain-walk state:
+    base payloads replace, deltas patch in place."""
+    if e["encoding"] == "delta":
+        if key not in payloads:
+            raise IOError(f"delta for leaf {e['name']} at step {s} "
+                          f"has no base payload in the chain")
+        buf = payloads[key]
+        if buf.size != int(e["total_bytes"]):
+            raise IOError(
+                f"delta for leaf {e['name']} at step {s} patches "
+                f"{e['total_bytes']} bytes; base has {buf.size}")
+        idx = np.frombuffer(base64.b64decode(e["aux"]), np.int32)
+        apply_delta(buf, idx, raw, int(e["chunk_bytes"]))
+    else:
+        payloads[key] = np.frombuffer(raw, np.uint8).copy()
+        meta[key] = e
+
+
+def _merge_segments(name: str, shape, dtype: str,
+                    segs: List[Tuple[Dict[str, Any], np.ndarray]]
+                    ) -> PackedLeaf:
+    """Reassemble a segmented leaf's per-host pieces into one ordinary
+    ``PackedLeaf``: payloads concatenate in segment order (segments tile
+    the flat range in order, so this *is* the global critical payload) and
+    per-segment masks are placed at their element offsets."""
+    n = int(np.prod(shape or [1]))
+    segs = sorted(segs, key=lambda se: int(se[0]["start"]))
+    if all(e["encoding"] == "full" for e, _ in segs):
+        mask = None
+    else:
+        mask = np.zeros(n, bool)
+        for e, _ in segs:
+            lo, hi = int(e["start"]), int(e["stop"])
+            sm = segment_mask(e, hi - lo)
+            mask[lo:hi] = True if sm is None else sm
+    payload = b"".join(buf.tobytes() for _, buf in segs)
+    return pack_leaf_from_payload(
+        name, tuple(shape), dtype, mask,
+        np.frombuffer(payload, np.dtype(dtype)))
+
+
 def load_checkpoint_raw(root: str, step: Optional[int] = None
                         ) -> Tuple[int, Dict[str, PackedLeaf],
                                    Dict[str, Any]]:
@@ -504,52 +947,80 @@ def load_checkpoint_raw(root: str, step: Optional[int] = None
     payloads — no unpacking/expansion happens here, so callers can move only
     the critical payload to device (the device-resident restore path).
 
+    Coordinated checkpoints are transparent: each ``segmented`` leaf's
+    per-host pieces (and per-segment delta chains) are reassembled into an
+    ordinary ``PackedLeaf``, so single-process restore of a multi-host save
+    needs no special casing.
+
     Integrity: every full payload and every delta patch is crc-checked as
     read; the reconstructed payload is a pure function of verified bytes.
     """
     if step is None:
-        steps = list_steps(root)
+        # same visibility rule as latest(): an uncommitted coordinated
+        # step (leader died mid-commit) is not "the checkpoint" — the
+        # next leader GC will reap it
+        steps = committed_steps(root)
         if not steps:
-            raise FileNotFoundError(f"no checkpoints under {root}")
+            raise FileNotFoundError(f"no committed checkpoints under {root}")
         step = max(steps)
     manifest = read_manifest(root, step)
     todo = chain_steps(manifest) + [step]
 
-    payloads: Dict[str, np.ndarray] = {}        # mutable uint8 buffers
-    meta: Dict[str, Dict[str, Any]] = {}
+    # chain-walk state, keyed (name,) for whole leaves and
+    # (name, start, stop) for coordinated segments
+    payloads: Dict[Tuple, np.ndarray] = {}      # mutable uint8 buffers
+    meta: Dict[Tuple, Dict[str, Any]] = {}
+    leafinfo: Dict[str, Dict[str, Any]] = {}
+    order: List[str] = []
     for s in todo:
         m = manifest if s == step else read_manifest(root, s)
         d = os.path.join(root, f"step_{s}")
         with ShardReader(d, int(m["shards"])) as reader:
             for e in m["leaves"]:
+                name = e["name"]
+                if name not in leafinfo:
+                    order.append(name)
+                    leafinfo[name] = {"shape": e["shape"],
+                                      "dtype": e["dtype"]}
+                if e.get("encoding") == "segmented":
+                    for seg in e["segments"]:
+                        raw = reader.read(seg)
+                        if zlib.crc32(raw) != seg["checksum"]:
+                            raise IOError(
+                                f"checksum mismatch for leaf {name} segment "
+                                f"[{seg['start']}, {seg['stop']}) at step "
+                                f"{s}")
+                        key = (name, int(seg["start"]), int(seg["stop"]))
+                        _apply_chain_entry(key, dict(seg, name=name), raw, s,
+                                           payloads, meta)
+                    continue
                 raw = reader.read(e)
                 if zlib.crc32(raw) != e["checksum"]:
-                    raise IOError(f"checksum mismatch for leaf {e['name']} "
+                    raise IOError(f"checksum mismatch for leaf {name} "
                                   f"at step {s}")
-                name = e["name"]
-                if e["encoding"] == "delta":
-                    if name not in payloads:
-                        raise IOError(f"delta for leaf {name} at step {s} "
-                                      f"has no base payload in the chain")
-                    buf = payloads[name]
-                    if buf.size != int(e["total_bytes"]):
-                        raise IOError(
-                            f"delta for leaf {name} at step {s} patches "
-                            f"{e['total_bytes']} bytes; base has {buf.size}")
-                    idx = np.frombuffer(base64.b64decode(e["aux"]), np.int32)
-                    apply_delta(buf, idx, raw, int(e["chunk_bytes"]))
-                else:
-                    payloads[name] = np.frombuffer(raw, np.uint8).copy()
-                    meta[name] = e
+                _apply_chain_entry((name,), e, raw, s, payloads, meta)
+
+    by_name: Dict[str, List[Tuple[Tuple, Dict[str, Any], np.ndarray]]] = {}
+    for key, buf in payloads.items():
+        if key not in meta:
+            raise IOError(f"leaf {key[0]} has deltas but no base entry")
+        by_name.setdefault(key[0], []).append((key, meta[key], buf))
 
     out = {}
-    for name, buf in payloads.items():
-        if name not in meta:
-            raise IOError(f"leaf {name} has deltas but no base entry")
-        payload = buf.tobytes()
-        e = dict(meta[name])
-        e["checksum"] = zlib.crc32(payload)   # chain integrity checked above
-        out[name] = _entry_to_packed(e, payload)
+    for name in order:
+        pieces = by_name.get(name)
+        if pieces is None:
+            continue
+        if len(pieces) == 1 and len(pieces[0][0]) == 1:   # plain whole leaf
+            _, e, buf = pieces[0]
+            payload = buf.tobytes()
+            e = dict(e)
+            e["checksum"] = zlib.crc32(payload)  # chain integrity above
+            out[name] = _entry_to_packed(e, payload)
+        else:
+            out[name] = _merge_segments(
+                name, leafinfo[name]["shape"], leafinfo[name]["dtype"],
+                [(m, b) for _, m, b in pieces])
     return step, out, manifest
 
 

@@ -1,0 +1,344 @@
+"""Multi-host coordination primitives for coordinated checkpointing.
+
+Checkpointing a sharded job is a *collective* operation: every process
+writes only the shards it owns, then all of them must agree the step is
+complete before it becomes visible (checkpoint/coordinator.py implements
+the two-phase commit on top of these primitives).  This module owns the
+two things the coordinator needs from the outside world:
+
+- **Process identity** (``ProcessContext``): who am I, how many of us are
+  there, who is the leader.  Resolved from ``jax.process_index()`` /
+  ``jax.process_count()`` in a real multi-controller job, or from the
+  ``REPRO_PROCESS_INDEX`` / ``REPRO_PROCESS_COUNT`` environment variables
+  when multi-host is *simulated* by independent single-process jax
+  runtimes (the subprocess/thread test harnesses, single-node launchers).
+
+- **Barriers** (``Collective.barrier``): rendezvous points between the
+  commit phases.  Two interchangeable backends:
+
+  * ``JaxCollective`` — ``jax.experimental.multihost_utils.
+    sync_global_devices`` on a real multi-process jax runtime (the
+    barrier rides the ICI/DCN collective fabric; no timeout — the
+    runtime owns failure detection);
+  * ``FileCollective`` — filesystem rendezvous over a shared directory:
+    each participant touches ``b_<name>.p<i>`` and spins until all
+    ``count`` files exist, with a timeout so the death of one host turns
+    into a ``TimeoutError`` on the survivors instead of a hang.  This is
+    the fallback for tests and for launchers whose jax runtimes are
+    independent (each host sees only its own devices but all hosts share
+    a filesystem).
+
+Barrier names must be unique per rendezvous (the coordinator derives them
+from a per-manager monotonically increasing sequence number, which stays
+consistent across hosts because every host calls ``save`` in the same
+order — the usual SPMD discipline).  Stale barrier files from a crashed
+previous run are cleared by the leader at construction; a live host whose
+file was swept by that cleanup simply re-touches it from its wait loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import time
+from typing import List, Optional, Tuple
+
+_ENV_INDEX = "REPRO_PROCESS_INDEX"
+_ENV_COUNT = "REPRO_PROCESS_COUNT"
+_ENV_COORD = "REPRO_COORD_DIR"
+
+_NAME_RE = re.compile(r"[^A-Za-z0-9._-]")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessContext:
+    """Identity of this process within the coordinated job."""
+    index: int
+    count: int
+
+    def __post_init__(self):
+        if not 0 <= self.index < self.count:
+            raise ValueError(
+                f"process index {self.index} outside [0, {self.count})")
+
+    @property
+    def is_leader(self) -> bool:
+        return self.index == 0
+
+
+def current_context() -> ProcessContext:
+    """Resolve this process's identity.
+
+    ``REPRO_PROCESS_INDEX``/``REPRO_PROCESS_COUNT`` (the simulated
+    multi-host harness) win over the jax runtime's notion — a simulated
+    host is a *single-process* jax runtime, so ``jax.process_count()``
+    would report 1 for every participant.
+    """
+    if _ENV_COUNT in os.environ:
+        return ProcessContext(index=int(os.environ.get(_ENV_INDEX, "0")),
+                              count=int(os.environ[_ENV_COUNT]))
+    try:
+        import jax
+        return ProcessContext(index=jax.process_index(),
+                              count=jax.process_count())
+    except Exception:   # noqa: BLE001 - jax not initialized / unavailable
+        return ProcessContext(index=0, count=1)
+
+
+class Collective:
+    """Barrier provider bound to a ``ProcessContext``."""
+
+    def __init__(self, ctx: ProcessContext):
+        self.ctx = ctx
+
+    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+        raise NotImplementedError
+
+    def cleanup(self, before_seq: int) -> None:
+        """Drop this process's rendezvous residue for barriers whose
+        sequence number is ``< before_seq`` (no-op unless the backend
+        leaves files behind)."""
+
+    def close(self) -> None:
+        pass
+
+
+class NullCollective(Collective):
+    """Single-process job: every barrier is trivially satisfied."""
+
+    def __init__(self, ctx: Optional[ProcessContext] = None):
+        super().__init__(ctx or ProcessContext(0, 1))
+        if self.ctx.count != 1:
+            raise ValueError("NullCollective requires process_count == 1")
+
+    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+        return None
+
+
+class JaxCollective(Collective):
+    """Real multi-controller jax runtime: barrier over the device fabric.
+
+    ``timeout`` is ignored — the distributed runtime owns liveness (a dead
+    host fails the whole job well before a checkpoint barrier would)."""
+
+    def __init__(self, ctx: Optional[ProcessContext] = None):
+        import jax
+        super().__init__(ctx or ProcessContext(jax.process_index(),
+                                               jax.process_count()))
+
+    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(_NAME_RE.sub("_", name))
+
+
+class FileCollective(Collective):
+    """Filesystem rendezvous over a shared directory.
+
+    Each participant touches ``b_<name>.p<index>`` and polls until all
+    ``count`` participant files for that name exist.  The poll loop
+    re-touches its own file if it goes missing (so the constructor's
+    stale-file cleanup can never wedge a live barrier), and raises
+    ``TimeoutError`` naming the missing participants when the deadline
+    passes — a dead host fails the collective instead of hanging it.
+    """
+
+    def __init__(self, directory: str, ctx: Optional[ProcessContext] = None,
+                 poll_s: float = 0.01, timeout_s: float = 120.0):
+        super().__init__(ctx or current_context())
+        self.directory = directory
+        self.poll_s = float(poll_s)
+        self.timeout_s = float(timeout_s)
+        os.makedirs(directory, exist_ok=True)
+        # Leftovers from a crashed previous run would satisfy this run's
+        # barriers instantly (sequence numbers restart every run), so the
+        # leader sweeps *every* barrier file at construction — even fresh
+        # ones a fast supervisor restart carried over.  A live host whose
+        # in-flight file got swept re-touches it from its wait loop, so
+        # the only casualty of an over-eager sweep is a retry, never a
+        # barrier that passes with a dead run's files.  (One coordination
+        # dir therefore serves one job at a time.)
+        if self.ctx.is_leader:
+            for f in os.listdir(directory):
+                if not f.startswith("b_"):
+                    continue
+                try:
+                    os.unlink(os.path.join(directory, f))
+                except OSError:
+                    continue
+
+    def _path(self, name: str, index: int) -> str:
+        return os.path.join(self.directory,
+                            f"b_{_NAME_RE.sub('_', name)}.p{index}")
+
+    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+        mine = self._path(name, self.ctx.index)
+        with open(mine, "w") as f:
+            f.write(str(self.ctx.index))
+        deadline = time.monotonic() + (self.timeout_s if timeout is None
+                                       else float(timeout))
+        while True:
+            missing = [j for j in range(self.ctx.count)
+                       if not os.path.exists(self._path(name, j))]
+            if not missing:
+                return
+            if self.ctx.index in missing:   # swept by a leader cleanup
+                with open(mine, "w") as f:
+                    f.write(str(self.ctx.index))
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"barrier {name!r}: processes {missing} of "
+                    f"{self.ctx.count} never arrived")
+            time.sleep(self.poll_s)
+
+    def cleanup(self, before_seq: int) -> None:
+        """Unlink this process's *own* files for barriers tagged
+        ``q<seq>.`` with ``seq < before_seq``.  Safe because barriers are
+        strictly ordered per process: reaching sequence N implies every
+        participant passed N-1 and earlier."""
+        suffix = f".p{self.ctx.index}"
+        for f in os.listdir(self.directory):
+            if not (f.startswith("b_q") and f.endswith(suffix)):
+                continue
+            try:
+                seq = int(f[len("b_q"):].split(".", 1)[0])
+            except ValueError:
+                continue
+            if seq < before_seq:
+                try:
+                    os.unlink(os.path.join(self.directory, f))
+                except OSError:
+                    pass
+
+
+def get_collective(backend: str = "auto",
+                   coord_dir: Optional[str] = None,
+                   ctx: Optional[ProcessContext] = None,
+                   **kwargs) -> Collective:
+    """Pick the coordination backend.
+
+    ``auto``: a simulated multi-host context (``REPRO_PROCESS_COUNT`` env,
+    or an explicit ``ctx`` with ``count > 1``) uses the filesystem
+    rendezvous (``coord_dir`` or ``REPRO_COORD_DIR`` must name the shared
+    directory); a real multi-process jax runtime uses the device-fabric
+    barrier; anything else is the single-process no-op.
+    """
+    if backend not in ("auto", "jax", "file", "null"):
+        raise ValueError(f"unknown collective backend {backend!r}")
+    ctx = ctx or current_context()
+    coord_dir = coord_dir or os.environ.get(_ENV_COORD)
+    if backend == "null" or (backend == "auto" and ctx.count == 1):
+        return NullCollective(ctx if ctx.count == 1 else None)
+    if backend == "file" or (backend == "auto" and _ENV_COUNT in os.environ):
+        # The simulation env means every participant is an *independent*
+        # single-process jax runtime: the fabric barrier would be a no-op
+        # there and the commit protocol would run unsynchronized, so a
+        # missing rendezvous dir is a hard error rather than a fallback.
+        if coord_dir is None:
+            raise ValueError("file collective needs coord_dir "
+                             f"(or ${_ENV_COORD})")
+        return FileCollective(coord_dir, ctx=ctx, **kwargs)
+    return JaxCollective(ctx)
+
+
+# --------------------------------------------------------------------------
+# Shard ownership: which flat element ranges of a leaf this process writes
+# --------------------------------------------------------------------------
+
+def process_segments(shape: Tuple[int, ...], count: int,
+                     sharding=None) -> List[Tuple[int, int, int]]:
+    """Partition a leaf's leading axis into per-process owned segments.
+
+    Returns ``[(row_start, row_stop, owner_process)]`` covering
+    ``[0, shape[0])`` exactly, sorted.  Ownership is *deterministic* — every
+    process computes the same table, so the union of all hosts' writes
+    covers every element exactly once:
+
+    - When ``sharding`` (a ``NamedSharding``) tiles the leading axis over a
+      mesh whose devices span multiple jax processes, each device's segment
+      is owned by the lowest process index holding a replica of it — the
+      natural "I already have these bytes locally" assignment.
+    - Otherwise (simulated multi-host, replicated leaves, or layouts that
+      slice non-leading dims) the leading axis is split into ``count``
+      near-equal contiguous blocks.  Scalars and leaves with fewer rows
+      than processes collapse to leader ownership of the whole leaf.
+    """
+    if count < 1:
+        raise ValueError("process count must be >= 1")
+    rows = int(shape[0]) if shape else 0
+    if not shape or rows == 0:
+        return [(0, rows, 0)] if shape else [(0, 0, 0)]
+    seg = _device_process_segments(shape, sharding)
+    if seg is not None:
+        return seg
+    if rows < count or count == 1:
+        return [(0, rows, 0)]
+    base, rem = divmod(rows, count)
+    out = []
+    start = 0
+    for p in range(count):
+        stop = start + base + (1 if p < rem else 0)
+        out.append((start, stop, p))
+        start = stop
+    return out
+
+
+def _device_process_segments(shape, sharding):
+    """Leading-axis segments mapped to owning processes via the sharding's
+    device placement; None when the layout is unsupported or the mesh is
+    single-process (the uniform split is then authoritative)."""
+    if sharding is None or not hasattr(sharding, "devices_indices_map"):
+        return None
+    try:
+        idx_map = sharding.devices_indices_map(tuple(shape))
+    except (TypeError, ValueError):
+        return None
+    owners = {}
+    stops = {}
+    procs = set()
+    for dev, idx in idx_map.items():
+        if idx is None or len(idx) != len(shape):
+            return None
+        for d, sl in enumerate(idx[1:], start=1):
+            if sl.step not in (None, 1) or sl.start not in (None, 0):
+                return None
+            if sl.stop is not None and sl.stop != shape[d]:
+                return None
+        sl0 = idx[0]
+        if sl0.step not in (None, 1):
+            return None
+        s = sl0.start or 0
+        e = shape[0] if sl0.stop is None else sl0.stop
+        proc = getattr(dev, "process_index", 0)
+        procs.add(proc)
+        if s not in owners or proc < owners[s]:
+            owners[s] = proc
+            stops[s] = e
+    if len(procs) <= 1:
+        return None                     # single-process mesh: uniform split
+    starts = sorted(owners)
+    if not starts or starts[0] != 0 or stops[starts[-1]] != shape[0]:
+        return None
+    for a, b in zip(starts, starts[1:]):
+        if stops[a] != b:
+            return None
+    return [(s, stops[s], owners[s]) for s in starts]
+
+
+def owned_ranges(shape: Tuple[int, ...], ctx: ProcessContext,
+                 sharding=None) -> List[Tuple[int, int]]:
+    """Flat element ranges of a leaf this process owns: each owned
+    leading-axis segment ``[lo, hi)`` spans flat ``[lo*row, hi*row)`` where
+    ``row`` is the product of the non-leading dims."""
+    import numpy as np
+    row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+    n = int(np.prod(shape)) if shape else 1
+    if not shape:
+        return [(0, 1)] if ctx.index == 0 else []
+    out = []
+    for lo, hi, owner in process_segments(shape, ctx.count, sharding):
+        if owner == ctx.index and hi > lo:
+            out.append((lo * row, hi * row))
+    if not out and n == 0 and ctx.index == 0:
+        out.append((0, 0))
+    return out

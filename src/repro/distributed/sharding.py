@@ -427,6 +427,16 @@ def _leading_axis_segments(sharding, shape
     return out
 
 
+def leading_axis_device_segments(sharding, shape
+                                 ) -> Optional[List[Tuple[int, int, Any]]]:
+    """Public wrapper over the leading-axis layout parser for consumers
+    outside the scatter path (the multi-host coordinator derives both
+    save-time ownership and restore-time target ranges from it):
+    per-device ``[(row_start, row_stop, device)]`` of ``sharding`` over a
+    global ``shape``, or None when the layout slices a non-leading dim."""
+    return _leading_axis_segments(sharding, shape)
+
+
 def scatter_sharded_payload(payload: np.ndarray, mask: np.ndarray,
                             shape, dtype, sharding=None, *, fill=0,
                             block: int = BLOCK,

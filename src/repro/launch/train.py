@@ -8,6 +8,14 @@ state checkpointed), train step, async multi-level CheckpointManager with
 the AD-scrutinized reduction, and crash-equivalent restart (the integration
 test kills and resumes mid-run and checks loss-curve continuation).
 
+Multi-host runs (``jax.process_count() > 1``, the ``REPRO_PROCESS_*``
+simulation env, or ``--coordinated``) go through the
+``CoordinatedCheckpointManager``: every host writes only the shards it
+owns, the step commits via the collective two-phase protocol, and
+``--resume`` restores elastically onto whatever process count is alive.
+On a single process the coordinator delegates to the pipelined async
+manager, so the wiring is unconditional.
+
 ``--preset smoke`` shrinks the model (CPU CI); on real hardware use the
 full config with --mesh data,model sizes.
 """
@@ -23,8 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager, Level
+from repro.checkpoint import CoordinatedCheckpointManager, Level
 from repro.configs import get_config
+from repro.distributed.collective import current_context, get_collective
 from repro.core import ScrutinyConfig, participation
 from repro.data import pipeline as data_pipeline
 from repro.models import init_params, count_params
@@ -52,6 +61,14 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--scrutinize", action="store_true",
                     help="reduce checkpoints with participation analysis")
+    ap.add_argument("--coordinated", action="store_true",
+                    help="force the multi-host coordinated save path even "
+                         "on one process (it is automatic when "
+                         "jax.process_count() > 1 or REPRO_PROCESS_COUNT "
+                         "is set)")
+    ap.add_argument("--coord-dir", default=None,
+                    help="shared rendezvous dir for the filesystem-barrier "
+                         "fallback (default: <ckpt-dir>/coord)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--task", default="lm", choices=["lm", "copy"],
                     help="lm: next-token; copy: identity (fast smoke signal)")
@@ -84,13 +101,25 @@ def main(argv=None):
             return participation(resume, host_state,
                                  config=ScrutinyConfig())
 
-    mgr = CheckpointManager(
+    # Coordinated when the job spans processes (real multi-controller or
+    # the REPRO_PROCESS_* simulation); single-process jobs delegate to the
+    # pipelined async manager inside, so the wiring is unconditional.
+    ctx = current_context()
+    coordinated = args.coordinated or ctx.count > 1
+    collective = get_collective(
+        coord_dir=args.coord_dir or os.path.join(args.ckpt_dir, "coord"))
+    parity = not coordinated             # per-host parity: future level
+    mgr = CoordinatedCheckpointManager(
         [Level(os.path.join(args.ckpt_dir, "ram"), interval=args.ckpt_every,
                keep_n=2),
          Level(os.path.join(args.ckpt_dir, "disk"),
                interval=args.ckpt_every * 4, keep_n=2, shards=2,
-               parity=True)],
-        scrutiny_fn=scrutiny_fn)
+               parity=parity)],
+        collective=collective, scrutiny_fn=scrutiny_fn,
+        force_coordinated=args.coordinated)
+    if coordinated:
+        print(f"coordinated checkpointing: process {ctx.index} of "
+              f"{ctx.count}")
 
     start = 0
     if args.resume:

@@ -1,0 +1,707 @@
+"""Multi-host coordinated checkpointing: collective commit protocol, global
+manifests, elastic resharded restore, and the directory-sharing safety
+rails.
+
+Most of the matrix runs *simulated* hosts as threads — each host is an
+independent ``CoordinatedCheckpointManager`` + ``FileCollective`` over a
+shared directory, exactly the topology of independent single-process jax
+runtimes on a shared filesystem — which keeps the save{1,2,4}-proc ×
+restore{1,2}-proc × {full,device,delta} matrix cheap.  The acceptance
+subprocess test (4 *real* processes, ``@pytest.mark.multiprocess``) covers
+true process isolation and killing a host mid-protocol.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, CoordinatedCheckpointManager,
+                              GlobalManifest, Level, is_step_committed,
+                              load_checkpoint, read_manifest,
+                              save_checkpoint, step_of_entry,
+                              tmp_owner_of_entry, tmp_step_of_entry)
+from repro.checkpoint import coordinator as coord_mod
+from repro.checkpoint.store import ALIVE_FILE, ShardReader
+from repro.core.criticality import CriticalityReport, LeafReport
+from repro.core.policy import LeafPolicy
+from repro.core.regions import RegionTable
+from repro.distributed.collective import (FileCollective, ProcessContext,
+                                          owned_ranges, process_segments)
+
+TIMEOUT_S = 60.0
+
+
+# --------------------------------------------------------------------------
+# deterministic state + hand-built report shared by every "host"
+# --------------------------------------------------------------------------
+
+N_ROWS, N_COLS = 96, 8
+
+
+def make_state(step_val=7, seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "w": jnp.asarray(rng.randn(N_ROWS, N_COLS), jnp.float32),
+        "b": jnp.asarray(rng.randn(40), jnp.float32),
+        "c": jnp.asarray(rng.randint(0, 1000, (10,)), jnp.int32),
+        "step": jnp.asarray(step_val, jnp.int32),
+    }
+
+
+def make_masks(seed=1):
+    rng = np.random.RandomState(seed)
+    return {"w": rng.rand(N_ROWS * N_COLS) < 0.4,
+            "b": rng.rand(40) < 0.6}
+
+
+def make_report(masks):
+    leaves = {}
+    for name, n in (("w", N_ROWS * N_COLS), ("b", 40)):
+        mask = masks[name]
+        leaves[name] = LeafReport(
+            name=name, shape=(N_ROWS, N_COLS) if name == "w" else (40,),
+            dtype=np.dtype(np.float32), policy=LeafPolicy.AD, mask=mask,
+            table=RegionTable.from_mask(mask, 4), magnitude=None)
+    return CriticalityReport(leaves=leaves)
+
+
+def expected_leaves(state, masks, scrutinized):
+    exp = {}
+    for name, leaf in state.items():
+        arr = np.asarray(leaf)
+        if scrutinized and name in masks:
+            arr = np.where(masks[name].reshape(arr.shape), arr, 0)
+        exp[name] = arr
+    return exp
+
+
+def run_hosts(count, fn, timeout=TIMEOUT_S):
+    """Run ``fn(process_index, collective)`` once per simulated host (in
+    threads over one shared FileCollective dir); returns (results, errors)
+    indexed by host."""
+    results, errors = [None] * count, [None] * count
+
+    def run(p, coord_dir):
+        try:
+            coll = FileCollective(coord_dir,
+                                  ctx=ProcessContext(p, count),
+                                  timeout_s=timeout)
+            results[p] = fn(p, coll)
+        except BaseException as e:      # noqa: BLE001 - surfaced by caller
+            errors[p] = e
+
+    import tempfile
+    coord_dir = tempfile.mkdtemp(prefix="coord_")
+    threads = [threading.Thread(target=run, args=(p, coord_dir))
+               for p in range(count)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results, errors
+
+
+def coordinated_save(root, count, mode, steps=1, keep_n=4, timeout=TIMEOUT_S,
+                     shards=1):
+    """Save ``steps`` coordinated scrutinized checkpoints with ``count``
+    simulated hosts; returns the final (post-update) state arrays."""
+    masks = make_masks()
+    final = {}
+
+    def host(p, coll):
+        report = make_report(masks) if mode != "full" else None
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=keep_n, shards=shards,
+                   max_chain=8 if mode == "delta" else 0)],
+            collective=coll,
+            scrutiny_fn=(None if report is None else (lambda s: report)),
+            save_mode="device" if mode != "full" else "auto",
+            delta_chunk_bytes=64,
+            pack_use_kernel=False, pack_interpret=True)
+        state = make_state()
+        for t in range(1, steps + 1):
+            if t > 1:   # deterministic mutation every host applies alike
+                w = np.asarray(state["w"]).copy()
+                w[t % N_ROWS, :] += 1.0
+                state = dict(state, w=jnp.asarray(w),
+                             step=jnp.asarray(t, jnp.int32))
+            mgr.save(t, state)
+        mgr.close()
+        return {k: np.asarray(v) for k, v in state.items()}
+
+    results, errors = run_hosts(count, host, timeout=timeout)
+    assert not any(errors), [e for e in errors if e]
+    final.update(results[0])
+    for r in results[1:]:   # SPMD sanity: every host ended in the same state
+        for k in final:
+            np.testing.assert_array_equal(final[k], r[k])
+    return final, masks
+
+
+# --------------------------------------------------------------------------
+# collective primitives
+# --------------------------------------------------------------------------
+
+def test_file_collective_barrier_and_timeout(tmp_path):
+    d = str(tmp_path / "coord")
+
+    def host(p, coll):
+        coll.barrier("x", timeout=10)
+        return p
+
+    results, errors = run_hosts(3, host)
+    assert results == [0, 1, 2] and not any(errors)
+
+    # one lone participant of 2: the barrier must time out, naming the dead
+    coll = FileCollective(d, ctx=ProcessContext(0, 2), timeout_s=0.3)
+    with pytest.raises(TimeoutError, match=r"\[1\]"):
+        coll.barrier("alone")
+
+
+def test_file_collective_survives_leader_cleanup(tmp_path):
+    # stale barrier files from a crashed run must not satisfy a new run
+    d = str(tmp_path / "coord")
+    os.makedirs(d)
+    stale = os.path.join(d, "b_q1.L0.land.p1")
+    with open(stale, "w") as f:
+        f.write("1")
+    old = time.time() - 3600
+    os.utime(stale, (old, old))
+    FileCollective(d, ctx=ProcessContext(0, 2), timeout_s=0.2)
+    assert not os.path.exists(stale)
+
+
+def test_process_segments_ownership():
+    # uniform split with remainder
+    assert process_segments((10, 4), 3) == [(0, 4, 0), (4, 7, 1), (7, 10, 2)]
+    # fewer rows than processes: leader owns everything
+    assert process_segments((2, 8), 4) == [(0, 2, 0)]
+    # scalar: leader
+    assert owned_ranges((), ProcessContext(0, 3)) == [(0, 1)]
+    assert owned_ranges((), ProcessContext(1, 3)) == []
+    # flat ranges account for the row size
+    assert owned_ranges((10, 4), ProcessContext(1, 3)) == [(16, 28)]
+    # determinism: every host computes the identical table
+    tables = {p: process_segments((97, 3), 4) for p in range(4)}
+    assert len({tuple(t) for t in tables.values()}) == 1
+    covered = sorted((lo, hi) for lo, hi, _ in tables[0])
+    assert covered[0][0] == 0 and covered[-1][1] == 97
+    assert all(a[1] == b[0] for a, b in zip(covered, covered[1:]))
+
+
+def test_shard_reader_read_range(tmp_path):
+    state = make_state()
+    save_checkpoint(str(tmp_path), 1, state, shards=2)
+    m = read_manifest(str(tmp_path), 1)
+    entry = next(e for e in m["leaves"] if e["name"] == "w")
+    with ShardReader(os.path.join(str(tmp_path), "step_1"), 2) as rd:
+        whole = rd.read(entry)
+        assert rd.read_range(entry, 0, len(whole)) == whole
+        assert rd.read_range(entry, 100, 64) == whole[100:164]
+        with pytest.raises(ValueError):
+            rd.read_range(entry, len(whole) - 4, 8)
+
+
+# --------------------------------------------------------------------------
+# the reshard matrix: save on {1,2,4} hosts, restore on {1,2}, all modes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["full", "device", "delta"])
+@pytest.mark.parametrize("save_procs", [1, 2, 4])
+def test_reshard_matrix(tmp_path, mode, save_procs):
+    root = str(tmp_path / "lv")
+    steps = 3 if mode == "delta" else 1
+    final, masks = coordinated_save(root, save_procs, mode, steps=steps)
+    exp = expected_leaves(final, masks, scrutinized=mode != "full")
+    last = steps
+
+    if save_procs > 1:
+        m = read_manifest(root, last)
+        assert m["coordinated"]["process_count"] == save_procs
+        assert os.path.exists(os.path.join(root, f"step_{last}",
+                                           "commit.json"))
+        if mode == "delta":
+            assert m["chain"]["delta_chain"] == list(range(1, last))
+
+    # 1-process restore through the plain manager (loader reassembles)
+    mgr = CheckpointManager([Level(root)])
+    st, got = mgr.restore(make_state(step_val=0))
+    assert st == last
+    for k, v in exp.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v,
+                                      err_msg=f"leaf {k} (1-proc restore)")
+
+    # 2-process elastic restore: each host reads only intersecting ranges
+    def rhost(p, coll):
+        rmgr = CoordinatedCheckpointManager(
+            [Level(root)], collective=coll,
+            pack_use_kernel=False, pack_interpret=True)
+        st, got = rmgr.restore(make_state(step_val=0), local_only=True)
+        stats = dict(rmgr.last_restore_stats)
+        rmgr.close()
+        return st, {k: np.asarray(v) for k, v in got.items()}, stats
+
+    results, errors = run_hosts(2, rhost)
+    assert not any(errors), [e for e in errors if e]
+    for st, _, _ in results:
+        assert st == last
+    # reassemble each leaf from each restoring host's owned rows
+    for k, v in exp.items():
+        shape = v.shape
+        pieces = np.zeros_like(v).reshape(-1)
+        row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+        for p in range(2):
+            for lo, hi, owner in process_segments(shape or (1,), 2):
+                if owner != p:
+                    continue
+                got_flat = results[p][1][k].reshape(-1)
+                pieces[lo * row:hi * row] = got_flat[lo * row:hi * row]
+        if not shape:
+            pieces = results[0][1][k].reshape(())
+        np.testing.assert_array_equal(
+            pieces.reshape(shape), v, err_msg=f"leaf {k} (2-proc restore)")
+    # byte-range reads: for base steps each host fetched less than the
+    # whole payload (chain steps reconstruct fully, so skip those)
+    if mode != "delta":
+        total = read_manifest(root, last)["payload_bytes"]
+        for _, _, stats in results:
+            assert not stats["chain"]
+            assert 0 < stats["bytes_read"] < total
+
+
+def test_restore_onto_device_mesh_from_coordinated_save(tmp_path):
+    """Elastic across *device* counts too: a 2-host save restores onto an
+    explicitly sharded 1-device mesh via per-device range reads."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    import jax
+
+    root = str(tmp_path / "lv")
+    final, masks = coordinated_save(root, 2, "device")
+    exp = expected_leaves(final, masks, scrutinized=True)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P("data", None)),
+          "b": NamedSharding(mesh, P(None)),
+          "c": NamedSharding(mesh, P(None)),
+          "step": NamedSharding(mesh, P())}
+    mgr = CoordinatedCheckpointManager([Level(root)], pack_use_kernel=False,
+                                       pack_interpret=True)
+    st, got = mgr.restore(make_state(step_val=0), shardings=sh)
+    assert st == 1
+    for k, v in exp.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+
+
+def test_coordinated_save_skips_unscrutinized_and_scalar_split(tmp_path):
+    """int leaves without a report and scalars stay whole (leader-owned)
+    and restore exactly."""
+    root = str(tmp_path / "lv")
+    final, masks = coordinated_save(root, 4, "device")
+    gm = GlobalManifest.load(root, 1)
+    leaves = gm.leaves()
+    # scalar + small leaves: one segment, owned by the leader's files
+    assert len(GlobalManifest.segments_of(leaves["step"])) == 1
+    seg = GlobalManifest.segments_of(leaves["step"])[0]
+    assert seg["file"].startswith("shard_h0_")
+    # w is split across all 4 hosts
+    w_segs = GlobalManifest.segments_of(leaves["w"])
+    assert len(w_segs) == 4
+    assert {s["file"].split("_")[1] for s in w_segs} == \
+        {"h0", "h1", "h2", "h3"}
+    # int leaf had no report: stored full
+    assert all(s["encoding"] == "full"
+               for s in GlobalManifest.segments_of(leaves["c"]))
+
+
+# --------------------------------------------------------------------------
+# failure semantics: dead host, dead leader, partial commits
+# --------------------------------------------------------------------------
+
+def test_dead_host_before_commit_leaves_previous_latest(tmp_path):
+    root = str(tmp_path / "lv")
+    coordinated_save(root, 2, "device")            # committed step 1
+
+    def host(p, coll):
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=4)], collective=coll,
+            pack_use_kernel=False, pack_interpret=True,
+            barrier_timeout_s=1.0)
+        if p == 1:
+            return "died"                          # killed before phase 1
+        mgr.save(2, make_state(step_val=2))
+
+    results, errors = run_hosts(2, host, timeout=1.0)
+    assert results[1] == "died"
+    assert isinstance(errors[0], TimeoutError)
+    # no partial step 2 is visible anywhere
+    mgr = CheckpointManager([Level(root)])
+    assert mgr.latest()[0] == 1
+    assert mgr.restore(make_state(step_val=0))[0] == 1
+    # the survivors' phase-1 bytes sit in a hidden pending dir
+    assert os.path.exists(os.path.join(root, ".pending_step_2"))
+    assert step_of_entry(".pending_step_2") is None
+
+
+def test_leader_crash_mid_commit_falls_back(tmp_path, monkeypatch):
+    """Leader dies between the directory rename and the commit marker: the
+    step dir exists but is uncommitted — latest()/restore fall back to the
+    previous step, and the next leader GC reaps the carcass."""
+    root = str(tmp_path / "lv")
+    coordinated_save(root, 2, "device")            # committed step 1
+
+    real_marker = coord_mod.write_commit_marker
+
+    def dying_marker(step_dir, info):
+        raise RuntimeError("leader lost mid-commit")
+
+    monkeypatch.setattr(coord_mod, "write_commit_marker", dying_marker)
+
+    def host(p, coll):
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=4)], collective=coll,
+            pack_use_kernel=False, pack_interpret=True,
+            barrier_timeout_s=2.0)
+        mgr.save(2, make_state(step_val=2))
+
+    results, errors = run_hosts(2, host, timeout=2.0)
+    assert isinstance(errors[0], RuntimeError)     # leader: injected death
+    assert isinstance(errors[1], TimeoutError)     # follower: no commit
+    # step_2 exists but has no marker → invisible
+    assert os.path.isdir(os.path.join(root, "step_2"))
+    assert not is_step_committed(root, 2)
+    mgr = CheckpointManager([Level(root)])
+    assert mgr.latest()[0] == 1
+    assert mgr.restore(make_state(step_val=0))[0] == 1
+
+    # recovery: a later committed save GCs the dead partial commit
+    monkeypatch.setattr(coord_mod, "write_commit_marker", real_marker)
+    coordinated_save(root, 2, "device", steps=3)
+    assert not os.path.exists(os.path.join(root, "step_2")) or \
+        is_step_committed(root, 2)
+    assert CheckpointManager([Level(root)]).latest()[0] == 3
+
+
+def test_fuse_rejects_gaps(tmp_path):
+    """A mis-partitioned save (missing host segment) must never commit."""
+    from repro.checkpoint.store import fuse_global_manifest
+    pending = str(tmp_path / ".pending_step_1")
+    os.makedirs(pending)
+    # host 0 claims [0, 10) of a 20-element leaf; host 1 missing entirely
+    man = {"host": 0, "shards": 1, "leaves": [
+        {"name": "w", "shape": [20], "dtype": "float32", "encoding": "full",
+         "aux": "", "num_regions": 1, "checksum": 0, "tier_dtypes": [],
+         "region_tiers": "", "start": 0, "stop": 10, "shard": 0,
+         "offset": 0, "length": 40, "file": "shard_h0_0.bin"}]}
+    with open(os.path.join(pending, "manifest.host0.json"), "w") as f:
+        json.dump(man, f)
+    with pytest.raises(FileNotFoundError):
+        fuse_global_manifest(pending, 1, 2)
+    man2 = dict(man, host=1)
+    man2["leaves"] = [dict(man["leaves"][0], start=12, stop=20, length=32,
+                           file="shard_h1_0.bin")]
+    with open(os.path.join(pending, "manifest.host1.json"), "w") as f:
+        json.dump(man2, f)
+    with pytest.raises(ValueError, match="gap"):
+        fuse_global_manifest(pending, 1, 2)
+
+
+def test_restore_shape_mismatch_raises_not_silently_none(tmp_path):
+    from repro.checkpoint import StateShapeError
+
+    root = str(tmp_path / "lv")
+    coordinated_save(root, 2, "device")
+    mgr = CoordinatedCheckpointManager([Level(root)], pack_use_kernel=False,
+                                       pack_interpret=True)
+    bad = dict(make_state(), w=jnp.zeros((N_ROWS + 1, N_COLS), jnp.float32))
+    with pytest.raises(StateShapeError, match="checkpoint shape"):
+        mgr.restore(bad)
+
+
+def test_restore_detects_corrupted_segment(tmp_path):
+    """A flipped byte in one host's shard file fails the whole-segment CRC
+    on the range-read path, and restore falls back (here: nothing else →
+    None with the error recorded)."""
+    root = str(tmp_path / "lv")
+    coordinated_save(root, 2, "device")
+    shard = os.path.join(root, "step_1", "shard_h1_0.bin")
+    raw = bytearray(open(shard, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    with open(shard, "wb") as f:
+        f.write(bytes(raw))
+    mgr = CoordinatedCheckpointManager([Level(root)], pack_use_kernel=False,
+                                       pack_interpret=True)
+    got = mgr.restore(make_state(step_val=0))
+    assert got is None
+    assert "checksum mismatch" in mgr.last_restore_stats["skipped"][0][
+        "error"]
+
+
+def test_manager_gc_never_counts_carcass_toward_keep_n(tmp_path):
+    """An uncommitted coordinated carcass must not displace the only
+    committed checkpoint from retention (elastic restart on 1 process GCs
+    the shared directory through the plain manager)."""
+    root = str(tmp_path / "lv")
+    coordinated_save(root, 2, "device")            # committed step 1
+    # forge a newer uncommitted coordinated step (leader died mid-commit)
+    d = os.path.join(root, "step_5")
+    os.makedirs(d)
+    man = dict(read_manifest(root, 1), step=5)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    mgr = CheckpointManager([Level(root, keep_n=1)])
+    mgr.save(7, make_state(step_val=7), block=True)  # triggers _gc
+    steps = sorted(s for s in map(step_of_entry, os.listdir(root))
+                   if s is not None)
+    assert 7 in steps
+    assert 5 not in steps          # carcass reaped (older than committed 7)
+    assert mgr.restore(make_state(step_val=0))[0] == 7
+    mgr.close()
+
+
+def test_force_coordinated_single_process(tmp_path):
+    """--coordinated on one process really writes the coordinated format
+    (commit marker + global manifest) and restores through it."""
+    root = str(tmp_path / "lv")
+    masks = make_masks()
+    report = make_report(masks)
+    mgr = CoordinatedCheckpointManager(
+        [Level(root)], scrutiny_fn=lambda s: report, save_mode="device",
+        force_coordinated=True, pack_use_kernel=False, pack_interpret=True)
+    state = make_state()
+    mgr.save(1, state)
+    assert "coordinated" in read_manifest(root, 1)
+    assert os.path.exists(os.path.join(root, "step_1", "commit.json"))
+    st, got = mgr.restore(make_state(step_val=0))
+    assert st == 1
+    exp = expected_leaves(state, masks, scrutinized=True)
+    for k, v in exp.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+    mgr.close()
+
+
+def test_get_collective_simulated_env_requires_coord_dir(monkeypatch):
+    from repro.distributed.collective import get_collective
+    monkeypatch.setenv("REPRO_PROCESS_COUNT", "2")
+    monkeypatch.setenv("REPRO_PROCESS_INDEX", "1")
+    monkeypatch.delenv("REPRO_COORD_DIR", raising=False)
+    with pytest.raises(ValueError, match="coord_dir"):
+        get_collective()
+
+
+def test_retry_after_crash_drops_foreign_pending_files(tmp_path):
+    """A crashed prior attempt's per-host leftovers (different process
+    count) in the reused pending dir never leak into the committed step."""
+    root = str(tmp_path / "lv")
+    os.makedirs(root)
+    pending = os.path.join(root, ".pending_step_1")
+    os.makedirs(pending)
+    for junk in ("shard_h7_0.bin", "manifest.host7.json", "trash.txt"):
+        with open(os.path.join(pending, junk), "w") as f:
+            f.write("stale")
+    coordinated_save(root, 2, "device")
+    files = set(os.listdir(os.path.join(root, "step_1")))
+    assert not files & {"shard_h7_0.bin", "manifest.host7.json",
+                        "trash.txt"}, files
+    step, leaves = load_checkpoint(root)
+    assert step == 1
+
+
+# --------------------------------------------------------------------------
+# directory sharing: owner tokens + liveness
+# --------------------------------------------------------------------------
+
+def test_gc_skips_live_foreign_writer(tmp_path):
+    d = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(d, keep_n=2)])
+    mgr.save(1, make_state(), block=True)
+
+    # a *live* sibling writer's in-flight tmp dir (fresh liveness file)
+    foreign = os.path.join(d, ".tmp_step_9.deadbeef")
+    os.makedirs(foreign)
+    with open(os.path.join(foreign, ALIVE_FILE), "w"):
+        pass
+    with open(os.path.join(foreign, "shard_0.bin"), "wb") as f:
+        f.write(b"inflight")
+    # a legacy untokened stale dir: always swept
+    legacy = os.path.join(d, ".tmp_step_8")
+    os.makedirs(legacy)
+
+    mgr.save(2, make_state(), block=True)
+    assert os.path.exists(foreign), "live foreign writer's tmp was deleted"
+    assert not os.path.exists(legacy)
+
+    # the foreign writer dies: liveness goes stale → swept
+    old = time.time() - 3600
+    os.utime(os.path.join(foreign, ALIVE_FILE), (old, old))
+    mgr.save(3, make_state(), block=True)
+    assert not os.path.exists(foreign)
+    mgr.close()
+
+
+def test_two_managers_one_directory_no_mutual_deletion(tmp_path):
+    """Two managers interleaving saves in one directory never corrupt each
+    other: every save lands and the final restore sees the newest step."""
+    d = str(tmp_path / "lv")
+    a = CheckpointManager([Level(d, keep_n=3)])
+    b = CheckpointManager([Level(d, keep_n=3)])
+    assert a._owner != b._owner
+    state = make_state()
+    a.save(1, state, block=True)
+    b.save(2, state, block=True)
+    a.save(3, state, block=True)
+    b.save(4, state, block=True)
+    steps = sorted(s for s in map(step_of_entry, os.listdir(d))
+                   if s is not None)
+    assert steps[-1] == 4 and len(steps) >= 3
+    assert a.restore(state)[0] == 4
+    a.close(), b.close()
+
+
+def test_tokened_tmp_parsing():
+    assert tmp_step_of_entry(".tmp_step_3.abcd1234") == 3
+    assert tmp_owner_of_entry(".tmp_step_3.abcd1234") == "abcd1234"
+    assert tmp_owner_of_entry(".tmp_step_3") is None
+    assert tmp_owner_of_entry("step_3") is None
+    assert tmp_step_of_entry(".tmp_step_x.abcd") is None
+
+
+def test_own_tmp_dir_cleared_on_rewrite(tmp_path):
+    """A manager's own crashed leftovers for the same step never leak into
+    the rewritten checkpoint (tokened path)."""
+    d = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(d)])
+    stale = os.path.join(d, f".tmp_step_5.{mgr._owner}")
+    os.makedirs(stale)
+    with open(os.path.join(stale, "junk.bin"), "wb") as f:
+        f.write(b"junk")
+    mgr.save(5, make_state(), block=True)
+    files = sorted(os.listdir(os.path.join(d, "step_5")))
+    assert files == ["manifest.json", "shard_0.bin"]
+    mgr.close()
+
+
+# --------------------------------------------------------------------------
+# acceptance: 4 real processes, commit + elastic restore + host death
+# --------------------------------------------------------------------------
+
+_PROG = r"""
+import os, sys
+import numpy as np, jax.numpy as jnp
+sys.path.insert(0, os.environ["TEST_DIR"])
+from test_coordinated import make_state, make_masks, make_report
+from repro.checkpoint import CoordinatedCheckpointManager, Level
+from repro.distributed.collective import get_collective
+
+role = os.environ["ROLE"]
+root = os.environ["ROOT"]
+idx = int(os.environ["REPRO_PROCESS_INDEX"])
+if role == "die":
+    sys.exit(0)                      # killed before phase 1
+coll = get_collective()              # env-driven: FileCollective
+masks = make_masks()
+report = make_report(masks)
+mgr = CoordinatedCheckpointManager(
+    [Level(root, keep_n=4)], collective=coll,
+    scrutiny_fn=lambda s: report, save_mode="device",
+    pack_use_kernel=False, pack_interpret=True,
+    barrier_timeout_s=float(os.environ.get("BARRIER_TIMEOUT", "60")))
+if role == "save":
+    mgr.save(1, make_state())
+    print("SAVED", mgr.last_save_stats["host_bytes_written"])
+elif role == "save_expect_timeout":
+    try:
+        mgr.save(2, make_state(step_val=2))
+        print("UNEXPECTED_COMMIT")
+    except TimeoutError:
+        print("TIMEOUT_OK")
+elif role == "restore":
+    st, got = mgr.restore(make_state(step_val=0), local_only=True)
+    total = int(mgr.last_restore_stats["bytes_read"])
+    assert 0 < total, "elastic restore read nothing"
+    np.save(os.path.join(root, f"restored_{os.environ['TAG']}_{idx}.npy"),
+            np.asarray(got["w"]))
+    print("RESTORED", st, total)
+mgr.close()
+"""
+
+
+def _spawn(n, role, root, coord, tag="r", timeout="60"):
+    procs = []
+    env_base = dict(os.environ, ROOT=root, ROLE=role, TAG=tag,
+                    REPRO_COORD_DIR=coord, REPRO_PROCESS_COUNT=str(n),
+                    BARRIER_TIMEOUT=timeout,
+                    JAX_PLATFORMS="cpu",
+                    TEST_DIR=os.path.dirname(__file__))
+    env_base["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env_base.get("PYTHONPATH", "").split(os.pathsep))
+    for p in range(n):
+        env = dict(env_base, REPRO_PROCESS_INDEX=str(p))
+        if role == "save_expect_timeout" and p == n - 1:
+            env["ROLE"] = "die"
+        procs.append(subprocess.Popen([sys.executable, "-c", _PROG],
+                                      env=env, stdout=subprocess.PIPE,
+                                      stderr=subprocess.PIPE, text=True))
+    outs = []
+    for pr in procs:
+        out, err = pr.communicate(timeout=300)
+        outs.append((pr.returncode, out, err))
+    return outs
+
+
+@pytest.mark.multiprocess
+def test_four_process_commit_elastic_restore_and_host_death(tmp_path):
+    """The acceptance scenario end to end with real processes: a 4-process
+    coordinated scrutinized save (each host only its owned shards, one
+    global manifest + commit marker), bit-identical restore onto 1- and
+    2-process meshes, and a host killed before commit leaving ``latest()``
+    at the previous step."""
+    root = str(tmp_path / "lv")
+    coord = str(tmp_path / "coord")
+    os.makedirs(root)
+
+    outs = _spawn(4, "save", root, coord)
+    for rc, out, err in outs:
+        assert rc == 0 and "SAVED" in out, (rc, out, err)
+    stepdir = os.path.join(root, "step_1")
+    files = set(os.listdir(stepdir))
+    assert "commit.json" in files and "manifest.json" in files
+    for p in range(4):
+        assert f"manifest.host{p}.json" in files
+        assert f"shard_h{p}_0.bin" in files
+
+    masks = make_masks()
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+
+    # 1-process restore (plain manager reassembles the global manifest)
+    mgr = CheckpointManager([Level(root)])
+    st, got = mgr.restore(make_state(step_val=0))
+    assert st == 1
+    for k, v in exp.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+
+    # 2-process elastic restore: stitch each host's owned rows
+    outs = _spawn(2, "restore", root, str(tmp_path / "coord2"), tag="r2")
+    for rc, out, err in outs:
+        assert rc == 0 and "RESTORED 1" in out, (rc, out, err)
+    w = np.zeros_like(exp["w"])
+    for p in range(2):
+        got_w = np.load(os.path.join(root, f"restored_r2_{p}.npy"))
+        for lo, hi, owner in process_segments(exp["w"].shape, 2):
+            if owner == p:
+                w[lo:hi] = got_w[lo:hi]
+    np.testing.assert_array_equal(w, exp["w"])
+
+    # kill host 3 before commit of step 2: survivors time out, no partial
+    # step becomes visible
+    outs = _spawn(4, "save_expect_timeout", root,
+                  str(tmp_path / "coord3"), timeout="3")
+    assert "TIMEOUT_OK" in outs[0][1], outs[0]
+    assert CheckpointManager([Level(root)]).latest()[0] == 1
+    assert not os.path.exists(os.path.join(root, "step_2"))

@@ -230,9 +230,10 @@ def test_crash_mid_pipeline_leaves_latest_intact(tmp_path, monkeypatch,
 
     with pytest.raises(RuntimeError, match="node died"):
         mgr.save(2, state, block=True)
-    # crash left the in-flight tmp dir, never a (partial) final dir
+    # crash left the in-flight tmp dir (owner-tokened), never a (partial)
+    # final dir
     entries = os.listdir(d)
-    assert ".tmp_step_2" in entries
+    assert f".tmp_step_2.{mgr._owner}" in entries
     assert "step_2" not in entries
     assert mgr.latest()[0] == 1          # previous step untouched
 
