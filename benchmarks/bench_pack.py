@@ -269,14 +269,15 @@ def bench_coordinated(out, quick: bool, hosts: int = 2):
             raise errs[0]
         wall = time.perf_counter() - t0
         lv = list(stats_by_host[0]["levels"].values())[0]
-        return wall, float(lv.get("commit_s", 0.0))
+        return (wall, float(lv.get("commit_s", 0.0)),
+                float(lv.get("replicate_s", 0.0)))
 
     try:
         run_save(1)                           # warm (compilation etc.)
         # best-of for both timings: commit latency is fsync-dominated and
         # spikes under unrelated filesystem load
-        walls, commits = zip(*(run_save(s) for s in (2, 3)))
-        wall, commit_s = min(walls), min(commits)
+        walls, commits, reps = zip(*(run_save(s) for s in (2, 3)))
+        wall, commit_s, replicate_s = min(walls), min(commits), min(reps)
         per_host = [int(s["host_bytes_written"]) for s in stats_by_host]
         disk = sum(
             os.path.getsize(os.path.join(root, "step_3", f))
@@ -289,6 +290,7 @@ def bench_coordinated(out, quick: bool, hosts: int = 2):
     out(f"per-host bytes written: {[f'{b/1e6:.2f} MB' for b in per_host]} "
         f"(max {max(per_host)/full_bytes:.1%} of state)")
     out(f"commit latency {commit_s*1e3:.1f} ms  "
+        f"L2 partner replicate {replicate_s*1e3:.1f} ms  "
         f"save wall {wall*1e3:.1f} ms  disk {disk/1e6:.2f} MB")
     # every host must write ≈ its owned slice of the critical bytes, never
     # the whole state
@@ -297,7 +299,8 @@ def bench_coordinated(out, quick: bool, hosts: int = 2):
         f"{0.75 * crit:.1%} of state + slack)")
     return {"hosts": hosts, "per_host_bytes": per_host,
             "host_bytes_max": int(max(per_host)),
-            "commit_s": commit_s, "save_s": wall,
+            "commit_s": commit_s, "partner_replicate_s": replicate_s,
+            "save_s": wall,
             "disk_bytes": int(disk), "full_bytes": int(full_bytes),
             "ownership_ok": bool(ok)}
 

@@ -203,11 +203,106 @@ def bench_delta_chain(out, quick: bool):
     return results
 
 
+def bench_l2_restore(out, quick: bool, hosts: int = 2):
+    """Level-cascade restore: the same coordinated checkpoint restored
+    once from the L2 partner-replica stores (zero shared-store reads —
+    asserted from the byte accounting) and once with replication disabled
+    (every byte from the shared store).  Headline: ``restore_l2_s`` —
+    the single-host-loss recovery read path must stay cheap."""
+    import tempfile
+    import threading
+
+    from repro.checkpoint import CoordinatedCheckpointManager, Level
+    from repro.distributed.collective import FileCollective, ProcessContext
+
+    n = 1 << (20 if quick else 23)
+    crit = 0.148
+    state, masks = _state_and_masks(n, crit)
+    report = _report_for(state, masks)
+    like = {k: jnp.zeros_like(v) for k, v in state.items()}
+    out(f"== L2 partner-replica restore ({hosts} hosts) ==")
+
+    root = tempfile.mkdtemp(prefix="bench_l2_")
+    coord = tempfile.mkdtemp(prefix="bench_l2_rdv_")
+
+    def run_hosts(fn, tag):
+        errs, outs = [], [None] * hosts
+
+        def host(p):
+            try:
+                coll = FileCollective(os.path.join(coord, tag),
+                                      ctx=ProcessContext(p, hosts),
+                                      timeout_s=120)
+                outs[p] = fn(p, coll)
+            except Exception as e:      # noqa: BLE001 - surfaced below
+                errs.append(e)
+
+        ths = [threading.Thread(target=host, args=(p,))
+               for p in range(hosts)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join()
+        if errs:
+            raise errs[0]
+        return outs
+
+    def save_host(p, coll):
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=1)], collective=coll,
+            scrutiny_fn=lambda s, report=report: report,
+            save_mode="device")
+        mgr.save(1, state)
+        mgr.close()
+
+    def restore_host(replicate):
+        def fn(p, coll):
+            mgr = CoordinatedCheckpointManager(
+                [Level(root)], collective=coll,
+                partner_replication=replicate)
+            t0 = time.perf_counter()
+            mgr.restore(like, local_only=True)
+            dt = time.perf_counter() - t0
+            stats = dict(mgr.last_restore_stats)
+            mgr.close()
+            return dt, stats
+        return fn
+
+    try:
+        run_hosts(save_host, "s1")
+        wall = lambda r: max(dt for dt, _ in r)     # noqa: E731
+        l2 = min((run_hosts(restore_host(True), f"r{k}")
+                  for k in (1, 2)), key=wall)
+        st = min((run_hosts(restore_host(False), f"q{k}")
+                  for k in (1, 2)), key=wall)
+        l2_s = max(dt for dt, _ in l2)
+        store_s = max(dt for dt, _ in st)
+        l2_bytes = sum(s["bytes_read_l2"] for _, s in l2)
+        l2_store_bytes = sum(s["bytes_read_store"] for _, s in l2)
+        store_bytes = sum(s["bytes_read_store"] for _, s in st)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+        shutil.rmtree(coord, ignore_errors=True)
+
+    ok = l2_store_bytes == 0 and l2_bytes > 0 and store_bytes > 0
+    out(f"L2 restore {l2_s*1e3:8.1f} ms ({l2_bytes/1e6:.2f} MB from "
+        f"replicas, {l2_store_bytes} store bytes)  "
+        f"store restore {store_s*1e3:8.1f} ms "
+        f"({store_bytes/1e6:.2f} MB)")
+    out(f"zero-store-read L2 path {'OK' if ok else 'FAIL'}")
+    return {"hosts": hosts, "restore_l2_s": l2_s,
+            "restore_store_s": store_s, "l2_bytes": int(l2_bytes),
+            "store_bytes": int(store_bytes),
+            "zero_store_reads_ok": bool(ok)}
+
+
 def run(out=print, quick: bool = False, json_path: str | None = None):
     results = {"quick": quick}
     results["restore_modes"] = bench_restore_modes(out, quick)
     out("")
     results["delta_chain"] = bench_delta_chain(out, quick)
+    out("")
+    results["l2_restore"] = bench_l2_restore(out, quick)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)

@@ -51,9 +51,16 @@ HEADLINES = {
         # leaking into the commit phase) still blows past it
         ("coordinated.host_bytes_max", "lower"),
         ("coordinated.commit_s", "lower", TIMING_TOLERANCE, 0.30),
+        # L2 partner replication rides the save path: the replica push is
+        # two local writes (own + partner store) of the packed payload
+        ("coordinated.partner_replicate_s", "lower", TIMING_TOLERANCE,
+         0.30),
     ],
     "restore": [
         ("restore_modes.device.h2d_bytes", "lower"),
+        # single-host-loss recovery read path: every segment served from
+        # partner replicas with zero shared-store reads
+        ("l2_restore.restore_l2_s", "lower", TIMING_TOLERANCE, 0.30),
     ],
     "scrutiny": [
         ("headline.speedup_8", "higher"),

@@ -4,6 +4,11 @@ coordinated (two-phase commit + global manifests + resharded restore)."""
 
 from repro.checkpoint.coordinator import (CoordinatedCheckpointManager,
                                           GlobalManifest, StateShapeError)
+from repro.checkpoint.levels import (FAILURE_MATRIX, L1_RESIDENT,
+                                     L2_PARTNER, L3_PARITY, L4_STORE,
+                                     LEVEL_ORDER, L2Stack, PartnerStore,
+                                     ResidentCache, partner_map,
+                                     partner_of)
 from repro.checkpoint.manager import CheckpointManager, Level
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf, apply_delta,
                                       delta_encode_host, leaf_mask,
@@ -27,4 +32,7 @@ __all__ = [
     "save_delta_checkpoint", "step_of_entry", "tmp_step_of_entry",
     "tmp_owner_of_entry", "is_step_committed", "read_manifest",
     "chain_steps",
+    "LEVEL_ORDER", "FAILURE_MATRIX", "L1_RESIDENT", "L2_PARTNER",
+    "L3_PARITY", "L4_STORE", "PartnerStore", "L2Stack", "ResidentCache",
+    "partner_of", "partner_map",
 ]

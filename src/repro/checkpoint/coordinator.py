@@ -70,6 +70,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.levels import (L1_RESIDENT, L2_PARTNER, L3_PARITY,
+                                     L4_STORE, L2Stack, LEVEL_ORDER,
+                                     ResidentCache, default_l2_root,
+                                     partner_map, partner_of)
 from repro.checkpoint.manager import (CheckpointManager, Level,
                                       update_report)
 from repro.checkpoint.packing import (DeltaLeaf, delta_encode_host,
@@ -78,14 +82,15 @@ from repro.checkpoint.pipeline import BytesSource, ViewSource
 from repro.checkpoint.store import (ShardReader, _delta_entry,
                                     _packed_entry, chain_steps,
                                     committed_steps, fuse_global_manifest,
-                                    load_checkpoint_raw,
+                                    is_step_committed, load_checkpoint_raw,
                                     pending_step_of_entry, read_manifest,
                                     segment_mask, sweep_retention,
                                     tmp_writer_alive, write_commit_marker,
                                     write_host_entries)
 from repro.core.criticality import _path_str
-from repro.distributed.collective import (Collective, get_collective,
-                                          owned_ranges, process_segments)
+from repro.distributed.collective import (BarrierTimeout, Collective,
+                                          get_collective, owned_ranges,
+                                          process_segments)
 from repro.distributed.sharding import leading_axis_device_segments
 from repro.kernels.mask_pack import ops as mask_ops
 
@@ -137,6 +142,63 @@ class GlobalManifest:
         return [dict(entry, start=0, stop=n)]
 
 
+class _LevelFetcher:
+    """Per-restore-step resilience cascade: serve one segment byte range
+    from the nearest live level — L1 resident payload slice, L2 partner
+    replica (CRC'd; any failure falls through), then the shared store
+    (whose reader transparently rebuilds torn numbered shards from parity
+    = L3).  Every read is attributed in ``stats``: which level served
+    each segment fetch (``level_served``) and the per-level byte counts —
+    the zero-shared-store-read guarantee of a partner restore is
+    ``bytes_read_store == 0``."""
+
+    def __init__(self, mgr, root: str, step: int, rd: ShardReader,
+                 l2: Optional[L2Stack], ring_count: int,
+                 stats: Dict[str, Any]):
+        self.mgr = mgr
+        self.root = root
+        self.step = step
+        self.rd = rd
+        self.l2 = l2
+        self.ring_count = int(ring_count)
+        self.stats = stats
+
+    def read(self, name: str, s: Dict[str, Any], start_b: int,
+             nbytes: int) -> bytes:
+        stats = self.stats
+        key = (name, int(s["start"]), int(s["stop"]))
+        length = int(s["length"])
+        hit = self.mgr._l1.get(self.root, self.step, key)
+        if hit is not None and hit[1].nbytes == length:
+            stats["level_served"][L1_RESIDENT] += 1
+            stats["bytes_l1"] += nbytes
+            return hit[1][start_b:start_b + nbytes].tobytes()
+        if self.l2 is not None and "host" in s:
+            loc = self.l2.locate(self.step, key, int(s["host"]),
+                                 ring_count=self.ring_count)
+            if loc is not None:
+                store, src, entry, _fabric = loc
+                if int(entry["length"]) == length:
+                    try:
+                        raw = store.read_range(self.step, src, entry,
+                                               start_b, nbytes)
+                    except (OSError, ValueError):
+                        stats["l2_fallbacks"] = \
+                            stats.get("l2_fallbacks", 0) + 1
+                    else:
+                        stats["level_served"][L2_PARTNER] += 1
+                        stats["bytes_read_l2"] += nbytes
+                        stats["bytes_read"] += nbytes
+                        return raw
+        before = self.rd.stats["parity_bytes"]
+        raw = self.rd.read_range(s, start_b, nbytes)
+        parity = self.rd.stats["parity_bytes"] - before
+        stats["level_served"][L3_PARITY if parity else L4_STORE] += 1
+        stats["bytes_read_store"] += nbytes
+        stats["bytes_read"] += nbytes
+        return raw
+
+
 @dataclasses.dataclass
 class _CoordChain:
     """Per-level differential-chain bookkeeping of *this host's* owned
@@ -166,9 +228,29 @@ class CoordinatedCheckpointManager:
     when a leaf's spec tiles its leading axis over a multi-process mesh,
     ownership follows device placement instead of the uniform split.
 
-    Coordinated saves are synchronous (two barriers bound the commit) and
-    do not support precision tiering or parity (per-host files carry their
-    own checksums; replication is a future level).
+    Coordinated saves are synchronous (barriers bound the commit) and do
+    not support precision tiering or parity on per-host files (they carry
+    their own checksums; lost-file resilience comes from the L2 partner
+    replicas instead).
+
+    **Resilience hierarchy** (``checkpoint.levels``): every save lands at
+    four levels — L1 this process's resident packed payloads
+    (``l1_keep_n`` steps), L2 a CRC'd replica pushed to the ring partner
+    (``partner_replication``; node-local stores under ``l2_root``, default
+    ``<level>/.l2``), L3/L4 the shared store.  ``restore`` serves each
+    segment from the nearest live level and reports which one in
+    ``last_restore_stats``.  With ``degraded_saves``, a host death
+    mid-save degrades instead of aborting: the land barrier's
+    ``BarrierTimeout`` names the dead hosts, the surviving quorum's
+    lowest-index member recovers their current-step segments from their
+    partners' L2 replicas into the pending dir, and commit re-runs over
+    the survivors — the checkpoint lands complete, marked ``degraded``.
+
+    ``fault_injector``: optional ``repro.testing.faults.FaultInjector``;
+    the save path calls its named seams (``pack_done``,
+    ``after_replicate``, ``after_land_write``, ``before_commit_barrier``,
+    ``after_commit``) so tests can place failures between any two
+    protocol phases.
     """
 
     def __init__(self, levels: Sequence[Level],
@@ -184,6 +266,11 @@ class CoordinatedCheckpointManager:
                  barrier_timeout_s: Optional[float] = None,
                  pending_ttl_s: float = 600.0,
                  force_coordinated: bool = False,
+                 partner_replication: bool = True,
+                 degraded_saves: bool = True,
+                 l2_root: Optional[str] = None,
+                 l1_keep_n: int = 1,
+                 fault_injector: Any = None,
                  **manager_kwargs):
         if save_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown save_mode {save_mode!r}")
@@ -226,6 +313,12 @@ class CoordinatedCheckpointManager:
         self._closed = False
         self._report = None
         self._chains: Dict[str, _CoordChain] = {}
+        self.partner_replication = bool(partner_replication)
+        self.degraded_saves = bool(degraded_saves)
+        self.l2_root = l2_root
+        self._l1 = ResidentCache(keep_n=l1_keep_n)
+        self._l2_stacks: Dict[str, L2Stack] = {}
+        self._faults = fault_injector
         self.last_save_stats: Optional[Dict[str, Any]] = None
         self.last_restore_stats: Optional[Dict[str, Any]] = None
         self.last_scrutiny_stats: Optional[Dict[str, Any]] = None
@@ -403,6 +496,33 @@ class CoordinatedCheckpointManager:
                 and len(cs.chain) < lv.max_chain
                 and report is cs.report and layout == cs.layout)
 
+    # --- resilience levels ----------------------------------------------
+
+    def _fire(self, point: str, **ctx) -> None:
+        """Fault-injection seam (no-op without an injector)."""
+        if self._faults is not None:
+            self._faults.fire(point, **ctx)
+
+    def _l2_stack(self, lv: Level) -> Optional[L2Stack]:
+        """This level's L2 ring view; None when replication is off or the
+        job is single-process (a ring of one has no partner)."""
+        if not self.partner_replication or self.ctx.count < 2:
+            return None
+        st = self._l2_stacks.get(lv.directory)
+        if st is None:
+            root = (os.path.join(self.l2_root,
+                                 f"L{self.levels.index(lv)}")
+                    if self.l2_root else default_l2_root(lv.directory))
+            st = L2Stack(root, self.ctx.index, self.ctx.count)
+            self._l2_stacks[lv.directory] = st
+        return st
+
+    def _l2_for_root(self, root: str) -> Optional[L2Stack]:
+        for lv in self.levels:
+            if lv.directory == root:
+                return self._l2_stack(lv)
+        return None
+
     def _save_level(self, lv: Level, step: int, state, report, stats):
         t0 = time.perf_counter()
         lv_index = self.levels.index(lv)
@@ -414,7 +534,20 @@ class CoordinatedCheckpointManager:
         chain: List[int] = []
         self._seq += 1
         tag = f"q{self._seq}.L{lv_index}"
+        l2 = self._l2_stack(lv)
+        survivors = list(range(self.ctx.count))
         try:
+            self._fire("pack_done", name=tag, step=step)
+            if l2 is not None:
+                tr = time.perf_counter()
+                rep = l2.replicate(step, items)
+                stats.setdefault("l2_bytes_replicated", 0)
+                stats["l2_bytes_replicated"] += (rep["l2_local_bytes"]
+                                                 + rep["l2_partner_bytes"])
+                rep["replicate_s"] = time.perf_counter() - tr
+            else:
+                rep = {}
+            self._fire("after_replicate", name=tag, step=step)
             if lv.max_chain > 0 and self._delta_ok(lv, cs, report, layout):
                 kind = "delta"
                 chain = [cs.base_step] + list(cs.chain) + [step]
@@ -458,33 +591,170 @@ class CoordinatedCheckpointManager:
             stats["host_bytes_written"] += written
             lv_stats = {"kind": kind, "host_bytes_written": written,
                         "write_s": time.perf_counter() - t0}
+            lv_stats.update(rep)
             stats["levels"][lv.directory] = lv_stats
+            self._fire("after_land_write", name=tag, step=step)
 
             t1 = time.perf_counter()
-            self.coll.barrier(f"{tag}.land",
-                              timeout=self.barrier_timeout_s)
+            survivors, degraded, recovered = self._land(
+                tag, lv, step, pending, kind, l2, lv_stats)
             lv_stats["land_barrier_s"] = time.perf_counter() - t1
-            if self.ctx.is_leader:
+            if self.ctx.index == survivors[0]:
                 t2 = time.perf_counter()
-                self._fuse_and_commit(lv, step, pending, kind, chain)
+                self._fuse_and_commit(lv, step, pending, kind, chain,
+                                      host_manifests_override=recovered,
+                                      degraded=degraded)
                 lv_stats["commit_s"] = time.perf_counter() - t2
-            self.coll.barrier(f"{tag}.commit",
-                              timeout=self.barrier_timeout_s)
+            self._fire("before_commit_barrier", name=tag, step=step)
+            self._commit_barrier(tag, lv, step, survivors, lv_stats)
+            self._fire("after_commit", name=tag, step=step)
         except BaseException:
             # the chain must never reference a step that did not commit
             self._chains.pop(lv.directory, None)
             raise
+        self._l1.put(lv.directory, step, items)
         self.coll.cleanup(self._seq - 1)
-        if self.ctx.is_leader:
+        if self.ctx.index == survivors[0]:
             self._gc(lv)
+        if l2 is not None:
+            # every host prunes its own node-local replica store to the
+            # newest keep_n committed steps — computed from the policy,
+            # not the store listing, so it cannot race the leader's _gc
+            steps = committed_steps(lv.directory)
+            l2.gc(steps[-lv.keep_n:] if lv.keep_n else steps)
         lv_stats["total_s"] = time.perf_counter() - t0
 
+    # --- failure detection & degraded commit -----------------------------
+
+    def _land(self, tag: str, lv: Level, step: int, pending: str,
+              kind: str, l2: Optional[L2Stack], lv_stats):
+        """The land barrier, with degradation: on a ``BarrierTimeout`` the
+        surviving quorum recovers the dead hosts' current-step segments
+        from their partners' L2 replicas and re-runs the rendezvous over
+        the survivors only.  Returns ``(survivors, degraded_info,
+        recovered_manifests)``."""
+        name = f"{tag}.land"
+        try:
+            self.coll.barrier(name, timeout=self.barrier_timeout_s)
+            return list(range(self.ctx.count)), None, None
+        except BarrierTimeout as e:
+            if not (self.degraded_saves and l2 is not None and e.missing):
+                raise
+            missing = list(e.missing)
+            survivors = [p for p in range(self.ctx.count)
+                         if p not in missing]
+            if not survivors or self.ctx.index not in survivors:
+                raise
+            deg_path = os.path.join(pending, f".degraded_{tag}.json")
+            recovered = None
+            if self.ctx.index == survivors[0]:
+                recovered = {}
+                try:
+                    for d in missing:
+                        holder = partner_of(d, self.ctx.count)
+                        if holder not in survivors:
+                            raise FileNotFoundError(
+                                f"host {d}'s partner {holder} is also "
+                                f"dead — no L2 replica reachable")
+                        recovered[d] = self._recover_host(
+                            lv, step, pending, kind, d, holder, lv_stats)
+                except (OSError, ValueError) as rec_err:
+                    # recovery impossible (host died before replicating,
+                    # replica corrupt, partner dead too): the save fails
+                    # as it would have without degradation
+                    raise e from rec_err
+                degraded = {
+                    "survivors": survivors, "missing": missing,
+                    "recovered_from": {str(d): partner_of(d, self.ctx.count)
+                                       for d in missing}}
+                tmp = deg_path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(degraded, f)
+                os.rename(tmp, deg_path)
+            else:
+                degraded = self._await_degraded(deg_path, e)
+                survivors = [int(p) for p in degraded["survivors"]]
+                if self.ctx.index not in survivors:
+                    raise
+            lv_stats["degraded"] = degraded
+            self.coll.barrier(f"{name}2", timeout=self.barrier_timeout_s,
+                              participants=survivors)
+            return survivors, degraded, recovered
+
+    def _await_degraded(self, deg_path: str, orig: BarrierTimeout):
+        """Non-leading survivors wait for the recovery leader's degraded
+        plan (it is authoritative: per-host ``missing`` views can differ
+        by stragglers)."""
+        timeout = (self.barrier_timeout_s
+                   if self.barrier_timeout_s is not None
+                   else getattr(self.coll, "timeout_s", 120.0))
+        deadline = time.monotonic() + float(timeout)
+        poll = 0.01
+        while time.monotonic() <= deadline:
+            try:
+                with open(deg_path) as f:
+                    return json.load(f)
+            except (OSError, ValueError):
+                pass
+            time.sleep(poll)
+            poll = min(poll * 2, 0.25)
+        raise orig
+
+    def _recover_host(self, lv: Level, step: int, pending: str, kind: str,
+                      dead: int, holder: int, lv_stats) -> Dict[str, Any]:
+        """Materialize a dead host's segments into the pending dir from
+        its partner's CRC-verified L2 replica.  The replica holds the full
+        current-step packed payloads, so even mid-delta-chain the
+        recovered entries simply *replace* that host's segments at this
+        step (the chain walk applies full entries as replacements).
+        Recovery writes under a distinct shard prefix — a stalled-but-
+        alive original writer can never race the recovered bytes."""
+        pairs = self._l2_stack(lv).store_of(holder).read_all(step, dead)
+        entries = []
+        for e, raw in pairs:
+            meta = {k: v for k, v in e.items()
+                    if k not in ("offset", "length", "checksum", "file")}
+            entries.append((meta, len(raw), BytesSource(raw)))
+        extra = {"step": int(step), "process_count": self.ctx.count,
+                 "kind": kind, "recovered_from": int(holder)}
+        write_host_entries(pending, dead, entries, shards=lv.shards,
+                           extra=extra, prefix=f"l2r_h{dead}_")
+        lv_stats.setdefault("l2_recovered_bytes", 0)
+        lv_stats["l2_recovered_bytes"] += sum(len(r) for _, r in pairs)
+        with open(os.path.join(pending,
+                               f"manifest.host{dead}.json")) as f:
+            return json.load(f)
+
+    def _commit_barrier(self, tag: str, lv: Level, step: int,
+                        survivors: List[int], lv_stats) -> None:
+        """The commit barrier tolerates members dying *after* the commit
+        marker landed: the step is durably visible, so survivors report
+        the missing hosts instead of failing a complete checkpoint."""
+        participants = (survivors if len(survivors) < self.ctx.count
+                        else None)
+        try:
+            self.coll.barrier(f"{tag}.commit",
+                              timeout=self.barrier_timeout_s,
+                              participants=participants)
+        except BarrierTimeout as e:
+            if not is_step_committed(lv.directory, step):
+                raise
+            lv_stats["commit_barrier_missing"] = list(e.missing)
+
     def _fuse_and_commit(self, lv: Level, step: int, pending: str,
-                         kind: str, chain: List[int]) -> None:
+                         kind: str, chain: List[int],
+                         host_manifests_override=None,
+                         degraded=None) -> None:
         """Phase 2 (leader): validate host agreement, fuse, rename,
-        commit-mark."""
+        commit-mark.  ``host_manifests_override`` carries the degraded
+        recovery's in-memory manifests for dead hosts — authoritative over
+        anything a stalled original writer may still land on disk."""
+        override = host_manifests_override or {}
         host_manifests = {}
         for p in range(self.ctx.count):
+            if p in override:
+                host_manifests[p] = override[p]
+                continue
             path = os.path.join(pending, f"manifest.host{p}.json")
             if not os.path.exists(path):
                 raise FileNotFoundError(
@@ -497,7 +767,13 @@ class CoordinatedCheckpointManager:
                     f"{hm.get('kind')!r} save but the leader planned "
                     f"{kind!r} — chains diverged")
             host_manifests[p] = hm
-        extra = {}
+        extra = {"resilience": {
+            "levels": list(LEVEL_ORDER),
+            "l2_partner_map": ({str(p): q for p, q
+                                in partner_map(self.ctx.count).items()}
+                               if self._l2_stack(lv) is not None else None)}}
+        if degraded is not None:
+            extra["degraded"] = degraded
         if kind == "delta":
             extra["chain"] = {"base_step": int(chain[0]),
                               "delta_chain": [int(s) for s in chain[:-1]]}
@@ -521,9 +797,11 @@ class CoordinatedCheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(pending, final)
-        write_commit_marker(final, {"step": int(step),
-                                    "process_count": self.ctx.count,
-                                    "kind": kind})
+        info = {"step": int(step), "process_count": self.ctx.count,
+                "kind": kind}
+        if degraded is not None:
+            info["degraded"] = degraded
+        write_commit_marker(final, info)
 
     # --- retention (leader only) ----------------------------------------
 
@@ -580,8 +858,15 @@ class CoordinatedCheckpointManager:
         ``state_like`` value.  Delta-chain steps reconstruct segment
         payloads first (chain walk), then slice.
 
-        ``last_restore_stats`` records ``bytes_read`` (disk bytes actually
-        fetched) and ``h2d_bytes``.
+        Each segment range is served from the nearest live resilience
+        level — L1 resident payloads (this manager's own recent save),
+        L2 partner replica (CRC-checked; any failure falls through), then
+        the shared store with transparent L3 parity rebuild.
+        ``last_restore_stats`` records ``bytes_read`` (I/O bytes actually
+        fetched: L2 + store), ``bytes_read_l2`` / ``bytes_read_store`` /
+        ``bytes_l1`` (per-level byte accounting — a pure partner restore
+        shows ``bytes_read_store == 0``), ``level_served`` (segment-fetch
+        counts per level), and ``h2d_bytes``.
         """
         mode = self.restore_mode if mode is None else mode
         if mode not in ("auto", "host", "device"):
@@ -601,18 +886,28 @@ class CoordinatedCheckpointManager:
                       skipped, local_only=False):
         gm = GlobalManifest.load(root, step)
         stats = {"step": step, "mode": mode, "bytes_read": 0,
+                 "bytes_read_l2": 0, "bytes_read_store": 0, "bytes_l1": 0,
+                 "level_served": {lvl: 0 for lvl in LEVEL_ORDER},
                  "h2d_bytes": 0, "missing_leaves": [], "skipped": skipped,
                  "chain": bool(gm.chain)}
         # Delta chains (and precision-tiered leaves, whose payloads are
         # variable-width) cannot be range-addressed: reconstruct the full
-        # payloads once, then slice locally.
+        # payloads once, then slice locally.  The chain walk reads the
+        # shared store (XOR rebuilds attributed to L3).
         tiered = any(s.get("region_tiers")
                      for e in gm.manifest["leaves"]
                      for s in GlobalManifest.segments_of(e))
         chain_packed = None
         if gm.chain or tiered:
-            _, chain_packed, _ = load_checkpoint_raw(root, step)
-            stats["bytes_read"] = int(gm.manifest.get("payload_bytes", 0))
+            io: Dict[str, int] = {}
+            _, chain_packed, _ = load_checkpoint_raw(root, step,
+                                                     io_stats=io)
+            read = int(io.get("bytes_read", 0)) or int(
+                gm.manifest.get("payload_bytes", 0))
+            parity = int(io.get("parity_bytes", 0))
+            stats["bytes_read"] = read
+            stats["bytes_read_store"] = read
+            stats["level_served"][L3_PARITY if parity else L4_STORE] += 1
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
         try:
@@ -623,6 +918,9 @@ class CoordinatedCheckpointManager:
         d = os.path.join(root, f"step_{step}")
         out = []
         with ShardReader(d, int(gm.manifest.get("shards", 0) or 1)) as rd:
+            fetcher = _LevelFetcher(self, root, step, rd,
+                                    self._l2_for_root(root),
+                                    gm.process_count, stats)
             for (path, leaf), sh in zip(flat, shard_flat):
                 name = _path_str(path)
                 e = entries.get(name)
@@ -632,8 +930,8 @@ class CoordinatedCheckpointManager:
                     out.append(jax.device_put(arr, sh)
                                if sh is not None else jnp.asarray(arr))
                     continue
-                out.append(self._restore_leaf(rd, e, leaf, sh, fill, mode,
-                                              stats, chain_packed,
+                out.append(self._restore_leaf(fetcher, e, leaf, sh, fill,
+                                              mode, stats, chain_packed,
                                               local_only))
         self.last_restore_stats = stats
         return step, jax.tree_util.tree_unflatten(treedef, out)
@@ -653,7 +951,7 @@ class CoordinatedCheckpointManager:
         rows = shape[0] if shape else 1
         return [(0, rows, None)], False
 
-    def _restore_leaf(self, rd, e, leaf, sh, fill, mode, stats,
+    def _restore_leaf(self, fetcher, e, leaf, sh, fill, mode, stats,
                       chain_packed, local_only=False):
         shape = tuple(e["shape"])
         dtype = np.dtype(e["dtype"])
@@ -689,11 +987,10 @@ class CoordinatedCheckpointManager:
             return seg_cache[i]
 
         def read_checked(s, start_b, nbytes):
-            """Range read; a read spanning the whole entry is CRC-checked
-            against the manifest (partial ranges cannot be — they are
-            counted so callers can audit the trade-off)."""
-            raw = rd.read_range(s, start_b, nbytes)
-            stats["bytes_read"] += nbytes
+            """Level-cascade range read; a read spanning the whole entry
+            is CRC-checked against the manifest (partial ranges cannot be
+            — they are counted so callers can audit the trade-off)."""
+            raw = fetcher.read(e["name"], s, start_b, nbytes)
             if start_b == 0 and nbytes == int(s["length"]):
                 if zlib.crc32(raw) != s["checksum"]:
                     raise IOError(

@@ -914,19 +914,21 @@ class CheckpointManager:
             raise ValueError(f"unknown restore mode {mode!r}")
         skipped: List[Dict[str, Any]] = []
         for step, root in self._candidates():
+            io_stats: Dict[str, int] = {}
             try:
-                step, packed, _ = load_checkpoint_raw(root, step)
+                step, packed, _ = load_checkpoint_raw(root, step,
+                                                      io_stats=io_stats)
             except (OSError, ValueError, KeyError) as e:
                 skipped.append({"step": step, "root": root, "error": str(e)})
                 continue
             return self._materialize(state_like, shardings, packed, fill,
-                                     mode, step, skipped)
+                                     mode, step, skipped, io_stats)
         if skipped:
             self.last_restore_stats = {"skipped": skipped, "step": None}
         return None
 
     def _materialize(self, state_like, shardings, packed, fill, mode,
-                     step, skipped) -> Tuple[int, Any]:
+                     step, skipped, io_stats=None) -> Tuple[int, Any]:
         flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
         shard_flat = (jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: hasattr(x, "spec"))
@@ -969,8 +971,16 @@ class CheckpointManager:
                        else jnp.asarray(a))
                 h2d += a.nbytes
             out.append(arr)
+        io_stats = io_stats or {}
+        parity = int(io_stats.get("parity_bytes", 0))
+        read = int(io_stats.get("bytes_read", 0))
         self.last_restore_stats = {
             "step": step, "mode": mode, "h2d_bytes": int(h2d),
             "full_bytes": int(full), "device_leaves": device_leaves,
-            "missing_leaves": missing, "skipped": skipped}
+            "missing_leaves": missing, "skipped": skipped,
+            "bytes_read": read,
+            # resilience-level attribution: bytes served by the XOR
+            # parity rebuild (L3) vs plain shared-store reads (L4)
+            "level_bytes": {"l3_parity": parity, "l4_store": read - parity},
+            "resilience_level": "l3_parity" if parity else "l4_store"}
         return step, jax.tree_util.tree_unflatten(treedef, out)

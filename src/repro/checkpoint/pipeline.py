@@ -46,6 +46,11 @@ D2H_CHUNK_BYTES = 4 << 20
 # thread and the writer): backpressure instead of unbounded host buffering.
 QUEUE_CHUNKS = 4
 
+# How long a producer blocked on a full queue waits before re-checking the
+# shared abort event: an aborted save unblocks the producer within one
+# poll interval (tests/test_pipeline_save.py pins this bound).
+ABORT_POLL_S = 0.2
+
 
 def as_u8(arr: np.ndarray) -> np.ndarray:
     """Flat uint8 (bitcast) view of a host array — zero-copy for any
@@ -124,7 +129,7 @@ class QueueSource(ByteSource):
             if self.abort is not None and self.abort.is_set():
                 raise RuntimeError("save pipeline aborted: writer failed")
             try:
-                self._q.put(item, timeout=0.2)
+                self._q.put(item, timeout=ABORT_POLL_S)
                 return
             except queue.Full:
                 continue

@@ -568,7 +568,8 @@ def host_shard_prefix(host: int) -> str:
 
 def write_host_entries(pending_dir: str, host: int, entries: List[Any],
                        shards: int = 1,
-                       extra: Optional[Dict[str, Any]] = None) -> str:
+                       extra: Optional[Dict[str, Any]] = None,
+                       prefix: Optional[str] = None) -> str:
     """Phase 1 of the coordinated commit: write one host's owned entries
     into the shared pending dir.
 
@@ -578,7 +579,10 @@ def write_host_entries(pending_dir: str, host: int, entries: List[Any],
     ``entries``: either ready ``(meta, length, source)`` stream items or
     ``PackedLeaf``/``DeltaLeaf``/``StreamLeaf`` values; metas must carry
     the segment's flat element range (``start``/``stop``) and the leaf's
-    *global* shape.
+    *global* shape.  ``prefix`` overrides the shard-file prefix — the
+    degraded-save recovery writes a dead host's entries under a distinct
+    prefix so a stalled-but-alive original writer can never race the
+    recovery bytes.
     """
     items = [e if isinstance(e, tuple) else _as_stream_item(e)
              for e in entries]
@@ -588,9 +592,10 @@ def write_host_entries(pending_dir: str, host: int, entries: List[Any],
     alive = os.path.join(pending_dir, ALIVE_FILE)
     with open(alive, "w"):
         pass
-    index, shard_sizes = _stream_to_files(pending_dir, items, shards,
-                                          prefix=host_shard_prefix(host),
-                                          touch=alive)
+    index, shard_sizes = _stream_to_files(
+        pending_dir, items, shards,
+        prefix=prefix if prefix is not None else host_shard_prefix(host),
+        touch=alive)
     manifest = {"host": int(host), "shards": int(shards),
                 "payload_bytes": int(sum(shard_sizes)), "leaves": index}
     if extra:
@@ -787,6 +792,11 @@ class ShardReader:
         self.shards = shards
         self._handles: Dict[str, Any] = {}
         self._rebuilt: Dict[int, bytes] = {}
+        # I/O accounting for the resilience-level report: bytes served
+        # (total), the subset served from XOR-rebuilt shards (the L3
+        # parity level), and the raw disk bytes the rebuilds cost
+        self.stats: Dict[str, int] = {"bytes_read": 0, "parity_bytes": 0,
+                                      "parity_rebuild_bytes": 0}
 
     def __enter__(self):
         return self
@@ -812,6 +822,7 @@ class ShardReader:
                 b = f.read()
             pb = np.frombuffer(b.ljust(len(p), b"\0"), np.uint8)
             self._rebuilt[k] = (p ^ pb).tobytes()
+            self.stats["parity_rebuild_bytes"] += len(p) + len(b)
         return self._rebuilt[k]
 
     def read(self, entry: Dict[str, Any]) -> bytes:
@@ -828,17 +839,23 @@ class ShardReader:
                 f"{total} bytes for leaf {entry.get('name')}")
         fname = entry.get("file")
         numbered = fname is None
+
+        def from_rebuilt(k):
+            self.stats["bytes_read"] += length
+            self.stats["parity_bytes"] += length
+            return self._rebuilt[k][base + start:base + start + length]
+
         if numbered:
             k = int(entry["shard"])
             fname = f"shard_{k}.bin"
             if k in self._rebuilt:
-                return self._rebuilt[k][base + start:base + start + length]
+                return from_rebuilt(k)
         if fname not in self._handles:
             path = os.path.join(self.d, fname)
             if not os.path.exists(path):
                 if numbered:
-                    return self._rebuild(k)[base + start:
-                                            base + start + length]
+                    self._rebuild(k)
+                    return from_rebuilt(k)
                 raise FileNotFoundError(
                     f"shard file {fname} missing in {self.d}")
             self._handles[fname] = open(path, "rb")
@@ -847,8 +864,10 @@ class ShardReader:
         data = f.read(length)
         if len(data) != length:       # truncated shard: try parity rebuild
             if numbered:
-                return self._rebuild(k)[base + start:base + start + length]
+                self._rebuild(k)
+                return from_rebuilt(k)
             raise IOError(f"shard file {fname} truncated in {self.d}")
+        self.stats["bytes_read"] += length
         return data
 
 
@@ -939,7 +958,8 @@ def _merge_segments(name: str, shape, dtype: str,
         np.frombuffer(payload, np.dtype(dtype)))
 
 
-def load_checkpoint_raw(root: str, step: Optional[int] = None
+def load_checkpoint_raw(root: str, step: Optional[int] = None,
+                        io_stats: Optional[Dict[str, int]] = None
                         ) -> Tuple[int, Dict[str, PackedLeaf],
                                    Dict[str, Any]]:
     """Resolve ``step`` (latest when None), walk its delta chain, and return
@@ -954,6 +974,11 @@ def load_checkpoint_raw(root: str, step: Optional[int] = None
 
     Integrity: every full payload and every delta patch is crc-checked as
     read; the reconstructed payload is a pure function of verified bytes.
+
+    ``io_stats``: optional dict accumulating the readers' I/O accounting
+    (``bytes_read`` / ``parity_bytes`` / ``parity_rebuild_bytes``) — the
+    resilience-level report uses it to attribute restore bytes to the L3
+    parity level vs plain L4 store reads.
     """
     if step is None:
         # same visibility rule as latest(): an uncommitted coordinated
@@ -975,7 +1000,8 @@ def load_checkpoint_raw(root: str, step: Optional[int] = None
     for s in todo:
         m = manifest if s == step else read_manifest(root, s)
         d = os.path.join(root, f"step_{s}")
-        with ShardReader(d, int(m["shards"])) as reader:
+        reader = ShardReader(d, int(m["shards"]))
+        try:
             for e in m["leaves"]:
                 name = e["name"]
                 if name not in leafinfo:
@@ -999,6 +1025,11 @@ def load_checkpoint_raw(root: str, step: Optional[int] = None
                     raise IOError(f"checksum mismatch for leaf {name} "
                                   f"at step {s}")
                 _apply_chain_entry((name,), e, raw, s, payloads, meta)
+        finally:
+            if io_stats is not None:
+                for k, v in reader.stats.items():
+                    io_stats[k] = io_stats.get(k, 0) + v
+            reader.close()
 
     by_name: Dict[str, List[Tuple[Tuple, Dict[str, Any], np.ndarray]]] = {}
     for key, buf in payloads.items():

@@ -40,9 +40,10 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import random
 import re
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 _ENV_INDEX = "REPRO_PROCESS_INDEX"
 _ENV_COUNT = "REPRO_PROCESS_COUNT"
@@ -86,13 +87,43 @@ def current_context() -> ProcessContext:
         return ProcessContext(index=0, count=1)
 
 
+class BarrierTimeout(TimeoutError):
+    """A barrier's deadline passed with participants still missing.
+
+    Failure detection for the degradation layer: ``missing`` carries the
+    process indices that never arrived, so the coordinator can compute
+    the surviving quorum and recover the dead hosts' segments from their
+    partners' L2 copies instead of aborting the save.
+    """
+
+    def __init__(self, name: str, missing: Sequence[int], expected: int,
+                 waited_s: float):
+        self.barrier_name = name
+        self.missing = sorted(int(m) for m in missing)
+        self.expected = int(expected)
+        self.waited_s = float(waited_s)
+        hosts = ", ".join(f"host {m}" for m in self.missing)
+        super().__init__(
+            f"barrier {name!r}: processes {self.missing} of "
+            f"{self.expected} never arrived within {self.waited_s:.1f}s "
+            f"({hosts} presumed dead)")
+
+
 class Collective:
-    """Barrier provider bound to a ``ProcessContext``."""
+    """Barrier provider bound to a ``ProcessContext``.
+
+    ``participants``: optional explicit quorum (sorted process indices)
+    for backends that support membership-aware rendezvous — after a
+    detected host death the coordinator re-runs its commit barriers over
+    the surviving quorum only.  Backends without liveness control ignore
+    it (the full membership is then implied).
+    """
 
     def __init__(self, ctx: ProcessContext):
         self.ctx = ctx
 
-    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+    def barrier(self, name: str, timeout: Optional[float] = None,
+                participants: Optional[Sequence[int]] = None) -> None:
         raise NotImplementedError
 
     def cleanup(self, before_seq: int) -> None:
@@ -112,7 +143,8 @@ class NullCollective(Collective):
         if self.ctx.count != 1:
             raise ValueError("NullCollective requires process_count == 1")
 
-    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+    def barrier(self, name: str, timeout: Optional[float] = None,
+                participants: Optional[Sequence[int]] = None) -> None:
         return None
 
 
@@ -127,7 +159,11 @@ class JaxCollective(Collective):
         super().__init__(ctx or ProcessContext(jax.process_index(),
                                                jax.process_count()))
 
-    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+    def barrier(self, name: str, timeout: Optional[float] = None,
+                participants: Optional[Sequence[int]] = None) -> None:
+        # participants is ignored: the fabric barrier has no membership
+        # control (a dead host fails the whole job at the runtime layer,
+        # so a degraded quorum never reaches this backend)
         from jax.experimental import multihost_utils
         multihost_utils.sync_global_devices(_NAME_RE.sub("_", name))
 
@@ -136,19 +172,26 @@ class FileCollective(Collective):
     """Filesystem rendezvous over a shared directory.
 
     Each participant touches ``b_<name>.p<index>`` and polls until all
-    ``count`` participant files for that name exist.  The poll loop
-    re-touches its own file if it goes missing (so the constructor's
-    stale-file cleanup can never wedge a live barrier), and raises
-    ``TimeoutError`` naming the missing participants when the deadline
-    passes — a dead host fails the collective instead of hanging it.
+    participant files for that name exist (all ``count`` processes, or
+    the explicit ``participants`` quorum).  The poll loop re-touches its
+    own file if it goes missing (so the constructor's stale-file cleanup
+    can never wedge a live barrier), backs off exponentially with jitter
+    from ``poll_s`` up to ``max_poll_s`` (resetting whenever a new
+    participant arrives, so a nearly-complete barrier stays responsive
+    while a stalled one stops hammering the shared filesystem), and
+    raises ``BarrierTimeout`` carrying the indices of the participants
+    that never arrived — a dead host fails the collective with an
+    attributable error instead of hanging it.
     """
 
     def __init__(self, directory: str, ctx: Optional[ProcessContext] = None,
-                 poll_s: float = 0.01, timeout_s: float = 120.0):
+                 poll_s: float = 0.01, timeout_s: float = 120.0,
+                 max_poll_s: float = 0.25):
         super().__init__(ctx or current_context())
         self.directory = directory
         self.poll_s = float(poll_s)
         self.timeout_s = float(timeout_s)
+        self.max_poll_s = max(float(max_poll_s), self.poll_s)
         os.makedirs(directory, exist_ok=True)
         # Leftovers from a crashed previous run would satisfy this run's
         # barriers instantly (sequence numbers restart every run), so the
@@ -171,14 +214,21 @@ class FileCollective(Collective):
         return os.path.join(self.directory,
                             f"b_{_NAME_RE.sub('_', name)}.p{index}")
 
-    def barrier(self, name: str, timeout: Optional[float] = None) -> None:
+    def barrier(self, name: str, timeout: Optional[float] = None,
+                participants: Optional[Sequence[int]] = None) -> None:
+        procs = (sorted(set(int(p) for p in participants))
+                 if participants is not None else list(range(self.ctx.count)))
+        if self.ctx.index not in procs:
+            return              # not part of this quorum's rendezvous
         mine = self._path(name, self.ctx.index)
         with open(mine, "w") as f:
             f.write(str(self.ctx.index))
-        deadline = time.monotonic() + (self.timeout_s if timeout is None
-                                       else float(timeout))
+        wait_s = self.timeout_s if timeout is None else float(timeout)
+        deadline = time.monotonic() + wait_s
+        poll = self.poll_s
+        last_missing = len(procs)
         while True:
-            missing = [j for j in range(self.ctx.count)
+            missing = [j for j in procs
                        if not os.path.exists(self._path(name, j))]
             if not missing:
                 return
@@ -186,10 +236,14 @@ class FileCollective(Collective):
                 with open(mine, "w") as f:
                     f.write(str(self.ctx.index))
             if time.monotonic() > deadline:
-                raise TimeoutError(
-                    f"barrier {name!r}: processes {missing} of "
-                    f"{self.ctx.count} never arrived")
-            time.sleep(self.poll_s)
+                raise BarrierTimeout(name, missing, len(procs), wait_s)
+            if len(missing) < last_missing:     # progress: stay responsive
+                poll = self.poll_s
+            last_missing = len(missing)
+            # bounded exponential backoff; jitter desynchronizes the
+            # herd of pollers hitting the shared directory
+            time.sleep(poll * (0.75 + 0.5 * random.random()))
+            poll = min(poll * 2.0, self.max_poll_s)
 
     def cleanup(self, before_seq: int) -> None:
         """Unlink this process's *own* files for barriers tagged

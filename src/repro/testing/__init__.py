@@ -1,0 +1,2 @@
+"""Reusable test instrumentation (fault injection for the resilience
+hierarchy lives in ``repro.testing.faults``)."""

@@ -191,12 +191,12 @@ def test_restore_survives_gc_race(tmp_path, monkeypatch):
     real = manager_mod.load_checkpoint_raw
     calls = {"n": 0}
 
-    def racy(root, step=None):
+    def racy(root, step=None, **kw):
         calls["n"] += 1
         if calls["n"] == 1:              # simulate _gc rmtree'ing step 2
             import shutil
             shutil.rmtree(os.path.join(root, "step_2"))
-        return real(root, step)
+        return real(root, step, **kw)
 
     monkeypatch.setattr(manager_mod, "load_checkpoint_raw", racy)
     got = mgr.restore(state)

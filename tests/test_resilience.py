@@ -1,0 +1,658 @@
+"""The kill-a-host matrix: multi-level resilience under injected faults.
+
+Every test states its failure with the reusable harness in
+``repro.testing.faults`` — a host dying between two save phases
+(``FaultInjector`` on the coordinator's seams), a host dying at a barrier
+(``FaultyCollective``), torn shard files, corrupted replica CRCs, and
+partners dying mid-fetch — then asserts the resilience hierarchy's
+contract: saves land degraded-but-complete from partner L2 replicas,
+restores are served by the nearest live level with exact byte
+accounting, and unrecoverable failures abort cleanly with the previous
+checkpoint intact.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from test_coordinated import (N_ROWS, expected_leaves, make_masks,
+                              make_report, make_state, run_hosts)
+
+from repro.checkpoint import (CheckpointManager, CoordinatedCheckpointManager,
+                              Level, read_manifest)
+from repro.checkpoint import levels as levels_mod
+from repro.checkpoint.levels import (L1_RESIDENT, L2_PARTNER, L4_STORE,
+                                     LEVEL_ORDER, default_l2_root,
+                                     partner_of)
+from repro.checkpoint.store import ALIVE_FILE
+from repro.distributed.collective import (BarrierTimeout, FileCollective,
+                                          ProcessContext, process_segments)
+from repro.testing import faults
+from repro.testing.faults import (FaultInjector, FaultyCollective,
+                                  HostKilled, corrupt_crc,
+                                  partner_fetch_failure, shard_files,
+                                  tear_file)
+
+BARRIER_S = 3.0         # land/commit barrier timeout in fault tests
+
+
+# --------------------------------------------------------------------------
+# harness: coordinated save with a per-host fault
+# --------------------------------------------------------------------------
+
+def resilient_save(root, count, victim=None, point=None, barrier_kill=None,
+                   keep_n=4, timeout=30.0):
+    """Save step 1 on ``count`` simulated hosts; ``victim`` dies at the
+    named injector ``point`` or at the ``barrier_kill`` (mode, substr)
+    barrier.  Returns (results, errors) from ``run_hosts`` where each
+    surviving result is (state_arrays, last_save_stats)."""
+    masks = make_masks()
+
+    def host(p, coll):
+        inj = None
+        if p == victim and point is not None:
+            inj = FaultInjector().kill_at(point)
+        if p == victim and barrier_kill is not None:
+            mode, substr = barrier_kill
+            coll = FaultyCollective(coll)
+            (coll.kill_before if mode == "before"
+             else coll.kill_after)(substr)
+        report = make_report(masks)
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=keep_n, shards=1)], collective=coll,
+            scrutiny_fn=lambda s: report, save_mode="device",
+            pack_use_kernel=False, pack_interpret=True,
+            barrier_timeout_s=BARRIER_S, fault_injector=inj)
+        state = make_state()
+        mgr.save(1, state)
+        stats = dict(mgr.last_save_stats)
+        mgr.close()
+        return {k: np.asarray(v) for k, v in state.items()}, stats
+
+    return run_hosts(count, host, timeout=timeout), masks
+
+
+def assert_bit_identical_restore(root, masks, expect_step=1):
+    """The committed checkpoint restores bit-identically through the plain
+    single-process manager (full reassembly through the global manifest)."""
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+    mgr = CheckpointManager([Level(root)])
+    st, got = mgr.restore(make_state(step_val=0))
+    assert st == expect_step
+    for k, v in exp.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v,
+                                      err_msg=f"leaf {k}")
+    mgr.close()
+    return exp
+
+
+def elastic_restore(root, count, timeout=30.0):
+    """Fresh ``count``-host managers restore ``local_only``; returns
+    per-host (step, arrays, last_restore_stats)."""
+
+    def host(p, coll):
+        mgr = CoordinatedCheckpointManager(
+            [Level(root)], collective=coll,
+            pack_use_kernel=False, pack_interpret=True)
+        st, got = mgr.restore(make_state(step_val=0), local_only=True)
+        stats = dict(mgr.last_restore_stats)
+        mgr.close()
+        return st, {k: np.asarray(v) for k, v in got.items()}, stats
+
+    results, errors = run_hosts(count, host, timeout=timeout)
+    assert not any(errors), [e for e in errors if e]
+    return results
+
+
+def assert_owned_rows_match(results, exp, count):
+    """Each restoring host's owned ``w`` rows match the expectation."""
+    for lo, hi, owner in process_segments(exp["w"].shape, count):
+        _, got, _ = results[owner]
+        np.testing.assert_array_equal(got["w"][lo:hi], exp["w"][lo:hi],
+                                      err_msg=f"host {owner} rows "
+                                              f"[{lo}, {hi})")
+
+
+# --------------------------------------------------------------------------
+# satellite: liveness-aware barrier (backoff + attributable timeout)
+# --------------------------------------------------------------------------
+
+def test_barrier_timeout_names_missing_hosts(tmp_path):
+    coll = FileCollective(str(tmp_path / "c"),
+                          ctx=ProcessContext(0, 3),
+                          poll_s=0.01, timeout_s=0.5)
+    with pytest.raises(BarrierTimeout) as ei:
+        coll.barrier("b")
+    e = ei.value
+    assert isinstance(e, TimeoutError)
+    assert e.missing == [1, 2] and e.expected == 3
+    assert "host 1" in str(e) and "presumed dead" in str(e)
+    assert "[1, 2]" in str(e)
+
+
+def test_barrier_backoff_is_exponential_and_capped(tmp_path, monkeypatch):
+    from repro.distributed import collective as coll_mod
+    sleeps = []
+    monkeypatch.setattr(coll_mod.time, "sleep",
+                        lambda s: sleeps.append(s))
+    coll = FileCollective(str(tmp_path / "c"),
+                          ctx=ProcessContext(0, 2),
+                          poll_s=0.01, timeout_s=0.4, max_poll_s=0.25)
+    with pytest.raises(BarrierTimeout):
+        coll.barrier("b")
+    assert len(sleeps) >= 3
+    # jittered doubling: strictly growing early, never past the cap
+    assert sleeps[1] > sleeps[0]
+    assert max(sleeps) <= 0.25 * 1.25 + 1e-9
+    base = sorted(sleeps)
+    assert base[-1] > 4 * base[0]       # genuinely exponential, not linear
+
+
+def test_barrier_participants_quorum(tmp_path):
+    """A quorum barrier completes without the dead member (and is a no-op
+    for a process outside the quorum)."""
+    d = str(tmp_path / "c")
+
+    def host(p):
+        coll = FileCollective(d, ctx=ProcessContext(p, 3), timeout_s=10.0)
+        coll.barrier("q", participants=[0, 2])
+
+    ts = [threading.Thread(target=host, args=(p,)) for p in (0, 2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=15)
+        assert not t.is_alive()
+    # host 1 (not in the quorum) returns immediately
+    FileCollective(d, ctx=ProcessContext(1, 3),
+                   timeout_s=0.2).barrier("q", participants=[0, 2])
+
+
+# --------------------------------------------------------------------------
+# tentpole: degraded saves (kill-a-host matrix, thread-simulated)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("victim", [0, 2])
+def test_kill_after_replicate_commits_degraded_from_partner(tmp_path,
+                                                            victim):
+    """Acceptance #1: a host dies after landing its L2 replica but before
+    its pending write.  The surviving quorum recovers its segments from
+    the partner's replica and commits a complete (degraded) checkpoint
+    that restores bit-identically.  ``victim=0`` also exercises
+    effective-leader failover (fuse runs on the smallest survivor)."""
+    root = str(tmp_path / "lv")
+    (results, errors), masks = resilient_save(root, 4, victim=victim,
+                                              point="after_replicate")
+    assert isinstance(errors[victim], HostKilled)
+    for p in range(4):
+        if p != victim:
+            assert errors[p] is None, (p, errors[p])
+
+    survivors = [p for p in range(4) if p != victim]
+    _, stats = results[survivors[0]]
+    lv = stats["levels"][root]
+    assert lv["degraded"]["missing"] == [victim]
+    assert lv["degraded"]["survivors"] == survivors
+    assert lv["degraded"]["recovered_from"][str(victim)] == \
+        partner_of(victim, 4)
+    assert lv["l2_recovered_bytes"] > 0
+    assert lv["replicate_s"] >= 0
+
+    # the committed step is complete: global + all four host manifests,
+    # recovered shards under the recovery prefix, degraded marked
+    step_dir = os.path.join(root, "step_1")
+    files = set(os.listdir(step_dir))
+    assert "commit.json" in files
+    for p in range(4):
+        assert f"manifest.host{p}.json" in files
+    assert any(f.startswith(f"l2r_h{victim}_") for f in files), files
+    m = read_manifest(root, 1)
+    assert m["degraded"]["missing"] == [victim]
+    assert m["resilience"]["levels"] == list(LEVEL_ORDER)
+    with open(os.path.join(step_dir, "commit.json")) as f:
+        assert json.load(f)["degraded"]["missing"] == [victim]
+
+    assert_bit_identical_restore(root, masks)
+
+
+def test_kill_at_commit_barrier_tolerated_once_marker_landed(tmp_path):
+    """A host that saw the land rendezvous and then died before the commit
+    barrier cannot fail the save: the marker is durable, survivors record
+    the missing host instead of raising."""
+    root = str(tmp_path / "lv")
+    (results, errors), masks = resilient_save(
+        root, 4, victim=3, barrier_kill=("before", ".commit"))
+    assert isinstance(errors[3], HostKilled)
+    for p in range(3):
+        assert errors[p] is None, (p, errors[p])
+        _, stats = results[p]
+        assert stats["levels"][root]["commit_barrier_missing"] == [3]
+    m = read_manifest(root, 1)
+    assert "degraded" not in m      # the checkpoint itself is whole
+    assert_bit_identical_restore(root, masks)
+
+
+def test_kill_before_replicate_aborts_clean(tmp_path):
+    """Death before the L2 replica lands is unrecoverable: survivors get
+    the attributable timeout, nothing commits, nothing leaks."""
+    root = str(tmp_path / "lv")
+    (results, errors), _ = resilient_save(root, 4, victim=1,
+                                          point="pack_done")
+    assert isinstance(errors[1], HostKilled)
+    for p in (0, 2, 3):
+        assert isinstance(errors[p], TimeoutError), (p, errors[p])
+        assert getattr(errors[p], "missing", None) == [1]
+    assert not os.path.exists(os.path.join(root, "step_1"))
+    assert CheckpointManager([Level(root)]).latest() is None
+
+
+def test_degraded_save_preserves_previous_step(tmp_path):
+    """An unrecoverable failure at step 2 leaves step 1 restorable."""
+    root = str(tmp_path / "lv")
+    (_, errors0), masks = resilient_save(root, 4)
+    assert not any(errors0)
+
+    def host(p, coll):
+        inj = (FaultInjector().kill_at("pack_done") if p == 2 else None)
+        report = make_report(make_masks())
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=4, shards=1)], collective=coll,
+            scrutiny_fn=lambda s: report, save_mode="device",
+            pack_use_kernel=False, pack_interpret=True,
+            barrier_timeout_s=BARRIER_S, fault_injector=inj)
+        mgr.save(2, make_state(step_val=2))
+        mgr.close()
+
+    _, errors = run_hosts(4, host, timeout=30.0)
+    assert isinstance(errors[2], HostKilled)
+    assert all(isinstance(errors[p], TimeoutError) for p in (0, 1, 3))
+    assert CheckpointManager([Level(root)]).latest()[0] == 1
+    assert_bit_identical_restore(root, masks)
+
+
+# --------------------------------------------------------------------------
+# tentpole: level-cascade restore with byte accounting
+# --------------------------------------------------------------------------
+
+def test_restore_after_host_death_reads_zero_store_bytes(tmp_path):
+    """Acceptance #2: after a committed save, a host dies (its node-local
+    L2 store with it).  A fresh restore serves every segment from L2 —
+    the dead host's from its partner's replica — with zero shared-store
+    reads, asserted by byte-range accounting."""
+    root = str(tmp_path / "lv")
+    victim = 2
+    (_, errors), masks = resilient_save(root, 4)
+    assert not any(errors)
+    # the host is dead: its node-local replica store is gone
+    shutil.rmtree(os.path.join(default_l2_root(root), f"h{victim}"))
+
+    results = elastic_restore(root, 4)
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+    assert_owned_rows_match(results, exp, 4)
+    for p, (st, _, stats) in enumerate(results):
+        assert st == 1
+        assert stats["bytes_read_store"] == 0, (p, stats)
+        assert stats["bytes_read_l2"] > 0
+        assert stats["bytes_read"] == stats["bytes_read_l2"]
+        assert stats["level_served"][L2_PARTNER] > 0
+        assert stats["level_served"][L4_STORE] == 0
+
+
+def test_restore_same_manager_serves_from_l1(tmp_path):
+    """The manager that just saved restores its own segments from the L1
+    resident cache: no I/O at all."""
+    root = str(tmp_path / "lv")
+    masks = make_masks()
+
+    def host(p, coll):
+        report = make_report(masks)
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=4, shards=1)], collective=coll,
+            scrutiny_fn=lambda s: report, save_mode="device",
+            pack_use_kernel=False, pack_interpret=True)
+        state = make_state()
+        mgr.save(1, state)
+        st, _ = mgr.restore(make_state(step_val=0), local_only=True)
+        stats = dict(mgr.last_restore_stats)
+        mgr.close()
+        return st, stats
+
+    results, errors = run_hosts(2, host)
+    assert not any(errors), errors
+    for st, stats in results:
+        assert st == 1
+        assert stats["level_served"][L1_RESIDENT] > 0
+        assert stats["bytes_l1"] > 0
+        # unowned replicated scalars may still come over L2, but nothing
+        # touches the shared store and owned rows are all resident
+        assert stats["bytes_read_store"] == 0
+        assert stats["bytes_read"] == stats["bytes_read_l2"]
+        assert stats["bytes_l1"] > stats["bytes_read"]
+
+
+def test_torn_store_shards_restore_via_l2(tmp_path):
+    """Every committed shard file torn (as by a lost store): the plain
+    manager has nothing to restore, but the coordinated cascade serves
+    the full state from L2 replicas."""
+    root = str(tmp_path / "lv")
+    (_, errors), masks = resilient_save(root, 4)
+    assert not any(errors)
+    for f in shard_files(os.path.join(root, "step_1")):
+        tear_file(f, frac=0.3)
+
+    assert CheckpointManager([Level(root)]).restore(
+        make_state(step_val=0)) is None
+
+    results = elastic_restore(root, 4)
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+    assert_owned_rows_match(results, exp, 4)
+    for _, _, stats in results:
+        assert stats["bytes_read_store"] == 0
+
+
+def test_corrupt_replica_crc_falls_back_to_store(tmp_path):
+    """A replica whose CRC lies is skipped (both copies corrupted so the
+    fallback is observable): restore stays bit-identical from the store
+    and records the L2 fallback."""
+    root = str(tmp_path / "lv")
+    (_, errors), masks = resilient_save(root, 2)
+    assert not any(errors)
+    l2 = default_l2_root(root)
+    for holder in (0, 1):   # both copies of host 0's replica
+        corrupt_crc(os.path.join(l2, f"h{holder}", "step_1", "src0",
+                                 levels_mod.REPLICA_PAYLOAD))
+
+    results = elastic_restore(root, 2)
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+    assert_owned_rows_match(results, exp, 2)
+    _, _, stats0 = results[0]
+    assert stats0.get("l2_fallbacks", 0) >= 1
+    assert stats0["bytes_read_store"] > 0
+
+
+def test_partner_death_during_l2_fetch_falls_back_to_store(tmp_path):
+    """The partner dies *during* the fetch (harness patches the replica
+    read): the cascade falls through to the shared store, bit-identical."""
+    root = str(tmp_path / "lv")
+    (_, errors), masks = resilient_save(root, 2)
+    assert not any(errors)
+    with partner_fetch_failure(times=10 ** 6):
+        results = elastic_restore(root, 2)
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+    assert_owned_rows_match(results, exp, 2)
+    for _, _, stats in results:
+        assert stats["bytes_read_l2"] == 0
+        assert stats["bytes_read_store"] > 0
+        assert stats["level_served"][L4_STORE] > 0
+
+
+def test_l2_store_gc_follows_retention(tmp_path):
+    """Replica stores retain exactly the steps the shared store retains
+    (never newer in-flight ones — that is the inter-save race)."""
+    root = str(tmp_path / "lv")
+    masks = make_masks()
+
+    def host(p, coll):
+        report = make_report(masks)
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=2, shards=1)], collective=coll,
+            scrutiny_fn=lambda s: report, save_mode="device",
+            pack_use_kernel=False, pack_interpret=True)
+        for t in (1, 2, 3):
+            mgr.save(t, make_state(step_val=t))
+        mgr.close()
+
+    _, errors = run_hosts(2, host)
+    assert not any(errors), errors
+    for h in (0, 1):
+        steps = sorted(os.listdir(os.path.join(default_l2_root(root),
+                                               f"h{h}")))
+        assert steps == ["step_2", "step_3"]
+
+
+# --------------------------------------------------------------------------
+# satellites: pipeline abort latency, writer-exception unicity
+# --------------------------------------------------------------------------
+
+def test_queue_source_abort_unblocks_within_one_poll(tmp_path):
+    from repro.checkpoint.pipeline import ABORT_POLL_S, QueueSource
+    abort = threading.Event()
+    src = QueueSource(nbytes=64, maxsize=1, abort=abort)
+    src.put(b"x")                       # queue now full
+    t0 = []
+
+    def blocked_put():
+        try:
+            src.put(b"y")
+        except RuntimeError:
+            t0.append(time.monotonic())
+
+    th = threading.Thread(target=blocked_put)
+    th.start()
+    time.sleep(ABORT_POLL_S / 2)        # producer is mid put-timeout
+    armed = time.monotonic()
+    abort.set()
+    th.join(timeout=5 * ABORT_POLL_S)
+    assert not th.is_alive(), "aborted producer still blocked"
+    assert t0 and t0[0] - armed <= 2 * ABORT_POLL_S
+
+
+def test_writer_exception_raised_exactly_once(tmp_path, monkeypatch):
+    from repro.checkpoint import pipeline as pipeline_mod
+
+    class Boom(RuntimeError):
+        pass
+
+    real_chunks = pipeline_mod.ViewSource.chunks
+    armed = [True]
+
+    def dying_chunks(self):
+        if armed[0]:
+            armed[0] = False
+            raise Boom("writer died")
+        return real_chunks(self)
+
+    monkeypatch.setattr(pipeline_mod.ViewSource, "chunks", dying_chunks)
+    report = make_report(make_masks())
+    mgr = CheckpointManager([Level(str(tmp_path / "lv"))],
+                            scrutiny_fn=lambda s: report,
+                            save_mode="device", pack_interpret=True,
+                            io_chunk_bytes=256)
+    mgr.save(1, make_state())
+    with pytest.raises(Boom):
+        mgr.wait()
+    mgr.wait()          # second drain: the exception does not repeat
+    mgr.close()         # nor on close
+
+
+# --------------------------------------------------------------------------
+# satellites: GC races and stale coordinated pending sweep
+# --------------------------------------------------------------------------
+
+def test_restore_racing_gc_falls_back_to_next_committed(tmp_path):
+    """A step whose files vanish mid-restore (``_gc`` racing) is skipped;
+    the next-newest committed step is served — both manager flavors."""
+    root = str(tmp_path / "lv")
+    mgr = CheckpointManager([Level(root, keep_n=4)])
+    mgr.save(1, make_state(step_val=1), block=True)
+    mgr.save(2, make_state(step_val=2), block=True)
+    mgr.close()
+    for f in shard_files(os.path.join(root, "step_2")):
+        os.unlink(f)        # as the race leaves it: manifest without data
+
+    st, got = CheckpointManager([Level(root)]).restore(make_state())
+    assert st == 1 and int(np.asarray(got["step"])) == 1
+
+    cmgr = CoordinatedCheckpointManager([Level(root)],
+                                        force_coordinated=True,
+                                        pack_use_kernel=False,
+                                        pack_interpret=True)
+    st, got = cmgr.restore(make_state(), local_only=True)
+    assert st == 1 and int(np.asarray(got["step"])) == 1
+    assert cmgr.last_restore_stats["skipped"][0]["step"] == 2
+    cmgr.close()
+
+
+def test_stale_alive_coordinated_pending_swept_by_both_managers(tmp_path):
+    """A coordinated ``.pending_step_N`` whose ``.alive`` went stale (the
+    run died mid phase 1) is reclaimed by the plain *and* the coordinated
+    manager's GC."""
+    def plant(root):
+        pend = os.path.join(root, ".pending_step_9")
+        os.makedirs(pend)
+        with open(os.path.join(pend, "shard_h0_0.bin"), "wb") as f:
+            f.write(b"orphan")
+        alive = os.path.join(pend, ALIVE_FILE)
+        with open(alive, "w"):
+            pass
+        old = time.time() - 3600
+        os.utime(alive, (old, old))
+        return pend
+
+    root_a = str(tmp_path / "a")
+    mgr = CheckpointManager([Level(root_a, keep_n=2)], writer_ttl_s=1.0)
+    mgr.save(1, make_state(), block=True)
+    pend = plant(root_a)
+    mgr.save(2, make_state(step_val=2), block=True)     # save runs _gc
+    mgr.close()
+    assert not os.path.exists(pend)
+
+    root_b = str(tmp_path / "b")
+    cmgr = CoordinatedCheckpointManager(
+        [Level(root_b, keep_n=2)], force_coordinated=True,
+        pending_ttl_s=1.0, pack_use_kernel=False, pack_interpret=True)
+    cmgr.save(1, make_state())
+    pend = plant(root_b)
+    cmgr.save(2, make_state(step_val=2))
+    cmgr.close()
+    assert not os.path.exists(pend)
+    # a *fresh* pending (live .alive) must survive both sweeps
+    live = os.path.join(root_b, ".pending_step_11")
+    os.makedirs(live)
+    with open(os.path.join(live, ALIVE_FILE), "w"):
+        pass
+    cmgr2 = CoordinatedCheckpointManager(
+        [Level(root_b, keep_n=2)], force_coordinated=True,
+        pending_ttl_s=600.0, pack_use_kernel=False, pack_interpret=True)
+    cmgr2.save(3, make_state(step_val=3))
+    cmgr2.close()
+    assert os.path.exists(live)
+
+
+# --------------------------------------------------------------------------
+# acceptance: real processes, a hard kill (os._exit) mid-save
+# --------------------------------------------------------------------------
+
+_PROG = r"""
+import os, sys
+import numpy as np
+sys.path.insert(0, os.environ["TEST_DIR"])
+from test_coordinated import make_state, make_masks, make_report
+from repro.checkpoint import CoordinatedCheckpointManager, Level
+from repro.distributed.collective import get_collective
+from repro.testing.faults import injector_from_env
+
+role = os.environ["ROLE"]
+root = os.environ["ROOT"]
+idx = int(os.environ["REPRO_PROCESS_INDEX"])
+coll = get_collective()
+masks = make_masks()
+report = make_report(masks)
+mgr = CoordinatedCheckpointManager(
+    [Level(root, keep_n=4)], collective=coll,
+    scrutiny_fn=lambda s: report, save_mode="device",
+    pack_use_kernel=False, pack_interpret=True,
+    barrier_timeout_s=float(os.environ.get("BARRIER_TIMEOUT", "20")),
+    fault_injector=injector_from_env())
+if role == "save":
+    mgr.save(1, make_state())
+    deg = mgr.last_save_stats["levels"][root].get("degraded")
+    print("SAVED", "DEGRADED" if deg else "CLEAN",
+          sorted(deg["missing"]) if deg else [])
+elif role == "restore":
+    st, got = mgr.restore(make_state(step_val=0), local_only=True)
+    s = mgr.last_restore_stats
+    np.save(os.path.join(root, f"restored_{idx}.npy"),
+            np.asarray(got["w"]))
+    print("RESTORED", st, int(s["bytes_read_store"]),
+          int(s["bytes_read_l2"]))
+mgr.close()
+"""
+
+
+def _spawn(n, role, root, coord, fault_for=None, fault="", timeout="20"):
+    procs = []
+    base = dict(os.environ, ROOT=root, ROLE=role,
+                REPRO_COORD_DIR=coord, REPRO_PROCESS_COUNT=str(n),
+                BARRIER_TIMEOUT=timeout, JAX_PLATFORMS="cpu",
+                TEST_DIR=os.path.dirname(__file__))
+    base["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + base.get("PYTHONPATH", "").split(os.pathsep))
+    base.pop("REPRO_FAULT", None)
+    for p in range(n):
+        env = dict(base, REPRO_PROCESS_INDEX=str(p))
+        if p == fault_for:
+            env["REPRO_FAULT"] = fault
+        procs.append(subprocess.Popen([sys.executable, "-c", _PROG],
+                                      env=env, stdout=subprocess.PIPE,
+                                      stderr=subprocess.PIPE, text=True))
+    outs = []
+    for pr in procs:
+        out, err = pr.communicate(timeout=300)
+        outs.append((pr.returncode, out, err))
+    return outs
+
+
+@pytest.mark.multiprocess
+def test_hard_kill_after_replicate_commits_and_restores_from_partner(
+        tmp_path):
+    """The acceptance scenario with real processes: 4-process save, one
+    process hard-killed (``os._exit``) right after its L2 replica lands.
+    The surviving quorum commits a complete checkpoint from the partner's
+    replica; a fresh 4-process restore then serves every segment from L2
+    with zero shared-store reads."""
+    root = str(tmp_path / "lv")
+    os.makedirs(root)
+    victim = 2
+
+    outs = _spawn(4, "save", root, str(tmp_path / "coord"),
+                  fault_for=victim, fault="after_replicate:hard")
+    assert outs[victim][0] == 17, outs[victim]
+    for p in range(4):
+        if p == victim:
+            continue
+        rc, out, err = outs[p]
+        assert rc == 0 and f"SAVED DEGRADED [{victim}]" in out, \
+            (p, rc, out, err)
+
+    files = set(os.listdir(os.path.join(root, "step_1")))
+    assert "commit.json" in files
+    assert any(f.startswith(f"l2r_h{victim}_") for f in files), files
+    m = read_manifest(root, 1)
+    assert m["degraded"]["missing"] == [victim]
+
+    masks = make_masks()
+    exp = assert_bit_identical_restore(root, masks)
+
+    # the victim's node-local store died with it
+    shutil.rmtree(os.path.join(default_l2_root(root), f"h{victim}"))
+    outs = _spawn(4, "restore", root, str(tmp_path / "coord2"))
+    for p, (rc, out, err) in enumerate(outs):
+        assert rc == 0, (p, rc, out, err)
+        tok = out.split()
+        assert tok[0] == "RESTORED" and tok[1] == "1", (p, out)
+        assert int(tok[2]) == 0, f"host {p} read {tok[2]} store bytes"
+        assert int(tok[3]) > 0
+    w = np.zeros_like(exp["w"])
+    for lo, hi, owner in process_segments(exp["w"].shape, 4):
+        got_w = np.load(os.path.join(root, f"restored_{owner}.npy"))
+        w[lo:hi] = got_w[lo:hi]
+    np.testing.assert_array_equal(w, exp["w"])
