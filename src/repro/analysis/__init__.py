@@ -1,0 +1,25 @@
+"""Static-analysis subsystem: jaxpr abstract interpretation that prunes,
+cross-checks, and guards the AD scrutiny pipeline.
+
+- :func:`analyze_static` — static element criticality (incl. int/bool
+  dataflow) with the same report interface as the AD engines.
+- :func:`verify_soundness` / :func:`soundness_checker` — checked invariant
+  AD-critical ⊆ static-critical, with jaxpr provenance on violation.
+- :func:`lint_step` / :func:`lint_file` / ``python -m repro.analysis.lint``
+  — checkpoint-safety linter over jaxprs and manager call sites.
+"""
+
+from repro.analysis.lint import (Finding, findings_json, lint_file,
+                                 lint_paths, lint_step)
+from repro.analysis.soundness import (SoundnessError, SoundnessResult,
+                                      Violation, soundness_checker,
+                                      verify_soundness)
+from repro.analysis.static import (ReaderRecord, StaticReport,
+                                   analyze_static)
+
+__all__ = [
+    "Finding", "ReaderRecord", "SoundnessError", "SoundnessResult",
+    "StaticReport", "Violation", "analyze_static", "findings_json",
+    "lint_file", "lint_paths", "lint_step", "soundness_checker",
+    "verify_soundness",
+]

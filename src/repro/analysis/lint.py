@@ -1,0 +1,369 @@
+"""Checkpoint-safety linter — save-time hazards, caught before the crash.
+
+Two coordinated passes share one findings model:
+
+- **Jaxpr pass** (:func:`lint_step`): given the step fn, its full state,
+  and the pytree actually being checkpointed, abstract-interpret the
+  traced jaxpr (``repro.analysis.analyze_static``) and flag semantic
+  hazards — state the restart will silently miss, and bytes the paper's
+  analysis says are wasted.
+- **AST pass** (:func:`lint_file` / :func:`lint_paths`): scan manager call
+  sites in source files for API-usage hazards — donated buffers racing a
+  pipelined save, async saves never drained, RNG keys never threaded into
+  the saved state.
+
+Rules (severity ``error`` fails CI; see README "Static analysis"):
+
+====================  ========  =====  ====================================
+rule                  severity  pass   hazard
+====================  ========  =====  ====================================
+CKPT001 missing-      error     jaxpr  leaf read by the step fn but absent
+ from-checkpoint                       from the checkpointed pytree —
+                                       restart silently corrupts
+CKPT002 saved-but-    warning   jaxpr  checkpointed leaf statically fully
+ dead                                  uncritical — wasted bytes (reported
+                                       vs the paper's 20 % headline)
+CKPT003 rng-not-      warning   jaxpr  step fn consumes PRNG randomness
+ threaded                              but no key-like leaf is saved —
+                                       restart replays a different stream
+CKPT101 donated-      warning*  AST    donate_argnums/argnames in a file
+ while-inflight                        with pipelined saves (*error when
+                                       ``block=False`` is explicit)
+CKPT102 save-not-     warning   AST    ``.save(`` calls but no ``wait()``/
+ drained                               ``close()``/``with`` — writer
+                                       errors are lost, exit may truncate
+CKPT103 rng-key-      warning   AST    a PRNG key variable is split/
+ not-saved                             folded but never appears in a
+                                       ``save(...)`` call
+====================  ========  =====  ====================================
+
+CLI (the CI ``static-analysis`` job)::
+
+    python -m repro.analysis.lint examples src/repro/launch/train.py \
+        --json lint_findings.json --fail-on error
+
+Findings JSON is machine-readable: ``{"version": 1, "findings": [{rule,
+severity, path, line, message, details}, ...], "counts": {...}}``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import os
+import sys
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.analysis.static import analyze_static
+from repro.core.policy import ScrutinyConfig
+
+SEVERITIES = ("error", "warning", "info")
+
+# The paper's headline: scrutiny cuts ~20 % of checkpoint bytes.  A saved
+# leaf that is *entirely* dead is waste on top of that.
+PAPER_HEADLINE_SAVED = 0.20
+
+_RANDOM_PRIMS = {"threefry2x32", "random_seed", "random_bits", "random_wrap",
+                 "random_unwrap", "random_fold_in", "random_gamma",
+                 "random_split"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str
+    path: str              # file path, or "<jaxpr>" for step-fn findings
+    line: int              # 0 when not anchored to a source line
+    message: str
+    details: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.severity.upper():7s} {self.rule} {loc}: {self.message}"
+
+
+def _leaf_names(state) -> List[str]:
+    import jax
+
+    from repro.core.criticality import _path_str
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    return [_path_str(p) for p, _ in flat]
+
+
+def _looks_like_key(name: str, leaf) -> bool:
+    lname = name.lower()
+    if "key" in lname or "rng" in lname or "seed" in lname:
+        return True
+    try:
+        import jax
+        if jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+            return True
+    except Exception:
+        pass
+    dtype = getattr(leaf, "dtype", None)
+    shape = tuple(getattr(leaf, "shape", ()))
+    return (dtype is not None and np.dtype(dtype) == np.uint32
+            and shape[-1:] == (2,))
+
+
+def _jaxpr_primitives(jaxpr, acc: set) -> set:
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for sub in eqn.params.values():
+            inner = getattr(sub, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                _jaxpr_primitives(inner, acc)
+            elif isinstance(sub, (list, tuple)):
+                for s in sub:
+                    inner = getattr(s, "jaxpr", None)
+                    if inner is not None and hasattr(inner, "eqns"):
+                        _jaxpr_primitives(inner, acc)
+    return acc
+
+
+def lint_step(
+    fn: Callable[[Any], Any],
+    state: Any,
+    checkpoint_state: Any = None,
+    *,
+    config: ScrutinyConfig = ScrutinyConfig(),
+    path: str = "<jaxpr>",
+) -> List[Finding]:
+    """Jaxpr-level rules for one step fn.
+
+    ``state``: the full state the step fn reads (what ``fn`` is traced
+    with).  ``checkpoint_state``: the pytree actually passed to
+    ``manager.save`` (defaults to ``state`` — then CKPT001 cannot fire and
+    the check degenerates to dead-weight + RNG accounting).
+    """
+    from repro.core.criticality import traced_step
+
+    findings: List[Finding] = []
+    ts = traced_step(fn, state)
+    static = analyze_static(fn, state, config=config, traced=ts)
+    saved_names = set(_leaf_names(checkpoint_state)
+                      if checkpoint_state is not None else ts.names)
+
+    # CKPT001: read but not saved — restart silently corrupts.
+    for name in ts.names:
+        leaf = static[name]
+        if name in saved_names or not leaf.mask.any():
+            continue
+        readers = [str(r) for r in static.provenance.get(name, ())[:3]]
+        findings.append(Finding(
+            "CKPT001", "error", path, 0,
+            f"state leaf {name!r} is read by the step fn "
+            f"({leaf.critical}/{leaf.total} elements critical) but absent "
+            "from the checkpointed pytree — restart will silently corrupt",
+            {"leaf": name, "critical": leaf.critical, "total": leaf.total,
+             "readers": readers}))
+
+    # CKPT002: saved but statically dead — wasted bytes.
+    total_bytes = sum(static[n].table.full_bytes for n in ts.names
+                      if n in saved_names)
+    for name in ts.names:
+        leaf = static[name]
+        if name not in saved_names or leaf.mask.any():
+            continue
+        frac = leaf.table.full_bytes / total_bytes if total_bytes else 0.0
+        findings.append(Finding(
+            "CKPT002", "warning", path, 0,
+            f"checkpointed leaf {name!r} is statically dead "
+            f"({leaf.table.full_bytes} wasted bytes, {frac:.1%} of the "
+            f"checkpoint; the paper's scrutiny headline is "
+            f"{PAPER_HEADLINE_SAVED:.0%}) — drop it or gate it with a "
+            "policy",
+            {"leaf": name, "wasted_bytes": leaf.table.full_bytes,
+             "fraction": frac}))
+
+    # CKPT003: randomness consumed but no key-like leaf saved.
+    prims = _jaxpr_primitives(ts.closed.jaxpr, set())
+    if prims & _RANDOM_PRIMS:
+        import jax
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            checkpoint_state if checkpoint_state is not None else state)
+        from repro.core.criticality import _path_str
+        has_key = any(_looks_like_key(_path_str(p), l) for p, l in flat)
+        if not has_key:
+            findings.append(Finding(
+                "CKPT003", "warning", path, 0,
+                "step fn consumes PRNG randomness "
+                f"({sorted(prims & _RANDOM_PRIMS)}) but no key-like leaf "
+                "is checkpointed — a restart replays a different random "
+                "stream",
+                {"random_primitives": sorted(prims & _RANDOM_PRIMS)}))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# AST pass
+# --------------------------------------------------------------------------
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+class _FileScan(ast.NodeVisitor):
+    def __init__(self):
+        self.donate_calls: List[ast.Call] = []
+        self.save_calls: List[ast.Call] = []
+        self.drain_calls: List[ast.Call] = []     # .wait() / .close()
+        self.with_manager = False
+        self.key_vars: Dict[str, int] = {}        # name -> lineno assigned
+        self.split_vars: Dict[str, int] = {}      # key vars split/folded
+
+    def visit_Call(self, node: ast.Call):
+        fname = ast.unparse(node.func) if hasattr(ast, "unparse") else ""
+        if (_kw(node, "donate_argnums") is not None
+                or _kw(node, "donate_argnames") is not None):
+            self.donate_calls.append(node)
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "save":
+                self.save_calls.append(node)
+            elif node.func.attr in ("wait", "close"):
+                self.drain_calls.append(node)
+        if fname.endswith(("random.PRNGKey", "random.key")):
+            parent = getattr(node, "_assign_target", None)
+            if parent:
+                self.key_vars[parent] = node.lineno
+        if fname.endswith(("random.split", "random.fold_in")) and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Name):
+                self.split_vars[arg.id] = node.lineno
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        if isinstance(node.value, ast.Call) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            node.value._assign_target = node.targets[0].id
+        self.generic_visit(node)
+
+    def visit_With(self, node: ast.With):
+        for item in node.items:
+            src = ast.unparse(item.context_expr) \
+                if hasattr(ast, "unparse") else ""
+            if "Manager" in src:
+                self.with_manager = True
+        self.generic_visit(node)
+
+
+def lint_file(path: str, source: Optional[str] = None) -> List[Finding]:
+    """AST rules over one Python source file (manager call sites)."""
+    if source is None:
+        with open(path, "r") as f:
+            source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("CKPT100", "error", path, e.lineno or 0,
+                        f"unparseable: {e.msg}", {})]
+    scan = _FileScan()
+    scan.visit(tree)
+    findings: List[Finding] = []
+
+    # CKPT101: donation + in-flight pipelined save in the same file.
+    if scan.donate_calls and scan.save_calls:
+        explicit_async = [c for c in scan.save_calls
+                          if isinstance(_kw(c, "block"), ast.Constant)
+                          and _kw(c, "block").value is False]
+        sev = "error" if explicit_async else "warning"
+        anchor = (explicit_async or scan.save_calls)[0]
+        findings.append(Finding(
+            "CKPT101", sev, path, anchor.lineno,
+            "donated buffers (donate_argnums/argnames at line "
+            f"{scan.donate_calls[0].lineno}) in a file with pipelined "
+            "saves — a donated buffer captured while a save is in flight "
+            "may be reclaimed mid-write; save before donating, or pass the "
+            "state through the snapshot first",
+            {"donate_lines": [c.lineno for c in scan.donate_calls],
+             "save_lines": [c.lineno for c in scan.save_calls]}))
+
+    # CKPT102: async saves never drained.
+    if scan.save_calls and not scan.drain_calls and not scan.with_manager:
+        findings.append(Finding(
+            "CKPT102", "warning", path, scan.save_calls[0].lineno,
+            "manager.save() is called but the file never drains the "
+            "pipeline (no wait()/close()/`with` manager) — writer errors "
+            "are lost and process exit can truncate the last checkpoint",
+            {"save_lines": [c.lineno for c in scan.save_calls]}))
+
+    # CKPT103: a live PRNG key stream that never reaches a save call.
+    if scan.save_calls:
+        save_srcs = " ".join(
+            ast.unparse(c) if hasattr(ast, "unparse") else ""
+            for c in scan.save_calls)
+        for var, line in sorted(scan.key_vars.items()):
+            if var in scan.split_vars and var not in save_srcs:
+                findings.append(Finding(
+                    "CKPT103", "warning", path, line,
+                    f"PRNG key {var!r} is split/folded (line "
+                    f"{scan.split_vars[var]}) but never appears in a "
+                    "save() call — the random stream is not restart-safe",
+                    {"key_var": var, "split_line": scan.split_vars[var]}))
+    return findings
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every ``.py`` file under the given files/directories."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                files += [os.path.join(root, n) for n in sorted(names)
+                          if n.endswith(".py")]
+        elif p.endswith(".py"):
+            files.append(p)
+        else:
+            raise FileNotFoundError(f"lint: not a .py file or directory: {p}")
+    findings: List[Finding] = []
+    for f in files:
+        findings += lint_file(f)
+    return findings
+
+
+def findings_json(findings: Sequence[Finding]) -> Dict[str, Any]:
+    counts = {s: sum(1 for f in findings if f.severity == s)
+              for s in SEVERITIES}
+    return {"version": 1, "counts": counts,
+            "findings": [f.to_json() for f in findings]}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Checkpoint-safety linter (AST pass over manager call "
+                    "sites; see repro.analysis.lint_step for jaxpr rules).")
+    ap.add_argument("paths", nargs="+", help=".py files or directories")
+    ap.add_argument("--json", default=None, help="write findings JSON here")
+    ap.add_argument("--fail-on", default="error", choices=SEVERITIES,
+                    help="exit non-zero when findings at/above this "
+                         "severity exist (default: error)")
+    args = ap.parse_args(argv)
+
+    findings = lint_paths(args.paths)
+    for f in findings:
+        print(f)
+    payload = findings_json(findings)
+    print(f"lint: {payload['counts']} over {len(args.paths)} path(s)")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"lint: findings written to {args.json}")
+    threshold = SEVERITIES.index(args.fail_on)
+    failing = [f for f in findings
+               if SEVERITIES.index(f.severity) <= threshold]
+    return 1 if failing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,154 @@
+"""Soundness cross-check: the static analyzer must cover the AD engine.
+
+In exact arithmetic, a gradient can only be non-zero through elements the
+program *reads*, so for every leaf the AD engine actually swept::
+
+    AD-critical  ⊆  static-critical
+
+i.e. no element the static pass calls uncritical may carry a non-zero
+probe gradient.  ``verify_soundness`` asserts exactly that, element-wise,
+between an AD report (``scrutinize``) and a :class:`StaticReport` — and on
+violation attributes the leaf to the jaxpr equations that read it, with
+the responsible taint-rule class and source location (the report's
+provenance).  This is what turns the taint rules from heuristics into
+checked invariants, and what makes static probe-sweep pruning
+(``ScrutinyConfig.static_prune``) a *verified* optimization rather than a
+bet.
+
+Only leaves the AD engine analyzed with AD/HORIZON policy are compared:
+ALWAYS_CRITICAL leaves carry a policy verdict (all ones), not a gradient
+fact, and the static pass legitimately proves some of them uncritical
+(int dataflow — e.g. NPB IS ``bucket_ptrs``).
+
+``soundness_checker(fn)`` packages the check as a manager hook:
+``CheckpointManager(..., soundness_check=soundness_checker(step_fn))``
+re-verifies every fresh scrutiny against a fresh static analysis (the
+trace is shared through the cache, so the marginal cost is one taint
+walk).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.analysis.static import ReaderRecord, StaticReport, analyze_static
+from repro.core.criticality import CriticalityReport
+from repro.core.policy import LeafPolicy, ScrutinyConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One leaf where an AD-critical element is statically uncritical."""
+
+    leaf: str
+    count: int                      # violating elements
+    total: int
+    example_indices: List[int]      # first few flat indices
+    readers: List[ReaderRecord]     # provenance: eqns reading this leaf
+
+    def __str__(self) -> str:
+        where = ", ".join(str(r) for r in self.readers[:4]) or \
+            "no direct top-level readers"
+        return (f"{self.leaf}: {self.count}/{self.total} AD-critical "
+                f"elements statically uncritical "
+                f"(e.g. flat idx {self.example_indices}); "
+                f"responsible rules: {where}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SoundnessResult:
+    checked_leaves: int
+    checked_elements: int
+    skipped_leaves: int             # non-AD-policy leaves (policy verdicts)
+    violations: List[Violation]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+class SoundnessError(AssertionError):
+    """Static analysis declared an AD-critical element uncritical."""
+
+    def __init__(self, result: SoundnessResult):
+        self.result = result
+        lines = [
+            "static/AD soundness violation "
+            f"({len(result.violations)} leaf/leaves; a taint rule "
+            "under-approximated a read):"
+        ]
+        lines += [f"  - {v}" for v in result.violations]
+        super().__init__("\n".join(lines))
+
+
+def verify_soundness(
+    ad_report: CriticalityReport,
+    static_report: StaticReport,
+    *,
+    raise_on_violation: bool = True,
+    max_examples: int = 8,
+) -> SoundnessResult:
+    """Assert AD-critical ⊆ static-critical element-wise.
+
+    ``ad_report``: a ``scrutinize`` result (host or device engine — device
+    masks materialize lazily).  ``static_report``: ``analyze_static`` on
+    the same fn/state.  Raises :class:`SoundnessError` (with per-leaf
+    provenance) unless ``raise_on_violation=False``.
+    """
+    violations: List[Violation] = []
+    checked_leaves = checked_elements = skipped = 0
+    for name, leaf in ad_report.leaves.items():
+        if leaf.policy not in (LeafPolicy.AD, LeafPolicy.HORIZON):
+            skipped += 1
+            continue
+        if name not in static_report.leaves:
+            raise ValueError(
+                f"soundness check: leaf {name!r} missing from the static "
+                "report — the two reports were built on different states")
+        ad_mask = np.asarray(leaf.mask, bool)
+        st_mask = np.asarray(static_report[name].mask, bool)
+        if ad_mask.shape != st_mask.shape:
+            raise ValueError(
+                f"soundness check: leaf {name!r} mask shapes differ "
+                f"({ad_mask.shape} vs {st_mask.shape})")
+        checked_leaves += 1
+        checked_elements += ad_mask.size
+        bad = ad_mask & ~st_mask
+        if bad.any():
+            idx = np.flatnonzero(bad)
+            prov = getattr(static_report, "provenance", {}) or {}
+            violations.append(Violation(
+                leaf=name, count=int(bad.sum()), total=int(bad.size),
+                example_indices=[int(i) for i in idx[:max_examples]],
+                readers=list(prov.get(name, ()))))
+    result = SoundnessResult(checked_leaves, checked_elements, skipped,
+                             violations)
+    if raise_on_violation and violations:
+        raise SoundnessError(result)
+    return result
+
+
+def soundness_checker(
+    fn: Callable[[Any], Any],
+    *,
+    config: ScrutinyConfig = ScrutinyConfig(),
+    int_dataflow: bool = True,
+) -> Callable[[Any, CriticalityReport], SoundnessResult]:
+    """Manager hook verifying every fresh scrutiny report against a fresh
+    static analysis of the same ``fn``.
+
+    The returned callable matches the managers' ``soundness_check``
+    signature: ``check(state, report)``; it raises
+    :class:`SoundnessError` on violation and returns the
+    :class:`SoundnessResult` otherwise.
+    """
+
+    def check(state: Any, report: CriticalityReport) -> SoundnessResult:
+        static = analyze_static(fn, state, config=config,
+                                int_dataflow=int_dataflow)
+        return verify_soundness(report, static)
+
+    return check

@@ -1,0 +1,159 @@
+"""Static criticality analysis — the AD pipeline's free second opinion.
+
+``analyze_static(fn, state)`` answers the paper's question — *which elements
+of the checkpointed state does the rest of the program need?* — without
+running a single backward pass: it abstractly interprets the traced jaxpr of
+``fn`` with the participation taint rules (``repro.core.taint``), which
+cover ``scan``/``while``/``cond`` loop-carried state (OR-fixpoints),
+``pjit``/``remat``/``custom_vjp`` bodies (recursed with a shared env), exact
+write-before-read clearing through ``scatter``/``dynamic_update_slice``, and
+— unlike the AD engine — **integer/bool dataflow**: an int leaf such as NPB
+IS's ``bucket_ptrs`` gets a real element mask (it is rebuilt before every
+read, hence statically uncritical) instead of the AD path's
+ALWAYS_CRITICAL policy verdict.
+
+The result is a :class:`StaticReport` with the same per-leaf bit-mask /
+RegionTable interface as the AD engine's reports, so both checkpoint
+managers consume it directly.  Relationship to the other engines::
+
+    grad-critical  ⊆  static-critical        (checked: repro.analysis.
+                                              soundness.verify_soundness)
+    static == participation on inexact leaves; static additionally masks
+    integer leaves by dataflow (int_dataflow=True).
+
+Because the subset relation is *verified* on every opt-in scrutinize call,
+the static report is a sound pruner: leaves whose static mask is all-False
+can skip the vjp sweep entirely (``ScrutinyConfig.static_prune``).
+
+Provenance: for every state leaf the report records the jaxpr equations
+that read it directly, classified by the taint rule that handled them
+(``repro.core.taint.classify_rule``) with source locations — the soundness
+verifier attributes violations to these records.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.criticality import (CriticalityReport, LeafReport,
+                                    TracedStep, traced_step)
+from repro.core.policy import LeafPolicy, ScrutinyConfig
+from repro.core.regions import RegionTable
+from repro.core.taint import backward_taint, classify_rule
+
+
+@dataclasses.dataclass(frozen=True)
+class ReaderRecord:
+    """One jaxpr equation that reads a state leaf directly."""
+
+    eqn_index: int     # position in the top-level jaxpr
+    primitive: str     # e.g. "dot_general", "scatter", "pjit"
+    rule: str          # taint rule class (repro.core.taint.classify_rule)
+    source: str        # user source location, best-effort ("" if unknown)
+
+    def __str__(self) -> str:
+        loc = f" @ {self.source}" if self.source else ""
+        return f"eqn[{self.eqn_index}] {self.primitive} ({self.rule}){loc}"
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticReport(CriticalityReport):
+    """Static-analysis result; full :class:`CriticalityReport` API.
+
+    ``provenance`` maps each leaf name to the equations reading it
+    directly — the jaxpr-level evidence behind its mask.  A leaf with an
+    empty record list is never read at the top level (it may still be
+    fully uncritical *with* readers, when every reader is behind a
+    write-before-read).
+    """
+
+    provenance: Dict[str, List[ReaderRecord]] = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
+
+
+def _source_of(eqn) -> str:
+    try:  # jax internal; purely cosmetic, so any failure degrades to ""
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return ""
+
+
+def _direct_readers(jaxpr) -> Dict[Any, List[ReaderRecord]]:
+    """invar → equations reading it at the top level of ``jaxpr``."""
+    from jax.extend import core as jex_core
+
+    readers: Dict[Any, List[ReaderRecord]] = {v: [] for v in jaxpr.invars}
+    for idx, eqn in enumerate(jaxpr.eqns):
+        rec = None
+        for v in eqn.invars:
+            if not isinstance(v, jex_core.Literal) and v in readers:
+                if rec is None:
+                    rec = ReaderRecord(idx, eqn.primitive.name,
+                                       classify_rule(eqn.primitive.name),
+                                       _source_of(eqn))
+                readers[v].append(rec)
+    return readers
+
+
+def analyze_static(
+    fn: Callable[[Any], Any],
+    state: Any,
+    *,
+    config: ScrutinyConfig = ScrutinyConfig(),
+    int_dataflow: bool = True,
+    traced: Optional[TracedStep] = None,
+) -> StaticReport:
+    """Static element criticality of ``fn`` at ``state`` (no AD).
+
+    Same contract as :func:`repro.core.scrutinize` / ``participation``: the
+    mask marks an element critical iff the remaining computation
+    transitively reads it before overwriting it.
+
+    ``int_dataflow``: give integer/bool leaves their dataflow mask instead
+    of the ALWAYS_CRITICAL policy verdict (the analysis itself is
+    dtype-agnostic; this is what the AD engine cannot do).  AD/HORIZON
+    leaves always get dataflow masks; ALWAYS_UNCRITICAL is honoured.
+
+    ``traced``: an already-traced :class:`TracedStep` to reuse (the sweep
+    engine passes its own so one scrutinize call traces once); omitted,
+    the shared trace cache is consulted.
+    """
+    ts = traced if traced is not None else traced_step(fn, state)
+    policies = [config.leaf_policy(l) for l in ts.leaves]
+    in_taints = backward_taint(ts.closed, ts.leaves)
+    readers = _direct_readers(ts.closed.jaxpr)
+
+    reports: Dict[str, LeafReport] = {}
+    provenance: Dict[str, List[ReaderRecord]] = {}
+    dataflow_leaves = 0
+    for i, (name, leaf, pol) in enumerate(zip(ts.names, ts.leaves,
+                                              policies)):
+        n = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        if pol == LeafPolicy.ALWAYS_UNCRITICAL:
+            mask = np.zeros(n, dtype=bool)
+        elif pol == LeafPolicy.ALWAYS_CRITICAL and not int_dataflow:
+            mask = np.ones(n, dtype=bool)
+        else:
+            mask = np.asarray(in_taints[i], bool).reshape(-1).copy()
+            dataflow_leaves += 1
+        if mask.size != n:  # 0-d leaves
+            mask = np.resize(mask, n)
+        table = RegionTable.from_mask(
+            mask, itemsize=np.dtype(leaf.dtype).itemsize)
+        table.validate()
+        reports[name] = LeafReport(
+            name=name, shape=tuple(leaf.shape), dtype=np.dtype(leaf.dtype),
+            policy=pol, mask=mask, table=table, magnitude=None)
+        provenance[name] = readers.get(ts.closed.jaxpr.invars[i], [])
+
+    stats = {
+        "engine": "static", "int_dataflow": bool(int_dataflow),
+        "dataflow_leaves": dataflow_leaves,
+        "trace_s": ts.trace_s, "trace_cached": ts.cached,
+        "eqns": len(ts.closed.jaxpr.eqns),
+    }
+    return StaticReport(leaves=reports, stats=stats, provenance=provenance)

@@ -271,6 +271,7 @@ class CoordinatedCheckpointManager:
                  l2_root: Optional[str] = None,
                  l1_keep_n: int = 1,
                  fault_injector: Any = None,
+                 soundness_check: Any = None,
                  **manager_kwargs):
         if save_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown save_mode {save_mode!r}")
@@ -281,6 +282,10 @@ class CoordinatedCheckpointManager:
         self.levels = list(levels)
         self.scrutiny_fn = scrutiny_fn
         self.rescrutinize_every = rescrutinize_every
+        # Shared with the single-process manager: cross-check every fresh
+        # report before it reduces a checkpoint (every host runs the same
+        # deterministic check, so decisions stay aligned).
+        self.soundness_check = soundness_check
         self.save_mode = save_mode
         self.restore_mode = restore_mode
         self.shardings = shardings
@@ -297,7 +302,8 @@ class CoordinatedCheckpointManager:
                 restore_mode=restore_mode,
                 delta_chunk_bytes=delta_chunk_bytes,
                 pack_use_kernel=pack_use_kernel,
-                pack_interpret=pack_interpret, **manager_kwargs)
+                pack_interpret=pack_interpret,
+                soundness_check=soundness_check, **manager_kwargs)
         else:
             if manager_kwargs:
                 # only meaningful on the single-process delegate path;
@@ -351,7 +357,7 @@ class CoordinatedCheckpointManager:
         leader additionally validates at fuse time)."""
         new, ran = update_report(self.scrutiny_fn, self._report,
                                  self._saves, self.rescrutinize_every,
-                                 state)
+                                 state, check=self.soundness_check)
         if ran:
             self.last_scrutiny_stats = getattr(new, "stats", None)
         self._report = new

@@ -160,7 +160,8 @@ def _entry_nbytes(e) -> int:
     return int(e.nbytes)
 
 
-def update_report(scrutiny_fn, prev, saves: int, every: int, state):
+def update_report(scrutiny_fn, prev, saves: int, every: int, state,
+                  check=None):
     """Shared scrutiny schedule (single-process manager and the multi-host
     coordinator): run ``scrutiny_fn`` when there is no report yet or the
     re-scrutinize interval fires; device reports re-scrutinize
@@ -168,13 +169,21 @@ def update_report(scrutiny_fn, prev, saves: int, every: int, state):
     re-scrutiny returns the *identical* report object, which is what keeps
     differential chains keyed on report identity alive).  Returns
     ``(report, ran)`` — ``ran`` tells the caller fresh scrutiny stats are
-    available on the report."""
+    available on the report.
+
+    ``check``: optional ``check(state, report)`` hook run on every *fresh*
+    report, before it is adopted — e.g.
+    ``repro.analysis.soundness_checker(fn)``, which verifies the AD masks
+    against an independent static analysis and raises on violation, so an
+    unsound report never reduces a checkpoint."""
     if scrutiny_fn is None:
         return None, False
     need = prev is None or (every and saves % every == 0)
     if not need:
         return prev, False
     new = scrutiny_fn(state)
+    if check is not None:
+        check(state, new)
     if (new is not prev and isinstance(new, DeviceReport)
             and isinstance(prev, DeviceReport)):
         new = new.reuse_unchanged(prev)
@@ -537,7 +546,8 @@ class CheckpointManager:
                  io_threads: Optional[int] = None,
                  pipeline_engine: str = "auto",
                  io_chunk_bytes: Optional[int] = None,
-                 writer_ttl_s: float = 600.0):
+                 writer_ttl_s: float = 600.0,
+                 soundness_check: Optional[Callable[[Any, Any], Any]] = None):
         if save_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown save_mode {save_mode!r}")
         if restore_mode not in ("auto", "host", "device"):
@@ -550,6 +560,10 @@ class CheckpointManager:
         self.scrutiny_fn = scrutiny_fn
         self.precision = precision
         self.rescrutinize_every = rescrutinize_every
+        # Opt-in static soundness gate (repro.analysis.soundness_checker):
+        # every fresh scrutiny report is cross-checked before it reduces a
+        # checkpoint; a violation raises out of save().
+        self.soundness_check = soundness_check
         self.save_mode = save_mode
         self.restore_mode = restore_mode
         self.delta_chunk_bytes = delta_chunk_bytes
@@ -636,7 +650,7 @@ class CheckpointManager:
         identity) alive across ``rescrutinize_every=1``."""
         new, ran = update_report(self.scrutiny_fn, self._report,
                                  self._saves, self.rescrutinize_every,
-                                 state)
+                                 state, check=self.soundness_check)
         if ran:
             self.last_scrutiny_stats = getattr(new, "stats", None)
         self._report = new

@@ -50,6 +50,70 @@ from repro.core.regions import RegionTable
 from repro.kernels.mask_pack import ops as mask_ops
 
 
+# --------------------------------------------------------------------------
+# Shared trace cache
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TracedStep:
+    """One traced (fn, state-structure) pair, shared by every consumer.
+
+    ``closed`` is the flat ClosedJaxpr of ``fn`` — invars correspond 1:1
+    with the flattened state leaves, outvars with the flattened output
+    leaves.  The jaxpr-reads prepass, the static criticality analyzer
+    (``repro.analysis``), and the sweep-engine construction all consume the
+    *same* trace, so a scrutinize call that runs more than one of them pays
+    for tracing once (``trace_s``; ``cached`` marks a cache hit, which
+    costs only the flatten).
+    """
+
+    closed: Any                       # jex_core.ClosedJaxpr
+    names: List[str]
+    treedef: Any
+    leaves: List[jnp.ndarray]
+    trace_s: float
+    cached: bool
+
+
+_TRACE_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
+_TRACE_CACHE_MAX = 8
+
+
+def traced_step(fn: Callable[[Any], Any], state: Any) -> TracedStep:
+    """Trace ``fn`` as a flat leaves→leaves function, cached per
+    (fn, treedef, leaf shapes/dtypes).  The jaxpr depends only on the
+    structure, never on leaf *values*, so a cache hit is always valid for
+    fresh state of the same structure."""
+    import time as _time
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
+    names = [_path_str(p) for p, _ in leaves_with_path]
+    leaves = [jnp.asarray(l) for _, l in leaves_with_path]
+    try:
+        sig = (fn, treedef,
+               tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        hash(sig)
+    except TypeError:
+        sig = None
+    if sig is not None and sig in _TRACE_CACHE:
+        _TRACE_CACHE.move_to_end(sig)
+        return TracedStep(_TRACE_CACHE[sig], names, treedef, leaves,
+                          trace_s=0.0, cached=True)
+
+    def flat_fn(*ls):
+        out = fn(jax.tree_util.tree_unflatten(treedef, list(ls)))
+        return tuple(jax.tree_util.tree_leaves(out))
+
+    t0 = _time.perf_counter()
+    closed = jax.make_jaxpr(flat_fn)(*leaves)
+    trace_s = _time.perf_counter() - t0
+    if sig is not None:
+        _TRACE_CACHE[sig] = closed
+        while len(_TRACE_CACHE) > _TRACE_CACHE_MAX:
+            _TRACE_CACHE.popitem(last=False)
+    return TracedStep(closed, names, treedef, leaves, trace_s, cached=False)
+
+
 def _path_str(path) -> str:
     parts = []
     for p in path:
@@ -444,12 +508,41 @@ class _SweepEngine:
         ad = [i for i, p in enumerate(policies)
               if p in (LeafPolicy.AD, LeafPolicy.HORIZON)]
         self.dead: frozenset = frozenset()
-        if ad and config.jaxpr_prepass:
+        self.prepass_trace_s = 0.0
+        self.prepass_trace_cached = False
+        self.static_prune_s = 0.0
+        self.static_pruned_elements = 0
+        if ad and (config.jaxpr_prepass or config.static_prune):
+            import time as _time
+
             state = jax.tree_util.tree_unflatten(treedef,
                                                  list(example_leaves))
-            used = scrutinize_jaxpr_reads(fn, state)
-            self.dead = frozenset(i for i in ad
-                                  if not used[self.names[i]])
+            ts = traced_step(fn, state)
+            self.prepass_trace_s = ts.trace_s
+            self.prepass_trace_cached = ts.cached
+            if config.static_prune:
+                # full static analyzer: element-wise masks prove more
+                # leaves dead than reads-liveness (write-before-read
+                # state is live to the reads walk but has an all-False
+                # static mask).  Soundness (AD-critical ⊆ static-
+                # critical) is the checked invariant that makes the
+                # skip legal — repro.analysis.verify_soundness.
+                from repro.analysis.static import analyze_static
+
+                t0 = _time.perf_counter()
+                static = analyze_static(fn, state, config=config,
+                                        traced=ts)
+                self.static_prune_s = _time.perf_counter() - t0
+                self.dead = frozenset(
+                    i for i in ad
+                    if not static[self.names[i]].mask.any())
+                self.static_pruned_elements = sum(
+                    int(np.prod(example_leaves[i].shape)) or 1
+                    for i in self.dead)
+            else:
+                used = scrutinize_jaxpr_reads(fn, state, closed=ts.closed)
+                self.dead = frozenset(i for i in ad
+                                      if not used[self.names[i]])
         self.ad_idx: Tuple[int, ...] = tuple(i for i in ad
                                              if i not in self.dead)
         self.sizes = tuple(int(np.prod(example_leaves[i].shape)) or 1
@@ -528,7 +621,8 @@ def _engine_for(fn, treedef, names, leaves, policies,
         sig = (fn, treedef,
                tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
                tuple(policies), max(1, config.probes),
-               float(config.input_jitter), bool(config.jaxpr_prepass))
+               float(config.input_jitter), bool(config.jaxpr_prepass),
+               bool(config.static_prune))
         hash(sig)
     except TypeError:
         sig = None
@@ -602,7 +696,12 @@ def _scrutinize_device(eng: _SweepEngine, names, leaves, policies,
                        mask_shardings) -> DeviceReport:
     stats: Dict[str, Any] = {
         "engine": "device", "probes": eng.probes, "d2h_bytes": 0,
-        "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead)}
+        "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead),
+        "sweep_elements": sum(eng.sizes),
+        "prepass_trace_s": eng.prepass_trace_s,
+        "prepass_trace_cached": eng.prepass_trace_cached,
+        "static_prune_s": eng.static_prune_s,
+        "static_pruned_elements": eng.static_pruned_elements}
     mags = eng.run(leaves, key)
 
     words: Dict[int, jnp.ndarray] = {}
@@ -646,7 +745,12 @@ def _scrutinize_host(eng: _SweepEngine, names, leaves, policies,
     """
     stats: Dict[str, Any] = {
         "engine": "host", "probes": eng.probes, "d2h_bytes": 0,
-        "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead)}
+        "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead),
+        "sweep_elements": sum(eng.sizes),
+        "prepass_trace_s": eng.prepass_trace_s,
+        "prepass_trace_cached": eng.prepass_trace_cached,
+        "static_prune_s": eng.static_prune_s,
+        "static_pruned_elements": eng.static_pruned_elements}
 
     magnitudes: Dict[int, np.ndarray] = {}
     if eng.ad_idx:
@@ -697,7 +801,8 @@ def _scrutinize_host(eng: _SweepEngine, names, leaves, policies,
     return CriticalityReport(leaves=reports, stats=stats)
 
 
-def scrutinize_jaxpr_reads(fn: Callable[[Any], Any], state: Any) -> Dict[str, bool]:
+def scrutinize_jaxpr_reads(fn: Callable[[Any], Any], state: Any, *,
+                           closed: Any = None) -> Dict[str, bool]:
     """Cheap structural pre-pass: which *whole leaves* reach any output.
 
     Complements the element-level AD sweep — a leaf that is dead in the jaxpr
@@ -705,10 +810,17 @@ def scrutinize_jaxpr_reads(fn: Callable[[Any], Any], state: Any) -> Dict[str, bo
     automatically (``ScrutinyConfig.jaxpr_prepass``) and skips the vjp sweep
     for dead leaves.  Element-granular analysis still requires AD (this is
     the paper's key point).
+
+    ``closed``: an already-traced flat ClosedJaxpr of ``fn`` (from
+    :func:`traced_step`) to reuse; omitted, the shared trace cache is
+    consulted, so repeated calls for one structure trace once.
     """
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
-    names = [_path_str(p) for p, _ in leaves_with_path]
-    closed = jax.make_jaxpr(lambda s: fn(s))(state)
+    if closed is None:
+        ts = traced_step(fn, state)
+        names, closed = ts.names, ts.closed
+    else:
+        leaves_with_path, _ = jax.tree_util.tree_flatten_with_path(state)
+        names = [_path_str(p) for p, _ in leaves_with_path]
 
     used: Dict[str, bool] = {}
     # jaxpr invars correspond 1:1 with flattened state leaves.

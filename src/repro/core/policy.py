@@ -113,6 +113,14 @@ class ScrutinyConfig:
     ``jaxpr_prepass``: run ``scrutinize_jaxpr_reads`` first and skip the
     vjp sweep for leaves that are dead in the jaxpr (all-zero mask without
     a backward pass).
+    ``static_prune``: run the full static criticality analyzer
+    (``repro.analysis.analyze_static``) as the pre-pass instead of the
+    reads-liveness walk.  Leaves the static pass proves element-wise
+    uncritical (e.g. written-before-read state the reads walk still counts
+    as live) skip the vjp sweep entirely; soundness of the skip is the
+    checked invariant AD-critical ⊆ static-critical
+    (``repro.analysis.verify_soundness``).  Stats gain
+    ``static_prune_s`` / ``static_pruned_elements``.
     """
 
     probes: int = 3
@@ -122,3 +130,4 @@ class ScrutinyConfig:
     precision: PrecisionPolicy = DEFAULT_PRECISION
     engine: str = "auto"               # auto | device | host
     jaxpr_prepass: bool = True
+    static_prune: bool = False

@@ -56,7 +56,8 @@ from jax import lax
 from jax.extend import core as jex_core
 
 from repro.core.bitset import BitMask
-from repro.core.criticality import CriticalityReport, LeafReport, _path_str
+from repro.core.criticality import (CriticalityReport, LeafReport, _path_str,
+                                    traced_step)
 from repro.core.policy import LeafPolicy, ScrutinyConfig
 from repro.core.regions import RegionTable
 
@@ -685,6 +686,53 @@ def _backward(jaxpr: jex_core.Jaxpr, consts, out_taints: List[np.ndarray],
 # Public API
 # --------------------------------------------------------------------------
 
+def classify_rule(primitive_name: str) -> str:
+    """Which taint rule class handles ``primitive_name``.
+
+    Mirrors the :func:`_apply_rule` dispatch so provenance reports
+    (``repro.analysis``) can attribute a mask decision to the responsible
+    rule without re-running the walk.
+    """
+    name = primitive_name
+    if name in _ELEMENTWISE:
+        return "elementwise"
+    if name in _VJP_STRUCTURAL or name == "cumsum":
+        return "vjp_structural"
+    if name in _REDUCE_AXES:
+        return "reduce_axes"
+    if name in _CUM_SUFFIX:
+        return "cum_suffix"
+    if name in ("dot_general", "fft", "sort", "top_k"):
+        return name
+    if name == "gather" or name == "dynamic_slice":
+        return "indexed_read"
+    if name.startswith("scatter") or name == "dynamic_update_slice":
+        return "indexed_write"
+    if name in ("scan", "while", "cond"):
+        return "control_flow"
+    if name in _RECURSE_CALLS:
+        return "call"
+    return "fallback"
+
+
+def backward_taint(closed: jex_core.ClosedJaxpr,
+                   leaves: Sequence[Any]) -> List[np.ndarray]:
+    """Run the participation walk over an already-traced flat jaxpr.
+
+    ``closed`` must be a flat leaves→leaves trace (e.g.
+    ``repro.core.criticality.traced_step(fn, state).closed``); ``leaves``
+    are the concrete invar values, used to resolve gather/scatter/
+    dynamic-slice indices exactly.  Returns one shaped bool taint array per
+    invar — True == read (transitively, before overwrite) by some output.
+    Shared entry point for :func:`participation` and the static analyzer
+    (``repro.analysis.analyze_static``).
+    """
+    env: Dict[Any, Any] = {}
+    _forward_env(closed.jaxpr, closed.consts, list(leaves), env)
+    out_taints = [np.ones(_shape(v), bool) for v in closed.jaxpr.outvars]
+    return _backward(closed.jaxpr, closed.consts, out_taints, env)
+
+
 def participation(
     fn: Callable[[Any], Any],
     state: Any,
@@ -698,21 +746,10 @@ def participation(
     reads it before overwriting it.  See module docstring for how this
     relates to the AD (vjp) engine.
     """
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state)
-    names = [_path_str(p) for p, _ in leaves_with_path]
-    leaves = [jnp.asarray(l) for _, l in leaves_with_path]
+    ts = traced_step(fn, state)
+    names, leaves = ts.names, ts.leaves
     policies = [config.leaf_policy(l) for l in leaves]
-
-    def flat_fn(*ls):
-        out = fn(jax.tree_util.tree_unflatten(treedef, list(ls)))
-        return tuple(jax.tree_util.tree_leaves(out))
-
-    closed = jax.make_jaxpr(flat_fn)(*leaves)
-    env: Dict[Any, Any] = {}
-    _forward_env(closed.jaxpr, closed.consts, leaves, env)
-
-    out_taints = [np.ones(_shape(v), bool) for v in closed.jaxpr.outvars]
-    in_taints = _backward(closed.jaxpr, closed.consts, out_taints, env)
+    in_taints = backward_taint(ts.closed, leaves)
 
     reports: Dict[str, LeafReport] = {}
     for i, (name, leaf, pol) in enumerate(zip(names, leaves, policies)):

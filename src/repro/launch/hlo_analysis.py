@@ -29,9 +29,16 @@ _DTYPE_BYTES = {
     "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16, "token": 0, "u1": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e4m3": 1, "f4e2m1fn": 1, "e8m0fnu": 1,
 }
 
-_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128|u1)\[([\d,]*)\]")
+# Longest alternatives first: "f8e4m3fn" must win over the bare "[suf]\d+"
+# prefix "f8" (which would then fail on the following "e…" and drop the
+# shape entirely).
+_DTYPE_ALT = (r"pred|bf16|f8e4m3b11fnuz|f8e4m3fnuz|f8e4m3fn|f8e5m2fnuz|"
+              r"f8e5m2|f8e3m4|f8e4m3|f4e2m1fn|e8m0fnu|c64|c128|u1|[suf]\d+")
+_SHAPE_RE = re.compile(r"(%s)\[([\d,]*)\]" % _DTYPE_ALT)
 
 
 def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
@@ -40,6 +47,28 @@ def _first_shape(text: str) -> Optional[Tuple[str, List[int]]]:
         return None
     dims = [int(d) for d in m.group(2).split(",") if d]
     return m.group(1), dims
+
+
+def _result_section(rhs: str) -> str:
+    """The result-type span of an assignment's rhs.
+
+    Tuple-result ops — ``(f32[8,16]{1,0}, s32[]) fusion(...)`` — break the
+    naive ``rhs.split("(")[0]`` (empty string → 0 bytes, silently): the
+    result type itself starts with a paren.  Balanced-paren scan returns
+    the whole tuple type; scalar results keep the text before the op's
+    open paren."""
+    s = rhs.lstrip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[:i + 1]
+        return s
+    return s.split("(", 1)[0]
 
 
 def _shape_elems(dims: List[int]) -> int:
@@ -114,14 +143,16 @@ def _build_symtab(lines: List[str]) -> Dict[str, Tuple[str, List[int]]]:
         m = _DEF_RE.match(s)
         if not m:
             # computation headers carry 'name: f32[a,b]' params
-            for pm in re.finditer(r"%?([\w.\-]+):\s*"
-                                  r"(pred|[suf]\d+|bf16|c64|c128)"
-                                  r"\[([\d,]*)\]", s):
+            for pm in re.finditer(r"%?([\w.\-]+):\s*(" + _DTYPE_ALT +
+                                  r")\[([\d,]*)\]", s):
                 tab[pm.group(1)] = (pm.group(2),
                                     [int(d) for d in pm.group(3).split(",")
                                      if d])
             continue
-        sh = _first_shape(s.split("=", 1)[1])
+        res = _result_section(s.split("=", 1)[1])
+        if res.startswith("("):
+            continue  # tuple result: the var is not a single shaped array
+        sh = _first_shape(res)
         if sh:
             tab[m.group(1)] = sh
     return tab
@@ -131,7 +162,8 @@ def _line_flops(s: str, symtab: Dict[str, List[int]]) -> float:
     """FLOPs of one HLO line (dots dominate; elementwise ignored)."""
     if " dot(" not in s:
         return 0.0
-    res = _first_shape(s.split("=", 1)[1]) if "=" in s else None
+    res = _first_shape(_result_section(s.split("=", 1)[1])) \
+        if "=" in s else None
     if res is None:
         return 0.0
     _, out_dims = res
@@ -296,7 +328,7 @@ def analyze(hlo: str) -> Dict[str, object]:
             # --- HBM traffic ≈ per top-level kernel ------------------------
             if opcode in _BOOKKEEPING or not opcode:
                 continue
-            res_b = _all_shapes_bytes(rhs.split("(")[0])
+            res_b = _all_shapes_bytes(_result_section(rhs))
             if opcode in _SLICE_LIKE:
                 st.hbm_bytes += 2.0 * res_b
                 continue

@@ -61,6 +61,11 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--scrutinize", action="store_true",
                     help="reduce checkpoints with participation analysis")
+    ap.add_argument("--verify-static", action="store_true",
+                    help="scrutinize with the AD probe engine, prune the "
+                         "sweep with the static analyzer, and gate every "
+                         "report on the AD⊆static soundness check "
+                         "(repro.analysis)")
     ap.add_argument("--coordinated", action="store_true",
                     help="force the multi-host coordinated save path even "
                          "on one process (it is automatic when "
@@ -89,17 +94,32 @@ def main(argv=None):
           f"batch={args.batch} seq={args.seq}")
 
     scrutiny_fn = None
-    if args.scrutinize:
+    soundness_check = None
+    if args.scrutinize or args.verify_static:
         # "the rest of the program" for a train checkpoint: the next train
-        # step from the data pipeline's next batch.
-        def scrutiny_fn(host_state):
-            def resume(s):
-                batch, _ = data_pipeline.next_batch(cfg, s["data"])
-                _, _, metrics = step_fn(s["params"], s["opt"], batch)
-                return {"loss": metrics["loss"]}
+        # step from the data pipeline's next batch.  One stable fn object,
+        # so the shared jaxpr trace cache hits across scrutiny/static/lint.
+        def resume(s):
+            batch, _ = data_pipeline.next_batch(cfg, s["data"])
+            _, _, metrics = step_fn(s["params"], s["opt"], batch)
+            return {"loss": metrics["loss"]}
 
-            return participation(resume, host_state,
-                                 config=ScrutinyConfig())
+        if args.verify_static:
+            from repro.analysis import soundness_checker
+            from repro.core import scrutinize
+
+            scfg = ScrutinyConfig(static_prune=True)
+
+            def scrutiny_fn(host_state):
+                return scrutinize(resume, host_state, config=scfg)
+
+            soundness_check = soundness_checker(resume)
+            print("static verification: soundness gate + probe-sweep "
+                  "pruning enabled")
+        else:
+            def scrutiny_fn(host_state):
+                return participation(resume, host_state,
+                                     config=ScrutinyConfig())
 
     # Coordinated when the job spans processes (real multi-controller or
     # the REPRO_PROCESS_* simulation); single-process jobs delegate to the
@@ -116,6 +136,7 @@ def main(argv=None):
                interval=args.ckpt_every * 4, keep_n=2, shards=2,
                parity=parity)],
         collective=collective, scrutiny_fn=scrutiny_fn,
+        soundness_check=soundness_check,
         force_coordinated=args.coordinated)
     if coordinated:
         print(f"coordinated checkpointing: process {ctx.index} of "

@@ -1,0 +1,309 @@
+"""Units for repro.analysis: static analyzer, soundness gate, linter.
+
+Fast toy-fn coverage of the three passes (the NPB/train coverage lives in
+tests/test_static_soundness.py), the lint rule catalogue on synthetic
+sources, the CLI, and a mirror of the CI ``static-analysis`` gate (zero
+error findings over examples/ and the train driver).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    SoundnessError,
+    analyze_static,
+    findings_json,
+    lint_file,
+    lint_paths,
+    lint_step,
+    soundness_checker,
+    verify_soundness,
+)
+from repro.analysis.lint import main as lint_main
+from repro.checkpoint import CheckpointManager, Level
+from repro.core import ScrutinyConfig, scrutinize
+from repro.core.taint import classify_rule
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def toy_step(s):
+    """Reads w and step; never reads scratch (statically dead)."""
+    tmp = s["w"][:6] * 2.0
+    out = (s["w"] ** 2).sum() + tmp.sum() + s["step"].astype(jnp.float32)
+    return {"out": out}
+
+
+def toy_state():
+    return {
+        "w": jnp.arange(8, dtype=jnp.float32),
+        "scratch": jnp.zeros(6, jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# --- static analyzer ------------------------------------------------------
+
+def test_analyze_static_toy_masks():
+    st = analyze_static(toy_step, toy_state())
+    assert st["w"].mask.all()
+    assert not st["scratch"].mask.any()
+    assert st["step"].mask.all()          # int leaf, real dataflow
+    assert st.stats["engine"] == "static"
+    assert st.stats["eqns"] >= 1
+
+
+def test_analyze_static_provenance():
+    st = analyze_static(toy_step, toy_state())
+    readers = st.provenance["w"]
+    assert readers, "w is read; provenance must record its readers"
+    rec = readers[0]
+    text = str(rec)
+    assert rec.primitive in text and rec.rule in text
+    assert st.provenance.get("scratch", []) == []
+
+
+def test_analyze_static_int_dataflow_off():
+    st = analyze_static(toy_step, toy_state(), int_dataflow=False)
+    # without int dataflow the int leaf falls back to the policy verdict
+    assert st["step"].mask.all()
+    assert not st["scratch"].mask.any()   # float dataflow unaffected
+
+
+def test_classify_rule():
+    assert classify_rule("add") == "elementwise"
+    assert classify_rule("reduce_sum") == "vjp_structural"
+    assert classify_rule("reduce_max") == "reduce_axes"
+    assert classify_rule("dot_general") == "dot_general"
+    assert classify_rule("gather") == "indexed_read"
+    assert classify_rule("scatter") == "indexed_write"
+    assert classify_rule("scan") == "control_flow"
+    assert classify_rule("pjit") == "call"
+
+
+# --- soundness ------------------------------------------------------------
+
+def test_soundness_green_and_violation():
+    state = toy_state()
+    ad = scrutinize(toy_step, state)
+    st = analyze_static(toy_step, state)
+    assert verify_soundness(ad, st).ok
+
+    # corrupt the static verdict for one read element: must raise with
+    # provenance naming the rules that read the leaf
+    st["w"].mask[3] = False
+    with pytest.raises(SoundnessError) as ei:
+        verify_soundness(ad, st)
+    v = ei.value.result.violations[0]
+    assert v.leaf == "w" and v.count >= 1 and 3 in v.example_indices
+    assert v.readers, "violation must carry jaxpr provenance"
+    assert "w" in str(ei.value)
+
+    res = verify_soundness(ad, st, raise_on_violation=False)
+    assert not res.ok and len(res.violations) == 1
+
+
+def test_soundness_mismatched_states_rejected():
+    state = toy_state()
+    ad = scrutinize(toy_step, state)
+    other = {k: v for k, v in toy_state().items() if k != "w"}
+
+    def other_step(s):
+        return {"out": s["scratch"].sum() + s["step"].astype(jnp.float32)}
+
+    st = analyze_static(other_step, other)
+    with pytest.raises(ValueError, match="missing from the static report"):
+        verify_soundness(ad, st)
+
+
+def test_manager_soundness_gate(tmp_path):
+    state = toy_state()
+    cfg = ScrutinyConfig(static_prune=True)
+
+    def scrutiny_fn(s):
+        return scrutinize(toy_step, s, config=cfg)
+
+    # green path: the gate runs on every fresh report and save succeeds
+    with CheckpointManager(
+            [Level(str(tmp_path / "ok"), interval=1)],
+            scrutiny_fn=scrutiny_fn,
+            soundness_check=soundness_checker(toy_step)) as mgr:
+        for f in mgr.save(1, state):
+            f.result()
+        assert mgr._report is not None
+
+    # a violating gate must raise out of save() before anything is adopted
+    def bad_check(s, report):
+        st = analyze_static(toy_step, s)
+        st["w"].mask[:] = False
+        return verify_soundness(report, st)
+
+    mgr = CheckpointManager([Level(str(tmp_path / "bad"), interval=1)],
+                            scrutiny_fn=scrutiny_fn,
+                            soundness_check=bad_check)
+    try:
+        with pytest.raises(SoundnessError):
+            mgr.save(1, state)
+        assert mgr._report is None
+    finally:
+        mgr.soundness_check = None
+        mgr.close()
+
+
+# --- lint: jaxpr pass -----------------------------------------------------
+
+def test_lint_step_missing_from_checkpoint():
+    state = toy_state()
+    ckpt = {"w": state["w"], "scratch": state["scratch"]}   # drops step
+    rules = {f.rule: f for f in lint_step(toy_step, state, ckpt)}
+    assert rules["CKPT001"].severity == "error"
+    assert rules["CKPT001"].details["leaf"] == "step"
+    assert rules["CKPT001"].details["readers"]
+
+
+def test_lint_step_saved_but_dead():
+    state = toy_state()
+    rules = {f.rule: f for f in lint_step(toy_step, state)}
+    assert "CKPT001" not in rules          # full state saved
+    dead = rules["CKPT002"]
+    assert dead.severity == "warning"
+    assert dead.details["leaf"] == "scratch"
+    assert dead.details["wasted_bytes"] == 6 * 4
+    assert 0.0 < dead.details["fraction"] < 1.0
+
+
+def test_lint_step_rng_not_threaded():
+    def rng_step(s):
+        k = jax.random.fold_in(jax.random.PRNGKey(0), s["i"])
+        return {"x": jax.random.normal(k, (4,)) + s["x"]}
+
+    state = {"i": jnp.zeros((), jnp.int32), "x": jnp.zeros(4, jnp.float32)}
+    rules = {f.rule for f in lint_step(rng_step, state)}
+    assert "CKPT003" in rules
+
+    keyed = {"rng_key": jax.random.PRNGKey(0), **state}
+
+    def keyed_step(s):
+        k = jax.random.fold_in(s["rng_key"], s["i"])
+        return {"x": jax.random.normal(k, (4,)) + s["x"]}
+
+    assert "CKPT003" not in {f.rule for f in lint_step(keyed_step, keyed)}
+
+
+# --- lint: AST pass -------------------------------------------------------
+
+DONATED_ASYNC = """
+import jax
+step = jax.jit(train_step, donate_argnums=(0,))
+mgr.save(step_no, state, block=False)
+mgr.wait()
+"""
+
+DONATED_BLOCKING = """
+import jax
+step = jax.jit(train_step, donate_argnums=(0,))
+mgr.save(step_no, state)
+mgr.wait()
+"""
+
+NO_DRAIN = """
+mgr.save(1, state)
+mgr.save(2, state)
+"""
+
+KEY_NOT_SAVED = """
+import jax
+key = jax.random.PRNGKey(0)
+key, sub = jax.random.split(key)
+mgr.save(1, {"params": params})
+mgr.wait()
+"""
+
+CLEAN = """
+import jax
+key = jax.random.PRNGKey(0)
+key, sub = jax.random.split(key)
+with CheckpointManager(levels) as mgr:
+    mgr.save(1, {"params": params, "key": key})
+"""
+
+
+def test_lint_file_donated_while_inflight():
+    (f,) = lint_file("d.py", DONATED_ASYNC)
+    assert (f.rule, f.severity) == ("CKPT101", "error")   # explicit block=False
+    (f,) = lint_file("d.py", DONATED_BLOCKING)
+    assert (f.rule, f.severity) == ("CKPT101", "warning")
+
+
+def test_lint_file_save_not_drained():
+    (f,) = lint_file("n.py", NO_DRAIN)
+    assert (f.rule, f.severity) == ("CKPT102", "warning")
+    assert f.line == 2 and f.details["save_lines"] == [2, 3]
+
+
+def test_lint_file_key_not_saved():
+    (f,) = lint_file("k.py", KEY_NOT_SAVED)
+    assert (f.rule, f.severity) == ("CKPT103", "warning")
+    assert f.details["key_var"] == "key"
+
+
+def test_lint_file_clean_and_unparseable():
+    assert lint_file("c.py", CLEAN) == []
+    (f,) = lint_file("b.py", "def broken(:\n")
+    assert (f.rule, f.severity) == ("CKPT100", "error")
+
+
+def test_findings_json_shape():
+    fs = lint_file("n.py", NO_DRAIN) + lint_file("d.py", DONATED_ASYNC)
+    payload = findings_json(fs)
+    assert payload["version"] == 1
+    assert payload["counts"] == {"error": 1, "warning": 1, "info": 0}
+    rec = payload["findings"][0]
+    assert set(rec) == {"rule", "severity", "path", "line", "message",
+                        "details"}
+    json.dumps(payload)                    # machine-readable
+
+
+# --- lint: CLI + CI gate --------------------------------------------------
+
+def test_lint_cli(tmp_path, capsys):
+    hazard = tmp_path / "hazard.py"
+    hazard.write_text(NO_DRAIN)
+    out_json = tmp_path / "findings.json"
+
+    # warnings only: passes at --fail-on error, fails at --fail-on warning
+    assert lint_main([str(hazard), "--json", str(out_json)]) == 0
+    assert lint_main([str(hazard), "--fail-on", "warning"]) == 1
+    payload = json.loads(out_json.read_text())
+    assert payload["counts"]["warning"] == 1
+    assert "CKPT102" in capsys.readouterr().out
+
+    (tmp_path / "bad.py").write_text("def broken(:\n")
+    assert lint_main([str(tmp_path)]) == 1      # directory walk finds error
+
+
+def test_lint_cli_module_entrypoint(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text(CLEAN)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(clean)],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "lint:" in proc.stdout
+
+
+def test_ci_gate_examples_and_train_clean():
+    """Mirror of the CI static-analysis job: error findings in examples/
+    or the train driver fail the build — keep them at zero."""
+    findings = lint_paths([os.path.join(REPO, "examples"),
+                           os.path.join(REPO, "src/repro/launch/train.py")])
+    errors = [f for f in findings if f.severity == "error"]
+    assert errors == [], "\n".join(str(f) for f in errors)

@@ -1,0 +1,189 @@
+"""Units for the loop-aware HLO analyzer on captured/synthetic HLO text.
+
+The regression of record (ISSUE 7): fusion lines with *tuple* result types
+— ``(f32[...], s32[...]) fusion(...)`` — used to parse as zero result
+bytes (``rhs.split("(")[0]`` is empty for them), silently dropping their
+HBM traffic; ``_first_shape`` on the raw rhs also mis-recorded tuple vars
+in the symtab.  These fixtures pin the balanced-paren result-section
+parse, f8 dtype support, dot FLOPs, loop trip multiplication, and
+collective byte accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+# --- low-level parsers ----------------------------------------------------
+
+def test_result_section_scalar():
+    assert H._result_section(" f32[8,16]{1,0} fusion(%a, %b)").startswith(
+        "f32[8,16]")
+
+
+def test_result_section_tuple():
+    rhs = " (f32[8,16]{1,0}, s32[4]{0}) fusion(%a, %b), kind=kLoop"
+    sec = H._result_section(rhs)
+    assert sec == "(f32[8,16]{1,0}, s32[4]{0})"
+    # both tuple members' bytes are counted
+    assert H._all_shapes_bytes(sec) == 8 * 16 * 4 + 4 * 4
+
+
+def test_result_section_nested_tuple():
+    rhs = " ((f32[2]{0}, f32[2]{0}), pred[]) while(%t), body=%b"
+    assert H._result_section(rhs) == "((f32[2]{0}, f32[2]{0}), pred[])"
+
+
+def test_f8_dtypes_parse():
+    assert H._first_shape("f8e4m3fn[128,64]{1,0}") == ("f8e4m3fn", [128, 64])
+    assert H._all_shapes_bytes("f8e5m2[32]{0}") == 32
+    # the bare-prefix trap: "f8" must not match and drop the shape
+    assert H._all_shapes_bytes("f8e4m3fn[10]") == 10
+
+
+def test_symtab_skips_tuple_results():
+    lines = [
+        "%t = (f32[8]{0}, s32[]) fusion(%a), kind=kLoop, calls=%fc",
+        "%x = f32[8]{0} get-tuple-element(%t), index=0",
+        "%p = f32[4,2]{1,0} parameter(0)",
+    ]
+    tab = H._build_symtab(lines)
+    assert "t" not in tab                 # tuple var: no single shape
+    assert tab["x"] == ("f32", [8])
+    assert tab["p"] == ("f32", [4, 2])
+
+
+# --- fixture modules ------------------------------------------------------
+
+TUPLE_FUSION_HLO = """
+HloModule m
+
+%fused_computation (p0: f32[8,16], p1: f32[8,16]) -> (f32[8,16], s32[]) {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %p1 = f32[8,16]{1,0} parameter(1)
+  %add.1 = f32[8,16]{1,0} add(%p0, %p1)
+  %c = s32[] constant(3)
+  ROOT %tup = (f32[8,16]{1,0}, s32[]) tuple(%add.1, %c)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[8,16]{1,0} parameter(1)
+  %fus = (f32[8,16]{1,0}, s32[]) fusion(%a, %b), kind=kLoop, calls=%fused_computation
+  ROOT %gte = f32[8,16]{1,0} get-tuple-element(%fus), index=0
+}
+"""
+
+
+def test_tuple_fusion_hbm_not_zero():
+    out = H.analyze(TUPLE_FUSION_HLO)
+    arr = 8 * 16 * 4
+    # result tuple (arr + 4) + the two full operand reads
+    assert out["hbm_bytes"] == pytest.approx(arr + 4 + 2 * arr)
+
+
+DOT_HLO = """
+HloModule m
+
+ENTRY %main (a: f32[8,32], b: f32[32,16]) -> f32[8,16] {
+  %a = f32[8,32]{1,0} parameter(0)
+  %b = f32[32,16]{1,0} parameter(1)
+  ROOT %d = f32[8,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_dot_flops():
+    out = H.analyze(DOT_HLO)
+    assert out["flops"] == pytest.approx(2.0 * 8 * 16 * 32)
+
+
+WHILE_HLO = """
+HloModule m
+
+%body (p: (f32[4], s32[])) -> (f32[4], s32[]) {
+  %p = (f32[4]{0}, s32[]) parameter(0)
+  %x = f32[4]{0} get-tuple-element(%p), index=0
+  %i = s32[] get-tuple-element(%p), index=1
+  %y = f32[4]{0} add(%x, %x)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %r = (f32[4]{0}, s32[]) tuple(%y, %i2)
+}
+
+%cond (p: (f32[4], s32[])) -> pred[] {
+  %p = (f32[4]{0}, s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=1
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t = (f32[4]{0}, s32[]) tuple(%a, %z)
+  %w = (f32[4]{0}, s32[]) while(%t), condition=%cond, body=%body
+  ROOT %out = f32[4]{0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_while_trip_count_multiplies_body():
+    out = H.analyze(WHILE_HLO)
+    assert out["n_whiles"] == 1
+    assert out["trips"]["body"] == 7.0
+    # body HBM (the add: result + 2 operands = 3×16B) charged 7 times
+    assert out["hbm_bytes"] >= 7 * 3 * 16
+
+
+COLL_HLO = """
+HloModule m
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+}
+"""
+
+
+def test_collective_bytes():
+    out = H.analyze(COLL_HLO)
+    assert out["coll_bytes"]["all-reduce"] == pytest.approx(1024 * 4)
+
+
+F8_HLO = """
+HloModule m
+
+ENTRY %main (a: f8e4m3fn[64,64]) -> f8e4m3fn[64,64] {
+  %a = f8e4m3fn[64,64]{1,0} parameter(0)
+  ROOT %t = f8e4m3fn[64,64]{1,0} transpose(%a), dimensions={1,0}
+}
+"""
+
+
+def test_f8_module_traffic():
+    out = H.analyze(F8_HLO)
+    # transpose is slice-like: 2 × result bytes at 1 B/elem
+    assert out["hbm_bytes"] == pytest.approx(2 * 64 * 64)
+
+
+def test_live_compiled_module_parses():
+    """End-to-end: analyze a real jitted module's optimized HLO."""
+    def f(a, b):
+        return jnp.tanh(a @ b).sum()
+
+    a = jnp.ones((16, 32), jnp.float32)
+    b = jnp.ones((32, 8), jnp.float32)
+    hlo = jax.jit(f).lower(a, b).compile().as_text()
+    out = H.analyze(hlo)
+    assert out["flops"] >= 2.0 * 16 * 8 * 32
+    assert out["hbm_bytes"] > 0
+    assert out["n_computations"] >= 1

@@ -1,0 +1,174 @@
+"""Soundness gate: static-uncritical must never be AD-critical.
+
+The ISSUE-7 acceptance criterion — for every tested fn (all 8 NPB kernels
++ the train step), the static analyzer's masks are verified element-wise
+against the AD probe engine (``AD-critical ⊆ static-critical``); a
+violation means a taint rule under-approximated a read and fails loudly
+with jaxpr provenance.
+
+Quick shapes run in tier-1 CI (default 3-probe AD config).  ``REPRO_SLOW=1``
+additionally runs the hardened sweep (8 probes + input jitter) — more
+probes can only *add* AD-critical elements, so this stresses the subset
+relation harder.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import analyze_static, verify_soundness
+from repro.core import ScrutinyConfig, scrutinize
+from repro.npb.common import ALL_BENCHMARKS, get_benchmark
+
+SLOW = os.environ.get("REPRO_SLOW", "") not in ("", "0")
+
+needs_slow = pytest.mark.skipif(
+    not SLOW, reason="full-probe sweep; set REPRO_SLOW=1")
+
+# Int-dataflow ground truth (what the AD path can only classify by
+# policy): (uncritical, total) per int variable with a non-trivial mask.
+IS_INT_EXPECTED = {
+    "bucket_ptrs": (512, 512),   # rebuilt by every _rank before any read
+    "key_array": (2, 65536),     # planted positions only
+}
+
+
+@pytest.fixture(scope="module")
+def npb_pairs():
+    """(benchmark, StaticReport, DeviceReport) per kernel — one trace
+    each (analyze_static and scrutinize share the jaxpr cache)."""
+    out = {}
+    for name in ALL_BENCHMARKS:
+        b = get_benchmark(name)
+        state = b.checkpoint_state()
+        static = analyze_static(b.resume, state)
+        ad = scrutinize(b.resume, state)
+        out[name] = (b, static, ad)
+    return out
+
+
+@pytest.mark.parametrize("name", list(ALL_BENCHMARKS))
+def test_npb_soundness(npb_pairs, name):
+    _, static, ad = npb_pairs[name]
+    res = verify_soundness(ad, static)
+    assert res.ok
+    # every kernel has at least one state leaf in the comparison universe
+    # (IS is all-integer, so all of its leaves are policy-skipped)
+    assert res.checked_leaves + res.skipped_leaves >= 1
+    if name != "is":
+        assert res.checked_leaves >= 1
+
+
+@pytest.mark.parametrize("name", list(ALL_BENCHMARKS))
+def test_npb_static_matches_participation_bitlevel(npb_pairs, name):
+    """On inexact leaves the static masks must equal participation's —
+    same taint engine, shared through the new backward_taint entry —
+    bit-for-bit, per variable."""
+    b, static, _ = npb_pairs[name]
+    part = b.participation()
+    for var, leaf in part.leaves.items():
+        if leaf.policy.value not in ("ad", "horizon"):
+            continue
+        np.testing.assert_array_equal(
+            static[var].mask, leaf.mask,
+            err_msg=f"{name}({var}): static mask != participation mask")
+
+
+def test_is_int_dataflow(npb_pairs):
+    """NPB IS is all-integer state: the AD engine can only say
+    ALWAYS_CRITICAL, the static analyzer produces real element masks."""
+    _, static, ad = npb_pairs["is"]
+    for var, (unc, tot) in IS_INT_EXPECTED.items():
+        leaf = static[var]
+        assert (leaf.uncritical, leaf.total) == (unc, tot), (
+            f"is({var}): got {(leaf.uncritical, leaf.total)}, "
+            f"expected {(unc, tot)}")
+        # the AD report's policy verdict keeps them (conservative)...
+        assert ad[var].uncritical == 0
+    # ...and the soundness check does NOT compare policy leaves, so the
+    # sharper static masks coexist with the conservative AD report.
+    assert verify_soundness(ad, static).skipped_leaves >= len(IS_INT_EXPECTED)
+
+
+def test_npb_region_table_interface(npb_pairs):
+    """StaticReport leaves satisfy the DeviceReport consumption contract
+    (mask / RegionTable / device_mask) for the checkpoint managers."""
+    _, static, _ = npb_pairs["is"]
+    leaf = static["bucket_ptrs"]
+    assert leaf.table.critical_count == leaf.critical
+    leaf.table.validate()
+    dm = np.asarray(leaf.device_mask())
+    np.testing.assert_array_equal(dm, leaf.mask)
+
+
+@needs_slow
+@pytest.mark.parametrize("name", list(ALL_BENCHMARKS))
+def test_npb_soundness_hardened(name):
+    """8-probe + jittered sweep: more probes only add AD-critical
+    elements, so this is the harder direction of the subset check."""
+    b = get_benchmark(name)
+    state = b.checkpoint_state()
+    static = analyze_static(b.resume, state)
+    cfg = ScrutinyConfig(probes=8, input_jitter=1e-3)
+    ad = scrutinize(b.resume, state, config=cfg)
+    assert verify_soundness(ad, static).ok
+
+
+# --- train step -----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def train_setup():
+    from repro.data import pipeline as dp
+    from repro.configs import get_config
+    from repro.launch.train import build_state
+    from repro.train.optim import OptConfig
+    from repro.train.step import make_train_step
+
+    cfg = get_config("xlstm-125m").reduced()
+    oc = OptConfig(kind="adamw", lr=1e-3, warmup=2, decay_steps=10)
+    step_fn = jax.jit(make_train_step(cfg, oc))
+    state = build_state(cfg, oc, batch=2, seq=16)
+
+    def resume(s):
+        batch, _ = dp.next_batch(cfg, s["data"])
+        _, _, metrics = step_fn(s["params"], s["opt"], batch)
+        return {"loss": metrics["loss"]}
+
+    return resume, state
+
+
+def test_train_step_soundness(train_setup):
+    resume, state = train_setup
+    static = analyze_static(resume, state)
+    ad = scrutinize(resume, state)
+    res = verify_soundness(ad, static)
+    assert res.ok
+    assert res.checked_elements > 1000
+
+
+def test_train_step_static_prune_mask_identity(train_setup):
+    """static_prune must not change a single mask bit on the train step."""
+    resume, state = train_setup
+    base = scrutinize(resume, state)
+    pruned = scrutinize(resume, state,
+                        config=ScrutinyConfig(static_prune=True))
+    for name, leaf in base.leaves.items():
+        np.testing.assert_array_equal(
+            pruned[name].mask, leaf.mask,
+            err_msg=f"static_prune changed mask of {name}")
+    assert pruned.stats["static_prune_s"] > 0.0
+
+
+def test_train_cli_verify_static(tmp_path):
+    """--verify-static end-to-end: AD scrutiny + static soundness gate +
+    probe pruning through the coordinated manager wiring."""
+    from repro.launch.train import main as train_main
+
+    losses = train_main([
+        "--steps", "4", "--batch", "2", "--seq", "16",
+        "--ckpt-every", "2", "--ckpt-dir", str(tmp_path),
+        "--verify-static", "--log-every", "1000"])
+    assert len(losses) == 4
