@@ -26,9 +26,11 @@ ISSUE 7 adds the **static prune** section: on a state with a statically
 dead scratch leaf, ``ScrutinyConfig(static_prune=True)`` runs the
 ``repro.analysis`` abstract interpreter as the prepass and skips the vjp
 sweep for leaves it proves all-uncritical — measured as swept-element
-reduction + the one-time ``static_prune_s`` cost, with a hard bitwise
-mask-equality assert against the unpruned sweep, and the shared jaxpr
-trace cache shown via cold-vs-cached ``prepass_trace_s``.
+reduction + the cold ``static_prune_s`` cost (amortized across calls by
+a cache keyed on the index-feeding leaf values, since the dead set is
+value-dependent), with a hard bitwise mask-equality assert against the
+unpruned sweep, and the shared jaxpr trace cache shown via
+cold-vs-cached ``prepass_trace_s``.
 """
 
 from __future__ import annotations
@@ -147,7 +149,8 @@ def run(out=print, quick: bool = False, json_path: str | None = None):
     ts = traced_step(fn2, state2)            # trace cache: third consumer
     out("\n== static probe-sweep pruning (8 probes, 25% dead scratch) ==")
     out(f"  sweep wall-clock: {base_s*1e3:.1f}ms full -> {prune_s*1e3:.1f}ms "
-        f"pruned; static analysis {sp['static_prune_s']*1e3:.1f}ms one-time")
+        f"pruned; static analysis {sp['static_prune_s']*1e3:.1f}ms cold "
+        f"(value-keyed cache amortizes repeats)")
     out(f"  swept elements: {sb['sweep_elements']/1e6:.2f}M -> "
         f"{sp['sweep_elements']/1e6:.2f}M "
         f"({sp['static_pruned_elements']/1e6:.2f}M = {pruned_frac:.1%} "

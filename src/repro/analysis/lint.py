@@ -299,11 +299,15 @@ def lint_file(path: str, source: Optional[str] = None) -> List[Finding]:
 
     # CKPT103: a live PRNG key stream that never reaches a save call.
     if scan.save_calls:
-        save_srcs = " ".join(
-            ast.unparse(c) if hasattr(ast, "unparse") else ""
-            for c in scan.save_calls)
+        # exact identifier membership, not substring: 'key' must not count
+        # as saved because a save call mentions 'subkey'
+        saved_idents = set()
+        for c in scan.save_calls:
+            for node in ast.walk(c):
+                if isinstance(node, ast.Name):
+                    saved_idents.add(node.id)
         for var, line in sorted(scan.key_vars.items()):
-            if var in scan.split_vars and var not in save_srcs:
+            if var in scan.split_vars and var not in saved_idents:
                 findings.append(Finding(
                     "CKPT103", "warning", path, line,
                     f"PRNG key {var!r} is split/folded (line "

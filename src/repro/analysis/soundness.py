@@ -11,9 +11,16 @@ between an AD report (``scrutinize``) and a :class:`StaticReport` — and on
 violation attributes the leaf to the jaxpr equations that read it, with
 the responsible taint-rule class and source location (the report's
 provenance).  This is what turns the taint rules from heuristics into
-checked invariants, and what makes static probe-sweep pruning
-(``ScrutinyConfig.static_prune``) a *verified* optimization rather than a
-bet.
+checked invariants *for the leaves the AD engine actually swept*.
+
+The gate cannot verify leaves ``static_prune`` removed from the sweep on
+taint evidence: their AD mask is all-zero because no sweep ran, so the
+subset check holds vacuously.  Those leaves are surfaced in
+``SoundnessResult.pruned_leaf_names`` rather than silently counted as
+checked; ``soundness_checker(..., check_pruned=True)`` closes the gap by
+re-sweeping without the prune whenever a report carries taint-pruned
+leaves.  (Leaves pruned on reads-liveness alone need no flag — a leaf the
+program never reads has a structurally guaranteed zero gradient.)
 
 Only leaves the AD engine analyzed with AD/HORIZON policy are compared:
 ALWAYS_CRITICAL leaves carry a policy verdict (all ones), not a gradient
@@ -64,6 +71,10 @@ class SoundnessResult:
     checked_elements: int
     skipped_leaves: int             # non-AD-policy leaves (policy verdicts)
     violations: List[Violation]
+    # leaves static_prune removed from the sweep on taint evidence: their
+    # AD mask is vacuously empty, so the gate could not verify them.
+    pruned_leaves: int = 0
+    pruned_leaf_names: tuple = ()
 
     @property
     def ok(self) -> bool:
@@ -97,12 +108,25 @@ def verify_soundness(
     masks materialize lazily).  ``static_report``: ``analyze_static`` on
     the same fn/state.  Raises :class:`SoundnessError` (with per-leaf
     provenance) unless ``raise_on_violation=False``.
+
+    Leaves the AD report's ``static_prune`` prepass removed from the sweep
+    on taint evidence (``stats["static_taint_pruned_leaves"]``) are
+    excluded from ``checked_leaves`` and reported in
+    ``pruned_leaf_names`` — their all-zero AD mask is a consequence of the
+    prune, not evidence, so counting them as checked would make the gate
+    vacuous for exactly the leaves the prune skipped.
     """
+    pruned = set((getattr(ad_report, "stats", None) or {})
+                 .get("static_taint_pruned_leaves", ()))
+    pruned_seen: List[str] = []
     violations: List[Violation] = []
     checked_leaves = checked_elements = skipped = 0
     for name, leaf in ad_report.leaves.items():
         if leaf.policy not in (LeafPolicy.AD, LeafPolicy.HORIZON):
             skipped += 1
+            continue
+        if name in pruned:
+            pruned_seen.append(name)
             continue
         if name not in static_report.leaves:
             raise ValueError(
@@ -125,7 +149,8 @@ def verify_soundness(
                 example_indices=[int(i) for i in idx[:max_examples]],
                 readers=list(prov.get(name, ()))))
     result = SoundnessResult(checked_leaves, checked_elements, skipped,
-                             violations)
+                             violations, pruned_leaves=len(pruned_seen),
+                             pruned_leaf_names=tuple(sorted(pruned_seen)))
     if raise_on_violation and violations:
         raise SoundnessError(result)
     return result
@@ -136,6 +161,7 @@ def soundness_checker(
     *,
     config: ScrutinyConfig = ScrutinyConfig(),
     int_dataflow: bool = True,
+    check_pruned: bool = False,
 ) -> Callable[[Any, CriticalityReport], SoundnessResult]:
     """Manager hook verifying every fresh scrutiny report against a fresh
     static analysis of the same ``fn``.
@@ -144,11 +170,26 @@ def soundness_checker(
     signature: ``check(state, report)``; it raises
     :class:`SoundnessError` on violation and returns the
     :class:`SoundnessResult` otherwise.
+
+    ``check_pruned=True`` adds a slow path: when the report carries
+    taint-pruned leaves (which the fast gate can only flag, not verify),
+    re-run ``scrutinize`` with ``static_prune=False`` and gate *that*
+    report — every leaf, including the previously pruned ones, is then
+    checked against the static masks.  Costs one full un-pruned sweep per
+    report that pruned something; leave it off for per-step re-scrutiny
+    and turn it on for periodic audits.
     """
 
     def check(state: Any, report: CriticalityReport) -> SoundnessResult:
         static = analyze_static(fn, state, config=config,
                                 int_dataflow=int_dataflow)
-        return verify_soundness(report, static)
+        result = verify_soundness(report, static)
+        if check_pruned and result.pruned_leaf_names:
+            from repro.core.criticality import scrutinize
+
+            full = scrutinize(fn, state, config=dataclasses.replace(
+                config, static_prune=False))
+            result = verify_soundness(full, static)
+        return result
 
     return check

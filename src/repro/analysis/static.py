@@ -21,9 +21,11 @@ managers consume it directly.  Relationship to the other engines::
     static == participation on inexact leaves; static additionally masks
     integer leaves by dataflow (int_dataflow=True).
 
-Because the subset relation is *verified* on every opt-in scrutinize call,
-the static report is a sound pruner: leaves whose static mask is all-False
-can skip the vjp sweep entirely (``ScrutinyConfig.static_prune``).
+The subset relation is verified on every opt-in scrutinize call *for the
+leaves the AD engine swept*; leaves whose static mask is all-False can
+skip the vjp sweep entirely (``ScrutinyConfig.static_prune``), and those
+skipped on taint evidence are flagged in the soundness result rather than
+vacuously passed (see ``repro.analysis.soundness``).
 
 Provenance: for every state leaf the report records the jaxpr equations
 that read it directly, classified by the taint rule that handled them
@@ -36,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.criticality import (CriticalityReport, LeafReport,
@@ -113,10 +116,13 @@ def analyze_static(
     mask marks an element critical iff the remaining computation
     transitively reads it before overwriting it.
 
-    ``int_dataflow``: give integer/bool leaves their dataflow mask instead
-    of the ALWAYS_CRITICAL policy verdict (the analysis itself is
-    dtype-agnostic; this is what the AD engine cannot do).  AD/HORIZON
-    leaves always get dataflow masks; ALWAYS_UNCRITICAL is honoured.
+    ``int_dataflow``: give integer/bool ALWAYS_CRITICAL leaves their
+    dataflow mask instead of the policy verdict (the analysis itself is
+    dtype-agnostic; this is what the AD engine cannot do).  The override
+    applies only to non-inexact dtypes — an *inexact* leaf pinned
+    ALWAYS_CRITICAL via ``leaf_policy`` is a user declaration and keeps
+    its all-ones mask.  AD/HORIZON leaves always get dataflow masks;
+    ALWAYS_UNCRITICAL is honoured.
 
     ``traced``: an already-traced :class:`TracedStep` to reuse (the sweep
     engine passes its own so one scrutinize call traces once); omitted,
@@ -135,7 +141,14 @@ def analyze_static(
         n = int(np.prod(leaf.shape)) if leaf.ndim else 1
         if pol == LeafPolicy.ALWAYS_UNCRITICAL:
             mask = np.zeros(n, dtype=bool)
-        elif pol == LeafPolicy.ALWAYS_CRITICAL and not int_dataflow:
+        elif pol == LeafPolicy.ALWAYS_CRITICAL and (
+                not int_dataflow
+                or jnp.issubdtype(leaf.dtype, jnp.inexact)):
+            # int_dataflow only overrides the *default* int/bool policy
+            # verdict; a user-pinned ALWAYS_CRITICAL float leaf keeps its
+            # all-ones mask (otherwise the analyzer could call a leaf the
+            # user explicitly declared critical statically dead, and lint
+            # CKPT002 would advise dropping it).
             mask = np.ones(n, dtype=bool)
         else:
             mask = np.asarray(in_taints[i], bool).reshape(-1).copy()

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -73,6 +74,10 @@ class TracedStep:
     leaves: List[jnp.ndarray]
     trace_s: float
     cached: bool
+    # structure cache key (fn, treedef, shapes/dtypes); None when the fn
+    # is unhashable.  Value-sensitive caches layered on top of the trace
+    # (the static-prune cache) key on this plus a leaf-value digest.
+    sig: Any = None
 
 
 _TRACE_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
@@ -98,7 +103,7 @@ def traced_step(fn: Callable[[Any], Any], state: Any) -> TracedStep:
     if sig is not None and sig in _TRACE_CACHE:
         _TRACE_CACHE.move_to_end(sig)
         return TracedStep(_TRACE_CACHE[sig], names, treedef, leaves,
-                          trace_s=0.0, cached=True)
+                          trace_s=0.0, cached=True, sig=sig)
 
     def flat_fn(*ls):
         out = fn(jax.tree_util.tree_unflatten(treedef, list(ls)))
@@ -111,7 +116,8 @@ def traced_step(fn: Callable[[Any], Any], state: Any) -> TracedStep:
         _TRACE_CACHE[sig] = closed
         while len(_TRACE_CACHE) > _TRACE_CACHE_MAX:
             _TRACE_CACHE.popitem(last=False)
-    return TracedStep(closed, names, treedef, leaves, trace_s, cached=False)
+    return TracedStep(closed, names, treedef, leaves, trace_s, cached=False,
+                      sig=sig)
 
 
 def _path_str(path) -> str:
@@ -494,12 +500,16 @@ class _SweepEngine:
     probe, so the linearization moves inside the loop body — we re-linearize
     only when the jitter actually perturbs the primal.  State values are
     runtime arguments (nothing is baked in), so engines are cached on
-    structure and the manager's online re-scrutiny
-    (``rescrutinize_every=1``) reuses one compiled sweep across training.
+    structure **plus the prepass dead set** and the manager's online
+    re-scrutiny (``rescrutinize_every=1``) reuses one compiled sweep
+    across training.  The dead set itself is NOT computed here: static-
+    prune masks depend on concrete index values, so ``_prepass_for``
+    recomputes it per scrutinize call and a changed dead set selects (or
+    compiles) a different engine instead of reusing a stale one.
     """
 
     def __init__(self, fn, treedef, names, example_leaves, policies,
-                 config: ScrutinyConfig):
+                 config: ScrutinyConfig, dead: frozenset = frozenset()):
         self.fn = fn
         self.treedef = treedef
         self.names = list(names)
@@ -507,42 +517,7 @@ class _SweepEngine:
         self.jitter = float(config.input_jitter)
         ad = [i for i, p in enumerate(policies)
               if p in (LeafPolicy.AD, LeafPolicy.HORIZON)]
-        self.dead: frozenset = frozenset()
-        self.prepass_trace_s = 0.0
-        self.prepass_trace_cached = False
-        self.static_prune_s = 0.0
-        self.static_pruned_elements = 0
-        if ad and (config.jaxpr_prepass or config.static_prune):
-            import time as _time
-
-            state = jax.tree_util.tree_unflatten(treedef,
-                                                 list(example_leaves))
-            ts = traced_step(fn, state)
-            self.prepass_trace_s = ts.trace_s
-            self.prepass_trace_cached = ts.cached
-            if config.static_prune:
-                # full static analyzer: element-wise masks prove more
-                # leaves dead than reads-liveness (write-before-read
-                # state is live to the reads walk but has an all-False
-                # static mask).  Soundness (AD-critical ⊆ static-
-                # critical) is the checked invariant that makes the
-                # skip legal — repro.analysis.verify_soundness.
-                from repro.analysis.static import analyze_static
-
-                t0 = _time.perf_counter()
-                static = analyze_static(fn, state, config=config,
-                                        traced=ts)
-                self.static_prune_s = _time.perf_counter() - t0
-                self.dead = frozenset(
-                    i for i in ad
-                    if not static[self.names[i]].mask.any())
-                self.static_pruned_elements = sum(
-                    int(np.prod(example_leaves[i].shape)) or 1
-                    for i in self.dead)
-            else:
-                used = scrutinize_jaxpr_reads(fn, state, closed=ts.closed)
-                self.dead = frozenset(i for i in ad
-                                      if not used[self.names[i]])
+        self.dead: frozenset = frozenset(dead) & set(ad)
         self.ad_idx: Tuple[int, ...] = tuple(i for i in ad
                                              if i not in self.dead)
         self.sizes = tuple(int(np.prod(example_leaves[i].shape)) or 1
@@ -616,25 +591,147 @@ _ENGINE_CACHE_MAX = 8
 
 
 def _engine_for(fn, treedef, names, leaves, policies,
-                config: ScrutinyConfig) -> _SweepEngine:
+                config: ScrutinyConfig,
+                dead: frozenset = frozenset()) -> _SweepEngine:
+    """Compiled-sweep cache.  ``dead`` (the prepass prune set) is part of
+    the key: the dead set varies with concrete index values, so two calls
+    with identical structure but different prune sets must not share an
+    engine — a stale dead set would silently skip the sweep for a
+    now-live leaf."""
     try:
         sig = (fn, treedef,
                tuple((tuple(l.shape), str(l.dtype)) for l in leaves),
                tuple(policies), max(1, config.probes),
-               float(config.input_jitter), bool(config.jaxpr_prepass),
-               bool(config.static_prune))
+               float(config.input_jitter), dead)
         hash(sig)
     except TypeError:
         sig = None
     if sig is not None and sig in _ENGINE_CACHE:
         _ENGINE_CACHE.move_to_end(sig)
         return _ENGINE_CACHE[sig]
-    eng = _SweepEngine(fn, treedef, names, leaves, policies, config)
+    eng = _SweepEngine(fn, treedef, names, leaves, policies, config, dead)
     if sig is not None:
         _ENGINE_CACHE[sig] = eng
         while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
             _ENGINE_CACHE.popitem(last=False)
     return eng
+
+
+# --------------------------------------------------------------------------
+# static-prune prepass (value-aware)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Prepass:
+    """Per-call prepass result: the dead-leaf set plus its accounting."""
+
+    dead: frozenset = frozenset()
+    trace_s: float = 0.0
+    trace_cached: bool = False
+    static_prune_s: float = 0.0
+    static_prune_cached: bool = False
+    static_pruned_elements: int = 0
+    # leaves pruned on *taint* evidence only (live to the reads walk but
+    # statically all-dead): these never enter the vjp sweep, so the
+    # soundness gate cannot verify them — it flags them instead.
+    taint_pruned_names: Tuple[str, ...] = ()
+
+
+_PRUNE_CACHE: OrderedDict = OrderedDict()
+_PRUNE_CACHE_MAX = 16
+_INDEX_FEED_CACHE: OrderedDict = OrderedDict()
+_INDEX_FEED_CACHE_MAX = 16
+
+
+def _value_digest(leaves, positions) -> tuple:
+    """Digest of the leaves that can feed an index operand.
+
+    Static masks are value-dependent exactly through gather/scatter/
+    dynamic-slice index operands (the taint walk resolves them from a
+    concrete forward pass); every other leaf influences only mask
+    *structure*, which the trace signature already covers.  Digesting
+    just the index-feeding leaves keys the prune cache on precisely the
+    values that can change the dead set.
+    """
+    parts = []
+    for i in sorted(positions):
+        arr = np.asarray(leaves[i])  # D2H, index-feeding leaves only
+        parts.append((i, arr.shape, str(arr.dtype),
+                      hashlib.blake2b(arr.tobytes(),
+                                      digest_size=16).digest()))
+    return tuple(parts)
+
+
+def _prepass_for(fn, state, names, leaves, policies,
+                 config: ScrutinyConfig) -> _Prepass:
+    """Compute the prepass dead-leaf set for *this* call's state values.
+
+    The prune set must never be cached on structure alone: a ring-buffer
+    pointer advancing from an out-of-range slot to a live one changes
+    which leaves the static analyzer proves dead.  The cache key is
+    (trace signature, policies, digest of index-feeding leaf values) —
+    states that differ only in non-index values hit the cache, states
+    with different index values recompute.
+    """
+    pre = _Prepass()
+    ad = [i for i, p in enumerate(policies)
+          if p in (LeafPolicy.AD, LeafPolicy.HORIZON)]
+    if not ad or not (config.jaxpr_prepass or config.static_prune):
+        return pre
+    import time as _time
+
+    ts = traced_step(fn, state)
+    pre.trace_s = ts.trace_s
+    pre.trace_cached = ts.cached
+    used = scrutinize_jaxpr_reads(fn, state, closed=ts.closed)
+    if not config.static_prune:
+        # reads-liveness only: value-independent, safe to derive per call
+        pre.dead = frozenset(i for i in ad if not used[names[i]])
+        return pre
+
+    t0 = _time.perf_counter()
+    cache_key = None
+    if ts.sig is not None:
+        try:
+            feed = _INDEX_FEED_CACHE.get(ts.sig)
+            if feed is None:
+                from repro.core.taint import index_feeding_invars
+
+                feed = index_feeding_invars(ts.closed)
+                _INDEX_FEED_CACHE[ts.sig] = feed
+                while len(_INDEX_FEED_CACHE) > _INDEX_FEED_CACHE_MAX:
+                    _INDEX_FEED_CACHE.popitem(last=False)
+            cache_key = (ts.sig, tuple(policies),
+                         _value_digest(ts.leaves, feed))
+            hash(cache_key)
+        except TypeError:
+            cache_key = None
+    if cache_key is not None and cache_key in _PRUNE_CACHE:
+        _PRUNE_CACHE.move_to_end(cache_key)
+        pre.dead, pre.taint_pruned_names = _PRUNE_CACHE[cache_key]
+        pre.static_prune_cached = True
+    else:
+        # full static analyzer: element-wise masks prove more leaves dead
+        # than reads-liveness (write-before-read state is live to the
+        # reads walk but has an all-False static mask).  The soundness
+        # gate verifies swept leaves; taint-only-pruned leaves are
+        # surfaced via stats["static_taint_pruned_leaves"] so
+        # verify_soundness can flag them as unverified.
+        from repro.analysis.static import analyze_static
+
+        static = analyze_static(fn, state, config=config, traced=ts)
+        pre.dead = frozenset(i for i in ad
+                             if not static[names[i]].mask.any())
+        pre.taint_pruned_names = tuple(sorted(
+            names[i] for i in pre.dead if used[names[i]]))
+        if cache_key is not None:
+            _PRUNE_CACHE[cache_key] = (pre.dead, pre.taint_pruned_names)
+            while len(_PRUNE_CACHE) > _PRUNE_CACHE_MAX:
+                _PRUNE_CACHE.popitem(last=False)
+    pre.static_prune_s = _time.perf_counter() - t0
+    pre.static_pruned_elements = sum(
+        int(np.prod(leaves[i].shape)) or 1 for i in pre.dead)
+    return pre
 
 
 # --------------------------------------------------------------------------
@@ -684,24 +781,29 @@ def scrutinize(
     leaves = [jnp.asarray(l) for _, l in leaves_with_path]
     policies = [config.leaf_policy(l) for l in leaves]
 
-    eng = _engine_for(fn, treedef, names, leaves, policies, config)
+    pre = _prepass_for(fn, state, names, leaves, policies, config)
+    eng = _engine_for(fn, treedef, names, leaves, policies, config,
+                      pre.dead)
     if engine == "host":
-        return _scrutinize_host(eng, names, leaves, policies, config, key)
+        return _scrutinize_host(eng, names, leaves, policies, config, key,
+                                pre)
     return _scrutinize_device(eng, names, leaves, policies, config, key,
-                              mask_shardings)
+                              mask_shardings, pre)
 
 
 def _scrutinize_device(eng: _SweepEngine, names, leaves, policies,
                        config: ScrutinyConfig, key,
-                       mask_shardings) -> DeviceReport:
+                       mask_shardings, pre: _Prepass) -> DeviceReport:
     stats: Dict[str, Any] = {
         "engine": "device", "probes": eng.probes, "d2h_bytes": 0,
         "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead),
         "sweep_elements": sum(eng.sizes),
-        "prepass_trace_s": eng.prepass_trace_s,
-        "prepass_trace_cached": eng.prepass_trace_cached,
-        "static_prune_s": eng.static_prune_s,
-        "static_pruned_elements": eng.static_pruned_elements}
+        "prepass_trace_s": pre.trace_s,
+        "prepass_trace_cached": pre.trace_cached,
+        "static_prune_s": pre.static_prune_s,
+        "static_prune_cached": pre.static_prune_cached,
+        "static_pruned_elements": pre.static_pruned_elements,
+        "static_taint_pruned_leaves": list(pre.taint_pruned_names)}
     mags = eng.run(leaves, key)
 
     words: Dict[int, jnp.ndarray] = {}
@@ -736,7 +838,8 @@ def _scrutinize_device(eng: _SweepEngine, names, leaves, policies,
 
 
 def _scrutinize_host(eng: _SweepEngine, names, leaves, policies,
-                     config: ScrutinyConfig, key) -> CriticalityReport:
+                     config: ScrutinyConfig, key,
+                     pre: _Prepass) -> CriticalityReport:
     """Reference engine: un-jitted per-probe vjp with full-gradient D2H.
 
     Bit-identical masks to the device engine — both share the probe-key
@@ -747,10 +850,12 @@ def _scrutinize_host(eng: _SweepEngine, names, leaves, policies,
         "engine": "host", "probes": eng.probes, "d2h_bytes": 0,
         "sweep_leaves": len(eng.ad_idx), "dead_leaves": len(eng.dead),
         "sweep_elements": sum(eng.sizes),
-        "prepass_trace_s": eng.prepass_trace_s,
-        "prepass_trace_cached": eng.prepass_trace_cached,
-        "static_prune_s": eng.static_prune_s,
-        "static_pruned_elements": eng.static_pruned_elements}
+        "prepass_trace_s": pre.trace_s,
+        "prepass_trace_cached": pre.trace_cached,
+        "static_prune_s": pre.static_prune_s,
+        "static_prune_cached": pre.static_prune_cached,
+        "static_pruned_elements": pre.static_pruned_elements,
+        "static_taint_pruned_leaves": list(pre.taint_pruned_names)}
 
     magnitudes: Dict[int, np.ndarray] = {}
     if eng.ad_idx:

@@ -117,10 +117,18 @@ class ScrutinyConfig:
     (``repro.analysis.analyze_static``) as the pre-pass instead of the
     reads-liveness walk.  Leaves the static pass proves element-wise
     uncritical (e.g. written-before-read state the reads walk still counts
-    as live) skip the vjp sweep entirely; soundness of the skip is the
-    checked invariant AD-critical ⊆ static-critical
-    (``repro.analysis.verify_soundness``).  Stats gain
-    ``static_prune_s`` / ``static_pruned_elements``.
+    as live) skip the vjp sweep entirely.  Static masks depend on concrete
+    index values (gather/scatter/dynamic-slice operands), so the dead set
+    is recomputed per scrutinize call, cached under a digest of exactly
+    the index-feeding leaves' values — states differing only in non-index
+    values reuse it.  The soundness gate
+    (``repro.analysis.verify_soundness``) checks AD-critical ⊆
+    static-critical on every swept leaf; leaves pruned on taint evidence
+    cannot be checked that way and are flagged in the result
+    (``soundness_checker(check_pruned=True)`` audits them with an
+    un-pruned sweep).  Stats gain ``static_prune_s`` /
+    ``static_prune_cached`` / ``static_pruned_elements`` /
+    ``static_taint_pruned_leaves``.
     """
 
     probes: int = 3

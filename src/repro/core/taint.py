@@ -683,6 +683,143 @@ def _backward(jaxpr: jex_core.Jaxpr, consts, out_taints: List[np.ndarray],
 
 
 # --------------------------------------------------------------------------
+# Value-dependence analysis: which leaves can change the masks?
+# --------------------------------------------------------------------------
+
+def _index_operand_positions(eqn) -> Tuple[int, ...]:
+    """Operand positions whose concrete *values* the taint rules consult.
+
+    The backward walk is structural everywhere except index resolution:
+    ``_indexed_vjp`` reads the concrete values of gather/scatter indices
+    and dynamic-slice starts (and falls back to a value-independent
+    conservative rule when they are unknown).  These positions are the
+    only places where a leaf's value — as opposed to its shape/dtype —
+    can influence a mask: scan/while carries are never concrete inside
+    bodies, and ``cond`` unions branches without consulting the predicate.
+    """
+    name = eqn.primitive.name
+    if name == "gather":
+        return (1,)
+    if name.startswith("scatter"):
+        return (1,)
+    if name == "dynamic_slice":
+        return tuple(range(1, len(eqn.invars)))
+    if name == "dynamic_update_slice":
+        return tuple(range(2, len(eqn.invars)))
+    return ()
+
+
+def _param_jaxprs(eqn):
+    """Every sub-jaxpr reachable through ``eqn.params`` (one level)."""
+    for val in eqn.params.values():
+        items = val if isinstance(val, (list, tuple)) else (val,)
+        for sub in items:
+            if isinstance(sub, jex_core.ClosedJaxpr):
+                yield sub.jaxpr
+            elif isinstance(sub, jex_core.Jaxpr):
+                yield sub
+
+
+def _contains_dynamic_index(jaxpr, memo: Dict) -> bool:
+    """Does ``jaxpr`` (transitively) index with a non-literal operand?"""
+    key = ("dyn", id(jaxpr))
+    if key in memo:
+        return memo[key]
+    memo[key] = False
+    found = False
+    for eqn in jaxpr.eqns:
+        if any(not isinstance(eqn.invars[i], Literal)
+               for i in _index_operand_positions(eqn)):
+            found = True
+            break
+        if any(_contains_dynamic_index(sub, memo)
+               for sub in _param_jaxprs(eqn)):
+            found = True
+            break
+    memo[key] = found
+    return found
+
+
+def _needed_invars(jaxpr, memo: Dict) -> frozenset:
+    """Invar positions of ``jaxpr`` whose concrete values can reach an
+    index operand (at any nesting depth), assuming every var in this
+    jaxpr may be concretely known — exact at the top level (full forward
+    eval records every intermediate) and a sound over-approximation
+    inside bodies.  Mapping into bodies mirrors ``_sub_env``: scan/while
+    pass only their *const* operands concretely (carries and xs never
+    are), ``cond`` passes every branch operand, calls map invars 1:1.
+    """
+    key = ("need", id(jaxpr))
+    if key in memo:
+        return memo[key]
+    memo[key] = frozenset()          # jaxprs are acyclic; cheap guard
+    feeding: set = set()             # vars whose value reaches an index
+    changed = True
+    while changed:
+        changed = False
+        for eqn in reversed(jaxpr.eqns):
+            need = {i for i in _index_operand_positions(eqn)
+                    if not isinstance(eqn.invars[i], Literal)}
+            name = eqn.primitive.name
+            if name == "scan":
+                nc = eqn.params["num_consts"]
+                need |= {i for i in _needed_invars(
+                    eqn.params["jaxpr"].jaxpr, memo) if i < nc}
+            elif name == "while":
+                ncc = eqn.params["cond_nconsts"]
+                nbc = eqn.params["body_nconsts"]
+                need |= {i for i in _needed_invars(
+                    eqn.params["cond_jaxpr"].jaxpr, memo) if i < ncc}
+                need |= {ncc + i for i in _needed_invars(
+                    eqn.params["body_jaxpr"].jaxpr, memo) if i < nbc}
+            elif name == "cond":
+                for br in eqn.params["branches"]:
+                    need |= {1 + i for i in _needed_invars(br.jaxpr, memo)}
+            elif name in _RECURSE_CALLS:
+                sub = _inner_closed(eqn)
+                if sub is not None and \
+                        len(sub.jaxpr.invars) == len(eqn.invars):
+                    need |= _needed_invars(sub.jaxpr, memo)
+                elif any(_contains_dynamic_index(s, memo)
+                         for s in _param_jaxprs(eqn)):
+                    need.update(range(len(eqn.invars)))
+            elif any(_contains_dynamic_index(s, memo)
+                     for s in _param_jaxprs(eqn)):
+                # unknown higher-order primitive wrapping a dynamic index:
+                # assume every operand's value may reach it (sound)
+                need.update(range(len(eqn.invars)))
+            # transitive closure: anything feeding a value that later
+            # reaches an index operand is itself value-consulted
+            if any(not _is_drop(v) and v in feeding for v in eqn.outvars):
+                need.update(range(len(eqn.invars)))
+            for i in need:
+                v = eqn.invars[i]
+                if not isinstance(v, Literal) and v not in feeding:
+                    feeding.add(v)
+                    changed = True
+    res = frozenset(i for i, v in enumerate(jaxpr.invars) if v in feeding)
+    memo[key] = res
+    return res
+
+
+def index_feeding_invars(closed: jex_core.ClosedJaxpr) -> frozenset:
+    """Top-level invar positions whose *values* can influence the masks.
+
+    ``backward_taint`` consults concrete leaf values in exactly one
+    place: resolving the index operands of gather/scatter/dynamic_slice/
+    dynamic_update_slice (directly, or hoisted into control-flow bodies
+    via the loop-invariant sub-env).  An invar outside the returned set
+    cannot change any mask by changing value — the walk is purely
+    structural in it.  The set is a value-independent, conservative
+    over-approximation, so callers may key value-sensitive caches on a
+    digest of exactly these leaves (``repro.core.criticality``'s
+    static-prune cache does; re-using masks across different index values
+    would silently zero-mask leaves that became live).
+    """
+    return _needed_invars(closed.jaxpr, {})
+
+
+# --------------------------------------------------------------------------
 # Public API
 # --------------------------------------------------------------------------
 

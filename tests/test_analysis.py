@@ -29,6 +29,7 @@ from repro.analysis import (
 from repro.analysis.lint import main as lint_main
 from repro.checkpoint import CheckpointManager, Level
 from repro.core import ScrutinyConfig, scrutinize
+from repro.core.policy import LeafPolicy, default_leaf_policy
 from repro.core.taint import classify_rule
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -157,6 +158,88 @@ def test_manager_soundness_gate(tmp_path):
         mgr.close()
 
 
+def test_static_prune_tracks_index_values():
+    """The prune dead set is value-dependent (gather index operands): a
+    call on state with a different index must recompute, not reuse a
+    stale dead set that would zero out a now-live leaf's mask."""
+
+    def step(s):
+        picked = jnp.take(s["buf"], s["idx"], mode="fill", fill_value=0.0)
+        return {"out": (s["w"] ** 2).sum() + picked.sum()}
+
+    def state(idx):
+        return {"w": jnp.arange(4, dtype=jnp.float32),
+                "buf": jnp.arange(4, dtype=jnp.float32),
+                "idx": jnp.asarray(idx, dtype=jnp.int32)}
+
+    cfg = ScrutinyConfig(static_prune=True)
+    # out-of-range index: buf provably contributes nothing -> pruned
+    r_dead = scrutinize(step, state(99), config=cfg)
+    assert not r_dead["buf"].mask.any()
+    assert not r_dead.stats["static_prune_cached"]
+    # same structure, live index: must re-derive the dead set from the
+    # new value and sweep buf
+    r_live = scrutinize(step, state(2), config=cfg)
+    assert not r_live.stats["static_prune_cached"]
+    ref = scrutinize(step, state(2),
+                     config=ScrutinyConfig(static_prune=False))
+    for name in ("w", "buf"):
+        assert np.array_equal(r_live[name].mask, ref[name].mask), name
+    assert r_live["buf"].mask[2]
+    # identical index values hit the digest-keyed prune cache
+    r_again = scrutinize(step, state(2), config=cfg)
+    assert r_again.stats["static_prune_cached"]
+    assert np.array_equal(r_again["buf"].mask, r_live["buf"].mask)
+
+
+def test_soundness_flags_taint_pruned_leaves():
+    """Leaves pruned on taint evidence have a vacuously empty AD mask:
+    the gate must flag them as unverified, not count them as checked, and
+    check_pruned=True must close the gap with an un-pruned sweep."""
+
+    def wbr_step(s):
+        # buf fully overwritten before its only read: live to the reads
+        # walk (it is a dynamic_update_slice operand) but taint-dead
+        buf = jax.lax.dynamic_update_slice(s["buf"], s["w"][:4], (0,))
+        return {"out": (s["w"] ** 2).sum() + buf.sum()}
+
+    state = {"w": jnp.arange(8, dtype=jnp.float32),
+             "buf": jnp.ones(4, jnp.float32)}
+    report = scrutinize(wbr_step, state,
+                        config=ScrutinyConfig(static_prune=True))
+    assert not report["buf"].mask.any()
+    assert report.stats["static_taint_pruned_leaves"] == ["buf"]
+
+    res = verify_soundness(report, analyze_static(wbr_step, state))
+    assert res.ok
+    assert res.pruned_leaf_names == ("buf",) and res.pruned_leaves == 1
+    assert res.checked_leaves == 1            # only w was actually gated
+
+    # slow path: re-sweep without the prune and gate every leaf
+    audited = soundness_checker(wbr_step, check_pruned=True)(state, report)
+    assert audited.ok
+    assert audited.pruned_leaves == 0 and audited.checked_leaves == 2
+
+
+def test_static_pinned_float_stays_critical():
+    """int_dataflow must not override a user-pinned ALWAYS_CRITICAL
+    *float* leaf: the user's declaration wins over the dataflow mask (and
+    CKPT002 must not advise dropping the leaf)."""
+
+    def pin_scratch(leaf):
+        if leaf.ndim and leaf.shape == (6,) and \
+                jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return LeafPolicy.ALWAYS_CRITICAL
+        return default_leaf_policy(leaf)
+
+    cfg = ScrutinyConfig(leaf_policy=pin_scratch)
+    st = analyze_static(toy_step, toy_state(), config=cfg)
+    assert st["scratch"].mask.all()           # pinned, not dataflow-dead
+    assert st["step"].mask.all()              # int dataflow still applies
+    rules = {f.rule for f in lint_step(toy_step, toy_state(), config=cfg)}
+    assert "CKPT002" not in rules
+
+
 # --- lint: jaxpr pass -----------------------------------------------------
 
 def test_lint_step_missing_from_checkpoint():
@@ -252,6 +335,25 @@ def test_lint_file_key_not_saved():
     (f,) = lint_file("k.py", KEY_NOT_SAVED)
     assert (f.rule, f.severity) == ("CKPT103", "warning")
     assert f.details["key_var"] == "key"
+
+
+SUBKEY_ONLY_SAVED = """
+import jax
+key = jax.random.PRNGKey(0)
+key, subkey = jax.random.split(key)
+mgr.save(1, {"k": subkey})
+mgr.wait()
+"""
+
+
+def test_lint_file_key_substring_not_saved():
+    """'key' is not saved just because a save call mentions 'subkey':
+    CKPT103 must match identifiers exactly, not substrings."""
+    findings = {f.details.get("key_var"): f for f in
+                lint_file("k.py", SUBKEY_ONLY_SAVED)
+                if f.rule == "CKPT103"}
+    assert "key" in findings
+    assert "subkey" not in findings           # subkey really is saved
 
 
 def test_lint_file_clean_and_unparseable():
