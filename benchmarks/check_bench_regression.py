@@ -50,6 +50,14 @@ HEADLINES = {
         # generous absolute floor — a real regression (e.g. payload work
         # leaking into the commit phase) still blows past it
         ("coordinated.host_bytes_max", "lower"),
+        # end-to-end coordinated save (pipelined: batched pack -> streamed
+        # D2H -> overlapped shard writes) and the caller-blocked window of
+        # the async dispatch — the two headline wins of the pipelined
+        # coordinated path.  blocked_s gates with the same small floor as
+        # the single-host engine; save_s includes barrier rendezvous so it
+        # shares the commit-style floor
+        ("coordinated.save_s", "lower", TIMING_TOLERANCE, 0.30),
+        ("coordinated.blocked_s", "lower", TIMING_TOLERANCE, 0.01),
         ("coordinated.commit_s", "lower", TIMING_TOLERANCE, 0.30),
         # L2 partner replication rides the save path: the replica push is
         # two local writes (own + partner store) of the packed payload

@@ -58,10 +58,12 @@ composes (tests/test_coordinated.py).
 
 from __future__ import annotations
 
+import concurrent.futures as cf
 import dataclasses
 import json
 import os
 import shutil
+import threading
 import time
 import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -75,11 +77,12 @@ from repro.checkpoint.levels import (L1_RESIDENT, L2_PARTNER, L3_PARITY,
                                      ResidentCache, default_l2_root,
                                      partner_map, partner_of)
 from repro.checkpoint.manager import (CheckpointManager, Level,
-                                      update_report)
+                                      _host_snapshot, update_report)
 from repro.checkpoint.packing import (DeltaLeaf, delta_encode_host,
                                       packed_leaf_stub, unpack_leaf)
-from repro.checkpoint.pipeline import BytesSource, ViewSource
-from repro.checkpoint.store import (ShardReader, _delta_entry,
+from repro.checkpoint.pipeline import (BytesSource, ViewSource, as_u8,
+                                       fetch_to_host)
+from repro.checkpoint.store import (ALIVE_FILE, ShardReader, _delta_entry,
                                     _packed_entry, chain_steps,
                                     committed_steps, fuse_global_manifest,
                                     is_step_committed, load_checkpoint_raw,
@@ -202,12 +205,205 @@ class _LevelFetcher:
 @dataclasses.dataclass
 class _CoordChain:
     """Per-level differential-chain bookkeeping of *this host's* owned
-    segments (mirrors manager._ChainState at segment granularity)."""
+    segments (mirrors manager._ChainState at segment granularity).
+    ``sources`` is ``None`` while the step's write is still in flight on
+    the writer thread (the planner only chains off a landed save — the
+    per-level double buffer drains the previous write before planning)."""
     base_step: int
     chain: List[int]
     report: Any
     layout: Tuple                       # ((name, start, stop, dtype), ...)
     sources: Optional[Dict[Tuple[str, int, int], np.ndarray]] = None
+
+
+class _AliveToken:
+    """Rate-limited refresher for a pending dir's shared ``.alive``
+    liveness file.
+
+    The async coordinated save runs its long phases (chunked D2H, shard
+    writes, land/commit barriers, the degraded wait) on a writer thread;
+    every such phase calls this token so ``tmp_writer_alive`` keeps
+    judging the pending dir live and a peer leader's ``_gc`` never sweeps
+    an in-flight pipelined save as a carcass.  Creating the token creates
+    the file, so the window between ``mkdir`` and the first shard write is
+    covered too.
+    """
+
+    REFRESH_S = 2.0
+
+    def __init__(self, pending: str):
+        self.path = os.path.join(pending, ALIVE_FILE)
+        with open(self.path, "w"):
+            pass
+        self._last = time.monotonic()
+
+    def __call__(self) -> None:
+        now = time.monotonic()
+        if now - self._last < self.REFRESH_S:
+            return
+        self._last = now
+        try:
+            os.utime(self.path)
+        except OSError:
+            try:                        # swept under us: recreate
+                with open(self.path, "w"):
+                    pass
+            except OSError:
+                pass
+
+
+class _CoordSnapshot:
+    """One coordinated save's frozen view of this host's owned segments
+    (mirrors ``manager._SaveSnapshot`` at segment granularity).
+
+    Construction runs synchronously inside ``save()`` — it is *all* the
+    caller blocks for: ownership/segment classification, snapshot
+    isolation (pinned host views, pinned device slices), and the stage-1
+    batched pack dispatch — one ``pack_group`` call per (device, dtype)
+    group covering every masked owned segment, with payload sizes taken
+    from the resident report's critical counts (static, so sizing never
+    needs a counts D2H).  ``materialize()`` runs on the writer thread:
+    stage-2 chunked D2H of the group payloads plus the host-side gathers,
+    producing the exact per-segment payload bytes the pre-pipeline
+    per-segment ``pack_critical`` loop produced (byte identity is pinned
+    by tests/test_coordinated.py's matrix rows).
+    """
+
+    def __init__(self, mgr: "CoordinatedCheckpointManager", state, report):
+        self.engine = mgr._engine
+        self._pack_opts = mgr._pack_opts
+        device = (mgr.save_mode != "host" and report is not None)
+        self.segs: List[Dict[str, Any]] = []
+        self._views: Dict[str, np.ndarray] = {}       # host leaf -> flat view
+        self._pinned: Dict[Tuple[str, int, int], Any] = {}
+        self._groups: Dict[Any, Dict[str, Any]] = {}
+        self._lock = threading.Lock()
+        self._result = None
+        self.d2h_bytes = 0
+        layout = []
+        for name, leaf, sh in mgr._flat_state(state)[0]:
+            shape = tuple(getattr(leaf, "shape", ()))
+            dtype = (str(leaf.dtype) if hasattr(leaf, "dtype")
+                     else str(np.asarray(leaf).dtype))
+            itemsize = np.dtype(dtype).itemsize
+            rep = report.leaves.get(name) if report is not None else None
+            segs = owned_ranges(shape, mgr.ctx, sh)
+            row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
+            distributed = (isinstance(leaf, jax.Array)
+                           and not getattr(leaf, "is_fully_addressable",
+                                           True))
+            for flo, fhi in segs:
+                seg_n = fhi - flo
+                mask_seg = None
+                total = seg_n
+                if rep is not None and not rep.all_critical:
+                    mask_seg = np.asarray(rep.mask[flo:fhi], bool)
+                    total = int(mask_seg.sum())
+                seg = {"name": name, "flo": int(flo), "fhi": int(fhi),
+                       "shape": shape, "dtype": dtype, "mask": mask_seg,
+                       "nbytes": total * itemsize}
+                is_dev = isinstance(leaf, jax.Array) and seg_n > 0
+                use_xla = self.engine == "xla" and is_dev
+                if distributed and seg_n > 0:
+                    flat_seg = mgr._local_flat_segment(leaf, flo, fhi, row)
+                elif use_xla:
+                    flat_seg = jnp.ravel(leaf)[flo:fhi]
+                else:
+                    flat_seg = None
+                if use_xla and device and mask_seg is not None:
+                    # stage 1: group member — one compiled pack per
+                    # (device, dtype) group, payload size static
+                    key = (dtype, tuple(sorted(
+                        str(d) for d in leaf.devices())))
+                    g = self._groups.setdefault(
+                        key, {"flats": [], "masks": [], "totals": [],
+                              "keys": []})
+                    g["flats"].append(flat_seg)
+                    g["masks"].append(jnp.asarray(mask_seg))
+                    g["totals"].append(total)
+                    g["keys"].append((name, int(flo), int(fhi)))
+                    seg["kind"] = "group"
+                    seg["key"] = key
+                elif flat_seg is not None:
+                    # pinned device slice, fetched (xla) or viewed (host
+                    # backend of a distributed leaf) on the writer thread
+                    self._pinned[(name, int(flo), int(fhi))] = flat_seg
+                    seg["kind"] = "dev"
+                else:
+                    if name not in self._views and seg_n > 0:
+                        self._views[name] = \
+                            _host_snapshot(leaf).reshape(-1)
+                    seg["kind"] = "host"
+                self.segs.append(seg)
+                layout.append((name, int(flo), int(fhi), dtype))
+        self.layout = tuple(layout)
+        for g in self._groups.values():
+            payload, _counts = mask_ops.pack_group(
+                g["flats"], g["masks"], g["totals"],
+                use_kernel=self._pack_opts["use_kernel"],
+                interpret=self._pack_opts["interpret"])
+            ranges, lo = {}, 0
+            for k, t in zip(g["keys"], g["totals"]):
+                ranges[k] = (lo, lo + t)
+                lo += t
+            g["payload"], g["ranges"] = payload, ranges
+
+    def materialize(self, heartbeat=None):
+        """Writer-thread half: D2H the batched group payloads (chunked,
+        double-buffered), fetch pinned raw segments, run the host-side
+        gathers.  Memoized — every level's write job shares one
+        materialization.  Returns ``(items, sources)`` where items are
+        ``(name, flo, fhi, meta, payload_u8)`` in flat-state order and
+        sources map segment keys to the uint8 payload views (the delta
+        sources, the L1/L2 payloads, and the stage-3 write views are all
+        the same buffers — partner payloads fork off the stage-2 stream
+        instead of re-packing)."""
+        with self._lock:
+            if self._result is not None:
+                return self._result
+            group_host = {
+                key: fetch_to_host([g["payload"]], heartbeat=heartbeat)
+                for key, g in self._groups.items()}
+            self.d2h_bytes += sum(b.nbytes for b in group_host.values())
+            items, sources = [], {}
+            for seg in self.segs:
+                name, flo, fhi = seg["name"], seg["flo"], seg["fhi"]
+                itemsize = np.dtype(seg["dtype"]).itemsize
+                mask_seg = seg["mask"]
+                if seg["kind"] == "group":
+                    g = self._groups[seg["key"]]
+                    lo, hi = g["ranges"][(name, flo, fhi)]
+                    u8 = group_host[seg["key"]][lo * itemsize:hi * itemsize]
+                elif seg["kind"] == "dev":
+                    flat_seg = self._pinned[(name, flo, fhi)]
+                    if self.engine == "xla" and mask_seg is None:
+                        u8 = fetch_to_host([flat_seg], heartbeat=heartbeat)
+                        self.d2h_bytes += u8.nbytes
+                    else:
+                        arr = np.asarray(flat_seg)
+                        payload = (np.ascontiguousarray(arr[mask_seg])
+                                   if mask_seg is not None
+                                   else np.ascontiguousarray(arr))
+                        u8 = as_u8(payload)
+                        self.d2h_bytes += u8.nbytes
+                else:
+                    flat = self._views.get(name)
+                    seg_arr = (flat[flo:fhi] if flat is not None
+                               else np.zeros(0, np.dtype(seg["dtype"])))
+                    payload = (seg_arr[mask_seg] if mask_seg is not None
+                               else np.ascontiguousarray(seg_arr))
+                    u8 = as_u8(payload)
+                    self.d2h_bytes += u8.nbytes
+                if heartbeat is not None:
+                    heartbeat()
+                stub = packed_leaf_stub(name, (fhi - flo,), seg["dtype"],
+                                        mask_seg, int(u8.nbytes))
+                meta = _packed_entry(stub)
+                meta.update(shape=list(seg["shape"]), start=flo, stop=fhi)
+                items.append((name, flo, fhi, meta, u8))
+                sources[(name, flo, fhi)] = u8
+            self._result = (items, sources)
+            return self._result
 
 
 class CoordinatedCheckpointManager:
@@ -228,10 +424,17 @@ class CoordinatedCheckpointManager:
     when a leaf's spec tiles its leading axis over a multi-process mesh,
     ownership follows device placement instead of the uniform split.
 
-    Coordinated saves are synchronous (barriers bound the commit) and do
-    not support precision tiering or parity on per-host files (they carry
-    their own checksums; lost-file resilience comes from the L2 partner
-    replicas instead).
+    Coordinated saves run the same three-stage async pipeline as the
+    single-process manager: ``save(block=False)`` blocks the caller only
+    for snapshot isolation + the batched stage-1 pack dispatch, then the
+    chunked D2H, shard writes, land/commit barriers, and leader manifest
+    fusion all run on a writer thread (per level at most one save is in
+    flight — double buffering; ``wait()``/``close()`` drain and surface
+    writer errors exactly once, so a barrier timeout from a dead peer
+    raises from the *next* ``save``/``wait``/``close``).  Coordinated
+    saves do not support precision tiering or parity on per-host files
+    (they carry their own checksums; lost-file resilience comes from the
+    L2 partner replicas instead).
 
     **Resilience hierarchy** (``checkpoint.levels``): every save lands at
     four levels — L1 this process's resident packed payloads
@@ -265,6 +468,7 @@ class CoordinatedCheckpointManager:
                  pack_interpret: bool = False,
                  barrier_timeout_s: Optional[float] = None,
                  pending_ttl_s: float = 600.0,
+                 pipeline_engine: str = "auto",
                  force_coordinated: bool = False,
                  partner_replication: bool = True,
                  degraded_saves: bool = True,
@@ -277,6 +481,8 @@ class CoordinatedCheckpointManager:
             raise ValueError(f"unknown save_mode {save_mode!r}")
         if restore_mode not in ("auto", "host", "device"):
             raise ValueError(f"unknown restore_mode {restore_mode!r}")
+        if pipeline_engine not in ("auto", "host", "xla"):
+            raise ValueError(f"unknown pipeline_engine {pipeline_engine!r}")
         self.coll = collective if collective is not None else get_collective()
         self.ctx = self.coll.ctx
         self.levels = list(levels)
@@ -295,6 +501,8 @@ class CoordinatedCheckpointManager:
         self.barrier_timeout_s = barrier_timeout_s
         self.pending_ttl_s = float(pending_ttl_s)
         self._inner: Optional[CheckpointManager] = None
+        self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._io_pool: Optional[cf.ThreadPoolExecutor] = None
         if self.ctx.count == 1 and not force_coordinated:
             self._inner = CheckpointManager(
                 levels, scrutiny_fn=scrutiny_fn,
@@ -303,6 +511,7 @@ class CoordinatedCheckpointManager:
                 delta_chunk_bytes=delta_chunk_bytes,
                 pack_use_kernel=pack_use_kernel,
                 pack_interpret=pack_interpret,
+                pipeline_engine=pipeline_engine,
                 soundness_check=soundness_check, **manager_kwargs)
         else:
             if manager_kwargs:
@@ -314,6 +523,21 @@ class CoordinatedCheckpointManager:
                     "these tune the single-process pipelined manager only")
             for lv in self.levels:
                 os.makedirs(lv.directory, exist_ok=True)
+            # writer pools mirroring the single-process manager: one
+            # pipeline job per level (double-buffered), an io pool for
+            # overlapped per-shard writes
+            max_shards = max((lv.shards for lv in self.levels), default=1)
+            self._pool = cf.ThreadPoolExecutor(
+                max_workers=max(1, len(self.levels)))
+            self._io_pool = cf.ThreadPoolExecutor(
+                max_workers=max(2, max_shards))
+        if pipeline_engine == "auto":
+            pipeline_engine = ("host" if jax.default_backend() == "cpu"
+                               else "xla")
+        self._engine = pipeline_engine
+        self._inflight: Dict[str, cf.Future] = {}
+        self._lock = threading.Lock()
+        self._seq_done: Dict[str, int] = {}
         self._seq = 0
         self._saves = 0
         self._closed = False
@@ -338,15 +562,45 @@ class CoordinatedCheckpointManager:
         self.close()
 
     def close(self) -> None:
-        if self._inner is not None:
-            self._inner.close()
-        if not self._closed:
+        """Drain in-flight coordinated saves (surfacing writer errors
+        exactly once), shut the writer pools down, close the collective.
+        Idempotent."""
+        if self._closed:
+            return
+        try:
+            if self._inner is not None:
+                self._inner.close()
+            else:
+                try:
+                    self.wait()
+                finally:
+                    if self._pool is not None:
+                        self._pool.shutdown(wait=True)
+                        self._pool = None
+                    if self._io_pool is not None:
+                        self._io_pool.shutdown(wait=True)
+                        self._io_pool = None
+        finally:
+            self._closed = True
             self.coll.close()
-        self._closed = True
 
     def wait(self) -> None:
+        """Block until every in-flight save has landed; raise the first
+        writer error (each error is raised exactly once — a drained
+        future is removed before its result is collected)."""
         if self._inner is not None:
-            self._inner.wait()
+            return self._inner.wait()
+        futs = list(self._inflight.values())
+        self._inflight.clear()
+        first: Optional[BaseException] = None
+        for fut in futs:
+            try:
+                fut.result()
+            except BaseException as e:   # noqa: BLE001 - re-raised below
+                if first is None:
+                    first = e
+        if first is not None:
+            raise first
 
     # --- scrutiny --------------------------------------------------------
 
@@ -366,27 +620,62 @@ class CoordinatedCheckpointManager:
     # --- save ------------------------------------------------------------
 
     def save(self, step: int, state, block: bool = False):
-        """Coordinated save: each firing level runs the two-phase commit.
-        Always synchronous on the coordinated path — returns when the step
-        is committed (or raises on any host/leader failure; the step is
-        then not visible anywhere).  ``block`` only matters on the
-        single-process delegate path, where it keeps the inner manager's
-        pipelined-async default."""
+        """Coordinated save, pipelined and async: the caller blocks only
+        for scrutiny (when due), snapshot isolation, the stage-1 batched
+        pack dispatch, and the chain plan — the chunked D2H, L2
+        replication, shard writes, and the whole two-phase commit
+        (barriers + leader fusion) run on a writer thread.  Per level at
+        most one save is in flight: a second ``save`` first drains the
+        previous write (backpressure; also what keeps barrier sequence
+        tags aligned across hosts).  Writer errors — including a peer
+        death's ``BarrierTimeout`` — surface exactly once, from the next
+        ``save``/``wait``/``close`` (or from this call with
+        ``block=True``)."""
         if self._inner is not None:
             return self._inner.save(step, state, block=block)
         if self._closed:
             raise RuntimeError("CoordinatedCheckpointManager is closed")
+        t0 = time.perf_counter()
         report = self._maybe_report(state)
         self._saves += 1
         stats = {"mode": "coordinated", "process": self.ctx.index,
                  "process_count": self.ctx.count, "levels": {},
-                 "host_bytes_written": 0, "d2h_bytes": 0}
+                 "host_bytes_written": 0, "d2h_bytes": 0, "blocked_s": 0.0}
         self.last_save_stats = stats
+        snap = _CoordSnapshot(self, state, report)
+        fired: List[Level] = []
+        futs: List[cf.Future] = []
         for lv in self.levels:
             if step % lv.interval:
                 continue
-            self._save_level(lv, step, state, report, stats)
-        return []
+            # double buffer: drain the previous in-flight save for this
+            # level on the caller thread (its error propagates here, once)
+            prev = self._inflight.pop(lv.directory, None)
+            if prev is not None:
+                prev.result()
+            self._seq += 1
+            seq = self._seq
+            tag = f"q{seq}.L{self.levels.index(lv)}"
+            plan = self._plan_level(lv, step, report, snap)
+            fut = self._pool.submit(self._run_level, lv, step, seq, tag,
+                                    snap, plan, stats)
+            self._inflight[lv.directory] = fut
+            fired.append(lv)
+            futs.append(fut)
+        stats["blocked_s"] = time.perf_counter() - t0
+        if block:
+            first: Optional[BaseException] = None
+            for lv, fut in zip(fired, futs):
+                if self._inflight.get(lv.directory) is fut:
+                    del self._inflight[lv.directory]
+                try:
+                    fut.result()
+                except BaseException as e:  # noqa: BLE001 - re-raised
+                    if first is None:
+                        first = e
+            if first is not None:
+                raise first
+        return futs
 
     @staticmethod
     def _shard_leaves(shardings, flat, what: str):
@@ -435,72 +724,45 @@ class CoordinatedCheckpointManager:
             f"addressable shard — pass `shardings` whose PartitionSpec "
             f"tiles the leading axis, or keep the state replicated")
 
-    def _owned_items(self, state, report, stats):
-        """Pack this host's owned segments of every leaf.  Returns
-        ``(items, sources, layout)``: stream items for the per-host writer,
-        the per-segment payload arrays (delta-chain sources), and the
-        hashable segment layout."""
-        device = (self.save_mode != "host" and report is not None)
-        items, sources, layout = [], {}, []
-        for name, leaf, sh in self._flat_state(state)[0]:
-            shape = tuple(getattr(leaf, "shape", ()))
-            dtype = (str(leaf.dtype) if hasattr(leaf, "dtype")
-                     else str(np.asarray(leaf).dtype))
-            rep = report.leaves.get(name) if report is not None else None
-            segs = owned_ranges(shape, self.ctx, sh)
-            row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
-            distributed = (isinstance(leaf, jax.Array)
-                           and not getattr(leaf, "is_fully_addressable",
-                                           True))
-            host_flat = None
-            for flo, fhi in segs:
-                seg_n = fhi - flo
-                mask_seg = None
-                if rep is not None and not rep.all_critical:
-                    mask_seg = np.asarray(rep.mask[flo:fhi], bool)
-                use_dev = (device and mask_seg is not None
-                           and isinstance(leaf, jax.Array) and seg_n > 0)
-                if distributed and seg_n > 0:
-                    # real multi-controller: fetch only the local shard's
-                    # slice; np.asarray on the global array would throw
-                    flat_seg = self._local_flat_segment(leaf, flo, fhi, row)
-                elif use_dev:
-                    flat_seg = jnp.ravel(leaf)[flo:fhi]
-                else:
-                    flat_seg = None
-                if use_dev:
-                    payload, _counts, moved = mask_ops.pack_critical(
-                        flat_seg, mask_seg, **self._pack_opts)
-                    stats["d2h_bytes"] += int(moved)
-                elif flat_seg is not None:      # distributed, no device pack
-                    seg = np.asarray(flat_seg)
-                    payload = seg[mask_seg] if mask_seg is not None else seg
-                    stats["d2h_bytes"] += int(payload.nbytes)
-                else:
-                    if host_flat is None:
-                        host_flat = np.asarray(leaf).reshape(-1)
-                    seg = host_flat[flo:fhi]
-                    payload = seg[mask_seg] if mask_seg is not None else seg
-                    stats["d2h_bytes"] += int(payload.nbytes)
-                payload = np.ascontiguousarray(payload)
-                # stub meta: the stream writer CRCs chunks incrementally
-                # and finalizes the checksum (stage-3 reuse); the stub
-                # validates payload size against the segment mask
-                stub = packed_leaf_stub(name, (seg_n,), dtype, mask_seg,
-                                        int(payload.nbytes))
-                meta = _packed_entry(stub)
-                meta.update(shape=list(shape), start=int(flo), stop=int(fhi))
-                items.append((name, flo, fhi, meta, payload))
-                sources[(name, flo, fhi)] = payload.view(
-                    np.uint8).reshape(-1)
-                layout.append((name, flo, fhi, dtype))
-        return items, sources, tuple(layout)
-
     def _delta_ok(self, lv: Level, cs: Optional[_CoordChain], report,
                   layout) -> bool:
         return (cs is not None and cs.sources is not None
                 and len(cs.chain) < lv.max_chain
                 and report is cs.report and layout == cs.layout)
+
+    def _plan_level(self, lv: Level, step: int, report,
+                    snap: _CoordSnapshot) -> Dict[str, Any]:
+        """Synchronous chain plan for one level (runs on the caller
+        thread, after the previous in-flight save for this level drained,
+        so the base/delta decision is identical on every host and the
+        chain state is mutated race-free).  The delta *encoding* happens
+        on the writer thread from the captured previous sources."""
+        cs = self._chains.get(lv.directory)
+        if lv.max_chain > 0 and self._delta_ok(lv, cs, report, snap.layout):
+            chain = [cs.base_step] + list(cs.chain) + [step]
+            prev_sources = cs.sources
+            cs.chain.append(step)
+            cs.sources = None       # set again when this write lands
+            return {"kind": "delta", "chain": chain,
+                    "prev_sources": prev_sources, "cs": cs}
+        target = None
+        if lv.max_chain > 0:
+            target = _CoordChain(base_step=step, chain=[], report=report,
+                                 layout=snap.layout, sources=None)
+            self._chains[lv.directory] = target
+        return {"kind": "base", "chain": [], "prev_sources": None,
+                "cs": target}
+
+    def _drop_chain(self, lv: Level, cs: Optional[_CoordChain]) -> None:
+        """A chained write failed on the writer thread: the chain must
+        never reference a step that did not commit.  Identity-guarded so
+        a newer chain installed meanwhile is left alone."""
+        with self._lock:
+            if cs is not None and self._chains.get(lv.directory) is cs:
+                del self._chains[lv.directory]
+
+    def _submit_io(self):
+        return self._io_pool.submit if self._io_pool is not None else None
 
     # --- resilience levels ----------------------------------------------
 
@@ -529,38 +791,49 @@ class CoordinatedCheckpointManager:
                 return self._l2_stack(lv)
         return None
 
-    def _save_level(self, lv: Level, step: int, state, report, stats):
+    def _run_level(self, lv: Level, step: int, seq: int, tag: str,
+                   snap: _CoordSnapshot, plan: Dict[str, Any], stats):
+        """One level's pipelined save, on the writer thread: stage-2
+        materialization (chunked D2H / host gathers), L2 replication
+        forked off the same host buffers, stage-3 overlapped shard writes
+        into the pending dir, then the land/commit protocol.  The
+        ``_AliveToken`` heartbeat threads through every long phase so a
+        peer's ``_gc`` keeps seeing the pending dir as live."""
         t0 = time.perf_counter()
-        lv_index = self.levels.index(lv)
+        kind, chain = plan["kind"], plan["chain"]
         pending = os.path.join(lv.directory, f".pending_step_{step}")
         os.makedirs(pending, exist_ok=True)
-        items, sources, layout = self._owned_items(state, report, stats)
-
-        cs = self._chains.get(lv.directory)
-        chain: List[int] = []
-        self._seq += 1
-        tag = f"q{self._seq}.L{lv_index}"
+        alive = _AliveToken(pending)
         l2 = self._l2_stack(lv)
         survivors = list(range(self.ctx.count))
+        lv_stats: Dict[str, Any] = {"kind": kind}
+        with self._lock:
+            stats["levels"][lv.directory] = lv_stats
         try:
+            tp = time.perf_counter()
+            items, sources = snap.materialize(heartbeat=alive)
+            lv_stats["pack_s"] = time.perf_counter() - tp
+            with self._lock:
+                stats["d2h_bytes"] = snap.d2h_bytes
             self._fire("pack_done", name=tag, step=step)
             if l2 is not None:
                 tr = time.perf_counter()
                 rep = l2.replicate(step, items)
-                stats.setdefault("l2_bytes_replicated", 0)
-                stats["l2_bytes_replicated"] += (rep["l2_local_bytes"]
-                                                 + rep["l2_partner_bytes"])
+                with self._lock:
+                    stats.setdefault("l2_bytes_replicated", 0)
+                    stats["l2_bytes_replicated"] += (
+                        rep["l2_local_bytes"] + rep["l2_partner_bytes"])
                 rep["replicate_s"] = time.perf_counter() - tr
             else:
                 rep = {}
+            alive()
             self._fire("after_replicate", name=tag, step=step)
-            if lv.max_chain > 0 and self._delta_ok(lv, cs, report, layout):
-                kind = "delta"
-                chain = [cs.base_step] + list(cs.chain) + [step]
+            if kind == "delta":
+                prev_sources = plan["prev_sources"]
                 entries = []
                 for name, flo, fhi, meta, payload in items:
                     curr = sources[(name, flo, fhi)]
-                    prev = cs.sources[(name, flo, fhi)]
+                    prev = prev_sources[(name, flo, fhi)]
                     idx, pay = delta_encode_host(curr, prev,
                                                  self.delta_chunk_bytes)
                     pay_b = pay.tobytes()
@@ -574,36 +847,32 @@ class CoordinatedCheckpointManager:
                               stop=meta["stop"])
                     entries.append((dm, len(d.payload),
                                     BytesSource(bytes(d.payload))))
-                cs.chain.append(step)
-                cs.sources = sources
             else:
-                kind = "base"
                 # zero-copy chunked streams over the packed host payloads
                 # (stage-2 reuse: the writer consumes ViewSource chunks)
                 entries = [(meta, int(payload.nbytes), ViewSource([payload]))
                            for _, _, _, meta, payload in items]
-                if lv.max_chain > 0:
-                    self._chains[lv.directory] = _CoordChain(
-                        base_step=step, chain=[], report=report,
-                        layout=layout, sources=sources)
 
             extra = {"step": int(step), "process_count": self.ctx.count,
                      "kind": kind}
             if chain:
                 extra["chain"] = [int(s) for s in chain[:-1]]
+            tw = time.perf_counter()
             write_host_entries(pending, self.ctx.index, entries,
-                               shards=lv.shards, extra=extra)
+                               shards=lv.shards, extra=extra,
+                               submit=self._submit_io())
             written = sum(int(n) for _, n, _ in entries)
-            stats["host_bytes_written"] += written
-            lv_stats = {"kind": kind, "host_bytes_written": written,
-                        "write_s": time.perf_counter() - t0}
+            with self._lock:
+                stats["host_bytes_written"] += written
+            lv_stats["host_bytes_written"] = written
+            lv_stats["write_s"] = time.perf_counter() - tw
             lv_stats.update(rep)
-            stats["levels"][lv.directory] = lv_stats
             self._fire("after_land_write", name=tag, step=step)
 
             t1 = time.perf_counter()
             survivors, degraded, recovered = self._land(
-                tag, lv, step, pending, kind, l2, lv_stats)
+                tag, lv, step, pending, kind, l2, lv_stats,
+                heartbeat=alive)
             lv_stats["land_barrier_s"] = time.perf_counter() - t1
             if self.ctx.index == survivors[0]:
                 t2 = time.perf_counter()
@@ -612,14 +881,19 @@ class CoordinatedCheckpointManager:
                                       degraded=degraded)
                 lv_stats["commit_s"] = time.perf_counter() - t2
             self._fire("before_commit_barrier", name=tag, step=step)
-            self._commit_barrier(tag, lv, step, survivors, lv_stats)
+            self._commit_barrier(tag, lv, step, survivors, lv_stats,
+                                 heartbeat=alive)
             self._fire("after_commit", name=tag, step=step)
         except BaseException:
             # the chain must never reference a step that did not commit
-            self._chains.pop(lv.directory, None)
+            self._drop_chain(lv, plan["cs"])
             raise
+        with self._lock:
+            if plan["cs"] is not None \
+                    and self._chains.get(lv.directory) is plan["cs"]:
+                plan["cs"].sources = sources
         self._l1.put(lv.directory, step, items)
-        self.coll.cleanup(self._seq - 1)
+        self._cleanup_barriers(lv, seq)
         if self.ctx.index == survivors[0]:
             self._gc(lv)
         if l2 is not None:
@@ -630,10 +904,26 @@ class CoordinatedCheckpointManager:
             l2.gc(steps[-lv.keep_n:] if lv.keep_n else steps)
         lv_stats["total_s"] = time.perf_counter() - t0
 
+    def _cleanup_barriers(self, lv: Level, seq: int) -> None:
+        """Barrier-file cleanup threshold for concurrent per-level saves:
+        drop this process's rendezvous files only below the *minimum*
+        completed sequence across levels.  Any seq below that minimum
+        belongs to a level whose later save completed — and per-level
+        saves are serial, so every participant passed the earlier
+        rendezvous; deleting our file for it can never stall a peer.
+        In-flight or failed saves freeze the threshold (bounded residue;
+        the FileCollective leader sweeps leftovers at construction)."""
+        with self._lock:
+            done = self._seq_done
+            done[lv.directory] = max(done.get(lv.directory, 0), int(seq))
+            threshold = min(done.values())
+        self.coll.cleanup(threshold)
+
     # --- failure detection & degraded commit -----------------------------
 
     def _land(self, tag: str, lv: Level, step: int, pending: str,
-              kind: str, l2: Optional[L2Stack], lv_stats):
+              kind: str, l2: Optional[L2Stack], lv_stats,
+              heartbeat: Optional[Any] = None):
         """The land barrier, with degradation: on a ``BarrierTimeout`` the
         surviving quorum recovers the dead hosts' current-step segments
         from their partners' L2 replicas and re-runs the rendezvous over
@@ -641,7 +931,8 @@ class CoordinatedCheckpointManager:
         recovered_manifests)``."""
         name = f"{tag}.land"
         try:
-            self.coll.barrier(name, timeout=self.barrier_timeout_s)
+            self.coll.barrier(name, timeout=self.barrier_timeout_s,
+                              heartbeat=heartbeat)
             return list(range(self.ctx.count)), None, None
         except BarrierTimeout as e:
             if not (self.degraded_saves and l2 is not None and e.missing):
@@ -678,16 +969,18 @@ class CoordinatedCheckpointManager:
                     json.dump(degraded, f)
                 os.rename(tmp, deg_path)
             else:
-                degraded = self._await_degraded(deg_path, e)
+                degraded = self._await_degraded(deg_path, e,
+                                                heartbeat=heartbeat)
                 survivors = [int(p) for p in degraded["survivors"]]
                 if self.ctx.index not in survivors:
                     raise
             lv_stats["degraded"] = degraded
             self.coll.barrier(f"{name}2", timeout=self.barrier_timeout_s,
-                              participants=survivors)
+                              participants=survivors, heartbeat=heartbeat)
             return survivors, degraded, recovered
 
-    def _await_degraded(self, deg_path: str, orig: BarrierTimeout):
+    def _await_degraded(self, deg_path: str, orig: BarrierTimeout,
+                        heartbeat: Optional[Any] = None):
         """Non-leading survivors wait for the recovery leader's degraded
         plan (it is authoritative: per-host ``missing`` views can differ
         by stragglers)."""
@@ -697,6 +990,8 @@ class CoordinatedCheckpointManager:
         deadline = time.monotonic() + float(timeout)
         poll = 0.01
         while time.monotonic() <= deadline:
+            if heartbeat is not None:
+                heartbeat()
             try:
                 with open(deg_path) as f:
                     return json.load(f)
@@ -732,7 +1027,8 @@ class CoordinatedCheckpointManager:
             return json.load(f)
 
     def _commit_barrier(self, tag: str, lv: Level, step: int,
-                        survivors: List[int], lv_stats) -> None:
+                        survivors: List[int], lv_stats,
+                        heartbeat: Optional[Any] = None) -> None:
         """The commit barrier tolerates members dying *after* the commit
         marker landed: the step is durably visible, so survivors report
         the missing hosts instead of failing a complete checkpoint."""
@@ -741,7 +1037,8 @@ class CoordinatedCheckpointManager:
         try:
             self.coll.barrier(f"{tag}.commit",
                               timeout=self.barrier_timeout_s,
-                              participants=participants)
+                              participants=participants,
+                              heartbeat=heartbeat)
         except BarrierTimeout as e:
             if not is_step_committed(lv.directory, step):
                 raise

@@ -229,11 +229,14 @@ class TransferStream:
 
 
 def fetch_to_host(dev_flats: Sequence[Any],
-                  chunk_bytes: int = D2H_CHUNK_BYTES) -> np.ndarray:
+                  chunk_bytes: int = D2H_CHUNK_BYTES,
+                  heartbeat: Optional[Any] = None) -> np.ndarray:
     """Materialize flat device segments into one contiguous host uint8
     buffer via the same double-buffered chunked fetch (used when a stream
     cannot be consumed exactly once, e.g. several levels writing the same
-    step)."""
+    step).  ``heartbeat`` (a zero-arg callable) is invoked once per chunk
+    so a long transfer on a writer thread can keep liveness tokens fresh
+    without owning the loop."""
     total = sum(int(a.shape[0]) * np.dtype(a.dtype).itemsize
                 for a in dev_flats)
     out = np.empty(total, np.uint8)
@@ -242,6 +245,8 @@ def fetch_to_host(dev_flats: Sequence[Any],
         for h in device_chunks(arr, chunk_bytes):
             out[off:off + h.nbytes] = h
             off += h.nbytes
+            if heartbeat is not None:
+                heartbeat()
     return out
 
 

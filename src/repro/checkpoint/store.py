@@ -71,7 +71,7 @@ import os
 import shutil
 import time
 import zlib
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -569,7 +569,9 @@ def host_shard_prefix(host: int) -> str:
 def write_host_entries(pending_dir: str, host: int, entries: List[Any],
                        shards: int = 1,
                        extra: Optional[Dict[str, Any]] = None,
-                       prefix: Optional[str] = None) -> str:
+                       prefix: Optional[str] = None,
+                       submit: Optional[Any] = None,
+                       order: Optional[Sequence[int]] = None) -> str:
     """Phase 1 of the coordinated commit: write one host's owned entries
     into the shared pending dir.
 
@@ -582,7 +584,11 @@ def write_host_entries(pending_dir: str, host: int, entries: List[Any],
     *global* shape.  ``prefix`` overrides the shard-file prefix — the
     degraded-save recovery writes a dead host's entries under a distinct
     prefix so a stalled-but-alive original writer can never race the
-    recovery bytes.
+    recovery bytes.  ``submit``/``order`` thread through to the stream
+    writer: an executor submit function overlaps per-shard writes when
+    every source is ready and ``shards > 1`` (the coordinated stage-3
+    overlap), ``order`` pins the serial consumption order for streaming
+    sources.
     """
     items = [e if isinstance(e, tuple) else _as_stream_item(e)
              for e in entries]
@@ -595,7 +601,7 @@ def write_host_entries(pending_dir: str, host: int, entries: List[Any],
     index, shard_sizes = _stream_to_files(
         pending_dir, items, shards,
         prefix=prefix if prefix is not None else host_shard_prefix(host),
-        touch=alive)
+        submit=submit, order=order, touch=alive)
     manifest = {"host": int(host), "shards": int(shards),
                 "payload_bytes": int(sum(shard_sizes)), "leaves": index}
     if extra:

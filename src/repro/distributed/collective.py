@@ -43,7 +43,7 @@ import os
 import random
 import re
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 _ENV_INDEX = "REPRO_PROCESS_INDEX"
 _ENV_COUNT = "REPRO_PROCESS_COUNT"
@@ -123,7 +123,12 @@ class Collective:
         self.ctx = ctx
 
     def barrier(self, name: str, timeout: Optional[float] = None,
-                participants: Optional[Sequence[int]] = None) -> None:
+                participants: Optional[Sequence[int]] = None,
+                heartbeat: Optional[Any] = None) -> None:
+        """Rendezvous ``name`` with the other participants.  ``heartbeat``
+        (a zero-arg callable) is invoked on every poll iteration by
+        backends that wait by polling — a barrier running on a writer
+        thread uses it to keep ``.alive`` liveness tokens fresh."""
         raise NotImplementedError
 
     def cleanup(self, before_seq: int) -> None:
@@ -144,7 +149,8 @@ class NullCollective(Collective):
             raise ValueError("NullCollective requires process_count == 1")
 
     def barrier(self, name: str, timeout: Optional[float] = None,
-                participants: Optional[Sequence[int]] = None) -> None:
+                participants: Optional[Sequence[int]] = None,
+                heartbeat: Optional[Any] = None) -> None:
         return None
 
 
@@ -160,7 +166,8 @@ class JaxCollective(Collective):
                                                jax.process_count()))
 
     def barrier(self, name: str, timeout: Optional[float] = None,
-                participants: Optional[Sequence[int]] = None) -> None:
+                participants: Optional[Sequence[int]] = None,
+                heartbeat: Optional[Any] = None) -> None:
         # participants is ignored: the fabric barrier has no membership
         # control (a dead host fails the whole job at the runtime layer,
         # so a degraded quorum never reaches this backend)
@@ -215,7 +222,8 @@ class FileCollective(Collective):
                             f"b_{_NAME_RE.sub('_', name)}.p{index}")
 
     def barrier(self, name: str, timeout: Optional[float] = None,
-                participants: Optional[Sequence[int]] = None) -> None:
+                participants: Optional[Sequence[int]] = None,
+                heartbeat: Optional[Any] = None) -> None:
         procs = (sorted(set(int(p) for p in participants))
                  if participants is not None else list(range(self.ctx.count)))
         if self.ctx.index not in procs:
@@ -228,6 +236,8 @@ class FileCollective(Collective):
         poll = self.poll_s
         last_missing = len(procs)
         while True:
+            if heartbeat is not None:
+                heartbeat()
             missing = [j for j in procs
                        if not os.path.exists(self._path(name, j))]
             if not missing:

@@ -1,0 +1,73 @@
+"""JAX persistent compilation cache wiring for bench + launch paths.
+
+The device scrutiny engine's multi-probe vjp sweep costs ~2 s of XLA
+compile the first time a (state structure, probe count) pair is seen —
+per *process*, so every training relaunch and every benchmark run pays
+it again even though the jaxpr is identical.  XLA's persistent
+compilation cache keys serialized executables on the HLO fingerprint and
+serves later compiles from disk, turning the relaunch cost into a
+millisecond-scale cache read.
+
+``enable_persistent_cache()`` points JAX at a stable on-disk cache
+directory (``$REPRO_COMPILE_CACHE``, or ``~/.cache/repro/jax`` when
+unset; ``REPRO_COMPILE_CACHE=0`` disables) and drops the min-compile-time
+/ min-entry-size thresholds so the scrutiny sweep and the packed-save
+kernels are always cached.  Every knob is set best-effort: older JAX
+versions without a given config simply skip it, and a read-only cache
+directory disables the cache rather than failing the launch.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+_DISABLE = ("0", "off", "none", "disable")
+
+
+def default_cache_dir() -> Optional[str]:
+    """Resolve the cache dir from ``$REPRO_COMPILE_CACHE`` (None = off)."""
+    env = os.environ.get("REPRO_COMPILE_CACHE")
+    if env is not None:
+        return None if env.strip().lower() in _DISABLE else env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "jax")
+
+
+def enable_persistent_cache(cache_dir: Optional[str] = None) -> Optional[str]:
+    """Turn on JAX's persistent compilation cache.
+
+    Returns the active cache directory, or None when disabled (explicitly
+    via env, or because the directory cannot be created).  Idempotent and
+    safe to call before any jit compilation in a process.
+    """
+    import jax
+
+    d = cache_dir if cache_dir is not None else default_cache_dir()
+    if d is None:
+        return None
+    try:
+        os.makedirs(d, exist_ok=True)
+    except OSError:
+        return None
+    opts = [
+        ("jax_compilation_cache_dir", d),
+        # cache everything: the scrutiny sweep's helper jits are small but
+        # sit on the relaunch path too
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+        ("jax_persistent_cache_min_entry_size_bytes", -1),
+        # cover the XLA-side autotune/kernel caches where supported
+        ("jax_persistent_cache_enable_xla_caches", "all"),
+    ]
+    for name, value in opts:
+        try:
+            jax.config.update(name, value)
+        except (AttributeError, ValueError, TypeError):
+            pass                    # older JAX: knob absent — best effort
+    try:
+        # the cache object is initialized lazily *once*; re-pointing the
+        # dir mid-process (bench cold/warm runs) needs an explicit reset
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.reset_cache()
+    except (ImportError, AttributeError):
+        pass
+    return d

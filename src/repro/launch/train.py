@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.checkpoint import CoordinatedCheckpointManager, Level
 from repro.configs import get_config
+from repro.launch.compile_cache import enable_persistent_cache
 from repro.distributed.collective import current_context, get_collective
 from repro.core import ScrutinyConfig, participation
 from repro.data import pipeline as data_pipeline
@@ -79,6 +80,12 @@ def main(argv=None):
                     help="lm: next-token; copy: identity (fast smoke signal)")
     ap.add_argument("--lr", type=float, default=None)
     args = ap.parse_args(argv)
+
+    # persistent XLA cache: relaunches (and --resume restarts) skip the
+    # multi-second train-step + scrutiny-sweep compiles
+    cache = enable_persistent_cache()
+    if cache:
+        print(f"compilation cache: {cache}")
 
     cfg = get_config(args.arch)
     if args.preset == "smoke":

@@ -149,10 +149,12 @@ class FaultyCollective(Collective):
                 _default_kill(self.hard, f"barrier {name!r}")
 
     def barrier(self, name: str, timeout: Optional[float] = None,
-                participants: Optional[Sequence[int]] = None) -> None:
+                participants: Optional[Sequence[int]] = None,
+                heartbeat: Optional[Callable] = None) -> None:
         self.barriers_seen.append(name)
         self._check(self._before, name)
-        self.inner.barrier(name, timeout=timeout, participants=participants)
+        self.inner.barrier(name, timeout=timeout, participants=participants,
+                           heartbeat=heartbeat)
         self._check(self._after, name)
 
     def cleanup(self, before_seq: int) -> None:

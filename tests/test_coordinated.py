@@ -335,6 +335,7 @@ def test_dead_host_before_commit_leaves_previous_latest(tmp_path):
         if p == 1:
             return "died"                          # killed before phase 1
         mgr.save(2, make_state(step_val=2))
+        mgr.close()                 # drain the async save → barrier timeout
 
     results, errors = run_hosts(2, host, timeout=1.0)
     assert results[1] == "died"
@@ -368,6 +369,7 @@ def test_leader_crash_mid_commit_falls_back(tmp_path, monkeypatch):
             pack_use_kernel=False, pack_interpret=True,
             barrier_timeout_s=2.0)
         mgr.save(2, make_state(step_val=2))
+        mgr.close()                 # drain the async save → writer error
 
     results, errors = run_hosts(2, host, timeout=2.0)
     assert isinstance(errors[0], RuntimeError)     # leader: injected death
@@ -475,6 +477,7 @@ def test_force_coordinated_single_process(tmp_path):
         force_coordinated=True, pack_use_kernel=False, pack_interpret=True)
     state = make_state()
     mgr.save(1, state)
+    mgr.wait()                      # async commit: drain before inspecting
     assert "coordinated" in read_manifest(root, 1)
     assert os.path.exists(os.path.join(root, "step_1", "commit.json"))
     st, got = mgr.restore(make_state(step_val=0))
@@ -587,6 +590,226 @@ def test_own_tmp_dir_cleared_on_rewrite(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# byte identity: pipelined writer vs the pre-pipeline reference writer
+# --------------------------------------------------------------------------
+
+def _reference_coordinated_write(root, count, mode, steps=1, shards=1,
+                                 delta_chunk_bytes=64):
+    """The pre-pipeline coordinated writer, replayed synchronously: the
+    exact per-segment pack → per-host ``write_host_entries`` → leader
+    fusion → rename → commit-marker sequence the coordinator ran before
+    the save path moved onto the three-stage pipeline.  The pipelined
+    manager's committed step dirs must stay bitwise identical to this."""
+    import zlib
+    from repro.checkpoint.levels import LEVEL_ORDER, partner_map
+    from repro.checkpoint.packing import (DeltaLeaf, delta_encode_host,
+                                          packed_leaf_stub)
+    from repro.checkpoint.pipeline import BytesSource, ViewSource
+    from repro.checkpoint.store import (_delta_entry, _packed_entry,
+                                        fuse_global_manifest,
+                                        write_commit_marker,
+                                        write_host_entries)
+
+    masks = make_masks()
+    report = make_report(masks) if mode != "full" else None
+    os.makedirs(root, exist_ok=True)
+    state = make_state()
+    prev_sources = [None] * count
+    base_step, delta_hist = None, []
+    for t in range(1, steps + 1):
+        if t > 1:
+            w = np.asarray(state["w"]).copy()
+            w[t % N_ROWS, :] += 1.0
+            state = dict(state, w=jnp.asarray(w),
+                         step=jnp.asarray(t, jnp.int32))
+        delta = mode == "delta" and t > 1
+        kind = "delta" if delta else "base"
+        pending = os.path.join(root, f".pending_step_{t}")
+        os.makedirs(pending, exist_ok=True)
+        sources = [dict() for _ in range(count)]
+        for p in range(count):
+            ctx = ProcessContext(p, count)
+            entries = []
+            for name in sorted(state):           # tree_flatten key order
+                arr = np.asarray(state[name])
+                shape, dtype = arr.shape, str(arr.dtype)
+                rep = (report.leaves.get(name) if report is not None
+                       else None)
+                flat = arr.reshape(-1)
+                for flo, fhi in owned_ranges(shape, ctx):
+                    mask_seg = None
+                    seg = flat[flo:fhi]
+                    if rep is not None and not rep.all_critical:
+                        mask_seg = np.asarray(rep.mask[flo:fhi], bool)
+                        payload = seg[mask_seg]
+                    else:
+                        payload = np.ascontiguousarray(seg)
+                    u8 = (np.ascontiguousarray(payload)
+                          .view(np.uint8).reshape(-1))
+                    sources[p][(name, int(flo), int(fhi))] = u8
+                    if delta:
+                        prev = prev_sources[p][(name, int(flo), int(fhi))]
+                        idx, pay = delta_encode_host(u8, prev,
+                                                     delta_chunk_bytes)
+                        pay_b = pay.tobytes()
+                        d = DeltaLeaf(name=name, shape=tuple(shape),
+                                      dtype=dtype,
+                                      chunk_bytes=delta_chunk_bytes,
+                                      total_bytes=int(u8.nbytes), idx=idx,
+                                      payload=pay_b,
+                                      checksum=zlib.crc32(pay_b))
+                        dm = _delta_entry(d)
+                        dm.update(shape=list(shape), start=int(flo),
+                                  stop=int(fhi))
+                        entries.append((dm, len(pay_b),
+                                        BytesSource(pay_b)))
+                    else:
+                        meta = _packed_entry(packed_leaf_stub(
+                            name, (fhi - flo,), dtype, mask_seg,
+                            int(u8.nbytes)))
+                        meta.update(shape=list(shape), start=int(flo),
+                                    stop=int(fhi))
+                        entries.append((meta, int(u8.nbytes),
+                                        ViewSource([u8])))
+            extra = {"step": t, "process_count": count, "kind": kind}
+            if delta:
+                extra["chain"] = [base_step] + delta_hist
+            write_host_entries(pending, p, entries, shards=shards,
+                               extra=extra)
+        prev_sources = sources
+        if delta:
+            delta_hist.append(t)
+        else:
+            base_step, delta_hist = t, []
+        # leader fusion, exactly as CoordinatedCheckpointManager fuses
+        fextra = {"resilience": {
+            "levels": list(LEVEL_ORDER),
+            "l2_partner_map": ({str(q): r for q, r
+                                in partner_map(count).items()}
+                               if count >= 2 else None)}}
+        if delta:
+            chain = [base_step] + delta_hist
+            fextra["chain"] = {"base_step": int(chain[0]),
+                               "delta_chain": [int(s) for s
+                                               in chain[:-1]]}
+        manifest = fuse_global_manifest(pending, t, count,
+                                        manifest_extra=fextra)
+        referenced = {"manifest.json"}
+        referenced.update(f"manifest.host{p}.json" for p in range(count))
+        for leaf in manifest["leaves"]:
+            referenced.update(s["file"] for s in leaf["segments"])
+        for f in os.listdir(pending):
+            if f not in referenced:
+                os.unlink(os.path.join(pending, f))
+        final = os.path.join(root, f"step_{t}")
+        os.rename(pending, final)
+        write_commit_marker(final, {"step": int(t),
+                                    "process_count": count,
+                                    "kind": kind})
+
+
+def _pipelined_coordinated_save(root, count, mode, steps=1, shards=1):
+    masks = make_masks()
+
+    def host(p, coll):
+        report = make_report(masks) if mode != "full" else None
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=4, shards=shards,
+                   max_chain=8 if mode == "delta" else 0)],
+            collective=coll,
+            scrutiny_fn=(None if report is None else (lambda s: report)),
+            save_mode="device" if mode != "full" else "auto",
+            delta_chunk_bytes=64, force_coordinated=True,
+            pack_use_kernel=False, pack_interpret=True)
+        state = make_state()
+        for t in range(1, steps + 1):
+            if t > 1:
+                w = np.asarray(state["w"]).copy()
+                w[t % N_ROWS, :] += 1.0
+                state = dict(state, w=jnp.asarray(w),
+                             step=jnp.asarray(t, jnp.int32))
+            mgr.save(t, state)
+        mgr.close()
+
+    results, errors = run_hosts(count, host)
+    assert not any(errors), [e for e in errors if e]
+
+
+@pytest.mark.parametrize("mode", ["full", "device", "delta"])
+@pytest.mark.parametrize("count", [1, 2, 4])
+def test_pipelined_bytes_identical_to_reference_writer(tmp_path, mode,
+                                                       count):
+    """Tentpole invariant: moving the coordinated save onto the async
+    three-stage pipeline must not change a single committed byte — every
+    step dir (shards, per-host manifests, global manifest, commit marker)
+    is bitwise identical to the pre-pipeline writer's, across host counts
+    and save kinds.  (Deterministic because the leader prunes ``.alive``
+    before the rename and manifests carry no timestamps.)"""
+    steps = 3 if mode == "delta" else 1
+    root_new = str(tmp_path / "pipelined")
+    root_ref = str(tmp_path / "reference")
+    _pipelined_coordinated_save(root_new, count, mode, steps=steps)
+    _reference_coordinated_write(root_ref, count, mode, steps=steps)
+    for t in range(1, steps + 1):
+        da = os.path.join(root_new, f"step_{t}")
+        db = os.path.join(root_ref, f"step_{t}")
+        fa, fb = sorted(os.listdir(da)), sorted(os.listdir(db))
+        assert fa == fb, (t, fa, fb)
+        for f in fa:
+            with open(os.path.join(da, f), "rb") as fh:
+                got = fh.read()
+            with open(os.path.join(db, f), "rb") as fh:
+                want = fh.read()
+            assert got == want, f"step {t}: {f} differs from pre-pipeline"
+
+
+def test_crash_mid_pipeline_nonleader_degraded_commit(tmp_path):
+    """A non-leader host dies mid-pipeline, on the writer thread, after
+    its L2 replica landed: the surviving quorum recovers its segments
+    from the partner replica, the degraded save still commits, the death
+    surfaces from the victim's ``close()``, and ``latest()`` stays sane."""
+    from repro.testing.faults import FaultInjector, HostKilled
+
+    root = str(tmp_path / "lv")
+    masks = make_masks()
+
+    def host(p, coll):
+        inj = (FaultInjector().kill_at("after_replicate")
+               if p == 2 else None)
+        report = make_report(masks)
+        mgr = CoordinatedCheckpointManager(
+            [Level(root, keep_n=4)], collective=coll,
+            scrutiny_fn=lambda s: report, save_mode="device",
+            pack_use_kernel=False, pack_interpret=True,
+            barrier_timeout_s=3.0, fault_injector=inj)
+        mgr.save(1, make_state())
+        stats = dict(mgr.last_save_stats)
+        mgr.close()                  # drains; the victim raises here
+        return stats
+
+    results, errors = run_hosts(3, host)
+    assert isinstance(errors[2], HostKilled)
+    assert errors[0] is None and errors[1] is None, errors
+    assert is_step_committed(root, 1)
+    m = read_manifest(root, 1)
+    assert m["degraded"]["missing"] == [2]
+    lv = results[0]["levels"][root]
+    assert lv["degraded"]["survivors"] == [0, 1]
+    # the writer thread recorded the per-stage pipeline breakdown
+    for k in ("pack_s", "write_s", "land_barrier_s", "total_s"):
+        assert k in lv, lv
+    assert results[0]["blocked_s"] >= 0.0
+    mgr = CheckpointManager([Level(root)])
+    assert mgr.latest()[0] == 1
+    st, got = mgr.restore(make_state(step_val=0))
+    assert st == 1
+    exp = expected_leaves(make_state(), masks, scrutinized=True)
+    for k, v in exp.items():
+        np.testing.assert_array_equal(np.asarray(got[k]), v)
+    mgr.close()
+
+
+# --------------------------------------------------------------------------
 # acceptance: 4 real processes, commit + elastic restore + host death
 # --------------------------------------------------------------------------
 
@@ -613,10 +836,12 @@ mgr = CoordinatedCheckpointManager(
     barrier_timeout_s=float(os.environ.get("BARRIER_TIMEOUT", "60")))
 if role == "save":
     mgr.save(1, make_state())
+    mgr.wait()                       # stats are writer-filled: drain first
     print("SAVED", mgr.last_save_stats["host_bytes_written"])
 elif role == "save_expect_timeout":
     try:
         mgr.save(2, make_state(step_val=2))
+        mgr.wait()                   # async save: the timeout surfaces here
         print("UNEXPECTED_COMMIT")
     except TimeoutError:
         print("TIMEOUT_OK")

@@ -72,6 +72,7 @@ def resilient_save(root, count, victim=None, point=None, barrier_kill=None,
             barrier_timeout_s=BARRIER_S, fault_injector=inj)
         state = make_state()
         mgr.save(1, state)
+        mgr.wait()      # async save: writer errors (HostKilled) surface here
         stats = dict(mgr.last_save_stats)
         mgr.close()
         return {k: np.asarray(v) for k, v in state.items()}, stats
@@ -319,6 +320,7 @@ def test_restore_same_manager_serves_from_l1(tmp_path):
             pack_use_kernel=False, pack_interpret=True)
         state = make_state()
         mgr.save(1, state)
+        mgr.wait()                  # drain: restore must see the commit
         st, _ = mgr.restore(make_state(step_val=0), local_only=True)
         stats = dict(mgr.last_restore_stats)
         mgr.close()
@@ -573,6 +575,7 @@ mgr = CoordinatedCheckpointManager(
     fault_injector=injector_from_env())
 if role == "save":
     mgr.save(1, make_state())
+    mgr.wait()                       # stats are writer-filled: drain first
     deg = mgr.last_save_stats["levels"][root].get("degraded")
     print("SAVED", "DEGRADED" if deg else "CLEAN",
           sorted(deg["missing"]) if deg else [])
