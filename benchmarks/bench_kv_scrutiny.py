@@ -5,30 +5,57 @@ remaining program (N more decode steps) attends only to positions
 < p + N — every other slot gets a -inf bias, an exactly-zero softmax
 weight, and therefore an exactly-zero derivative.  scrutinize() (the
 paper's AD method) proves the suffix uncritical; sweeps p and reports the
-cache checkpoint reduction, plus recurrent-arch (constant-state) rows."""
+cache checkpoint reduction, plus recurrent-arch (constant-state) rows.
+
+The **sessions** section measures the preemption-safe serving path
+(``serve.sessions.SessionManager``) end to end and records the headline
+rows gated by CI (``BENCH_serve.json``):
+
+- ``snapshot_s``      — blocking coordinated snapshot of N live sessions
+                        (scrutinize-when-due + pack + shard write + commit);
+- ``snapshot_bytes``  — payload bytes of the full scrutinized snapshot
+                        (deterministic: only logit-affecting KV crosses);
+- ``delta_bytes_per_step`` — payload of the next per-step differential
+                        snapshot (append-only KV ⇒ near-zero deltas);
+- ``migration_downtime_s`` — fresh manager adopts the whole snapshot and
+                        serves the first token of every session;
+- ``kv_uncritical_rate`` — fraction of live cache bytes scrutiny proves
+                        the snapshot can drop.
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def run(out=print, max_len: int = 64, n_future: int = 2):
+def bench_kv_table(out=print, quick: bool = False, max_len: int = 64,
+                   n_future: int = 2):
     from repro.configs import get_config
     from repro.core import ScrutinyConfig, scrutinize
     from repro.models import init_params
     from repro.serve.engine import Engine
 
+    archs = (("phi4-mini-3.8b", "recurrentgemma-2b") if quick else
+             ("phi4-mini-3.8b", "gemma2-27b", "recurrentgemma-2b",
+              "xlstm-125m"))
+    prompt_lens = (8,) if quick else (8, 32)
     out("== KV-cache scrutiny: engine-state checkpoint reduction ==")
     out(f"(reduced configs, max_len={max_len}, resume horizon={n_future})")
     out(f"{'arch':<22}{'pos':>5}{'cache elems':>13}{'uncritical':>12}{'saved':>8}")
-    for arch in ("phi4-mini-3.8b", "gemma2-27b", "recurrentgemma-2b",
-                 "xlstm-125m"):
+    rows = {}
+    for arch in archs:
         cfg = get_config(arch).reduced()
         params = init_params(cfg, jax.random.PRNGKey(0))
         eng = Engine(cfg, params, max_len)
-        for prompt_len in (8, 32):
+        for prompt_len in prompt_lens:
             toks = jax.random.randint(jax.random.PRNGKey(1), (2, prompt_len),
                                       0, cfg.vocab)
             batch = {"tokens": toks}
@@ -43,9 +70,120 @@ def run(out=print, max_len: int = 64, n_future: int = 2):
             unc = sum(l.uncritical for l in cache_leaves)
             out(f"{arch:<22}{prompt_len:>5}{total:>13}{unc:>12}"
                 f"{100.0*unc/max(total,1):>7.1f}%")
+            rows[f"{arch}@{prompt_len}"] = {
+                "total": int(total), "uncritical": int(unc),
+                "saved_frac": float(unc) / max(total, 1)}
     out("\nfull-attention caches shed the unwritten suffix; recurrent archs")
     out("carry O(1) state (nothing to shed — already minimal).")
+    return rows
+
+
+def bench_sessions(out=print, quick: bool = False):
+    from repro.checkpoint import Level, read_manifest
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.engine import Engine
+    from repro.serve.sessions import SessionManager
+
+    n_sessions = 2 if quick else 4
+    max_len = 24 if quick else 64
+    prompt_t = 6 if quick else 16
+    pre_steps = 2 if quick else 4
+
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len)
+
+    def batch(seed):
+        return {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                             (1, prompt_t), 0, cfg.vocab)}
+
+    out(f"\n== session serving: snapshot / delta / migration "
+        f"({n_sessions} sessions, max_len={max_len}) ==")
+    root = tempfile.mkdtemp(prefix="bench_serve_")
+    rows = {}
+    try:
+        # rescrutinize_every=2: snapshots alternate fresh-base / chained-
+        # delta, so the timed rows below hit exactly one of each; fine
+        # delta chunks keep per-step deltas near the actually-written KV
+        sm = SessionManager(eng, [Level(root, keep_n=4, max_chain=8)],
+                            rescrutinize_every=2, delta_chunk_bytes=1024,
+                            pack_use_kernel=False, pack_interpret=True)
+        live_bytes = 0
+        for i in range(n_sessions):
+            sm.open(f"s{i}", batch(i))
+            sm.decode(f"s{i}", pre_steps)
+        for state in sm.sessions.values():
+            live_bytes += sum(np.asarray(l).nbytes
+                              for l in jax.tree_util.tree_leaves(state))
+        # warm the jit/scrutiny/pack caches (one base + one delta save)
+        # so timings measure the pipeline, not compilation
+        sm.snapshot(0, block=True)
+        sm.snapshot(1, block=True)
+
+        t0 = time.perf_counter()
+        sm.snapshot(2, block=True)      # fresh scrutiny + full base save
+        rows["snapshot_s"] = time.perf_counter() - t0
+        man = read_manifest(root, 2)
+        assert not man.get("chain"), "step 2 should be a base snapshot"
+        rows["snapshot_bytes"] = int(man.get("payload_bytes", 0))
+        rows["live_state_bytes"] = int(live_bytes)
+        st = sm.last_session_stats["sessions"]
+        rows["kv_uncritical_rate"] = float(
+            sum(s["uncritical"] for s in st.values())
+            / max(sum(s["total"] for s in st.values()), 1))
+
+        for i in range(n_sessions):        # one decode step per session
+            sm.step(f"s{i}")
+        t0 = time.perf_counter()
+        sm.snapshot(3, block=True)
+        rows["delta_snapshot_s"] = time.perf_counter() - t0
+        man = read_manifest(root, 3)
+        assert man.get("chain"), "step 3 should ride the delta chain"
+        rows["delta_bytes_per_step"] = int(man.get("payload_bytes", 0))
+        sm.close()
+
+        # migration: a fresh host adopts the snapshot and serves a token
+        t0 = time.perf_counter()
+        sm2 = SessionManager(eng, [Level(root, keep_n=3, max_chain=8)],
+                             pack_use_kernel=False, pack_interpret=True)
+        step = sm2.restore()
+        for i in range(n_sessions):
+            sm2.step(f"s{i}")
+        rows["migration_downtime_s"] = time.perf_counter() - t0
+        assert step == 3 and len(sm2.sessions) == n_sessions
+        sm2.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    out(f"live state        {rows['live_state_bytes']:>12,} B")
+    out(f"snapshot          {rows['snapshot_bytes']:>12,} B "
+        f"({rows['snapshot_s']*1e3:7.1f} ms)  "
+        f"kv uncritical {rows['kv_uncritical_rate']:5.1%}")
+    out(f"per-step delta    {rows['delta_bytes_per_step']:>12,} B "
+        f"({rows['delta_snapshot_s']*1e3:7.1f} ms)")
+    out(f"migration downtime {rows['migration_downtime_s']*1e3:10.1f} ms "
+        f"(restore + first token, {n_sessions} sessions)")
+    return rows
+
+
+def run(out=print, quick: bool = False, json_path: str | None = None,
+        max_len: int = 64, n_future: int = 2):
+    results = {"quick": quick}
+    results["kv_table"] = bench_kv_table(out, quick, max_len, n_future)
+    results["sessions"] = bench_sessions(out, quick)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        out(f"\nwrote {json_path}")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke runs")
+    ap.add_argument("--json", default=None,
+                    help="write results to this JSON file")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

@@ -309,6 +309,31 @@ def get_collective(backend: str = "auto",
 # Shard ownership: which flat element ranges of a leaf this process writes
 # --------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class HostPinned:
+    """Ownership sentinel: the whole leaf lives on exactly one process.
+
+    Serving state (a decode session's KV cache, position, token tail) is
+    *host-local* — it exists only on the host running the session, so the
+    near-equal leading-axis split that balances replicated training leaves
+    would make other hosts write rows they do not have.  Passing
+    ``HostPinned(owner)`` as a leaf's sharding pins every byte of it to
+    ``owner``: that process writes the whole leaf, every other process
+    writes nothing (and skips the leaf entirely in its snapshot).
+
+    The ``spec`` attribute makes the sentinel duck-type as a sharding for
+    the tree-flattening layers (leaves are detected via
+    ``hasattr(x, "spec")``), so a shardings tree may freely mix
+    ``NamedSharding``, ``None``, and ``HostPinned`` per leaf.
+    """
+    owner: int
+    spec: Any = None
+
+    def __post_init__(self):
+        if self.owner < 0:
+            raise ValueError(f"HostPinned owner must be >= 0: {self.owner}")
+
+
 def process_segments(shape: Tuple[int, ...], count: int,
                      sharding=None) -> List[Tuple[int, int, int]]:
     """Partition a leaf's leading axis into per-process owned segments.
@@ -330,6 +355,10 @@ def process_segments(shape: Tuple[int, ...], count: int,
     if count < 1:
         raise ValueError("process count must be >= 1")
     rows = int(shape[0]) if shape else 0
+    if isinstance(sharding, HostPinned):
+        # whole leaf (rows, scalars, empties alike) belongs to one process;
+        # modulo keeps the table well-defined if the job shrank elastically
+        return [(0, rows, sharding.owner % count)]
     if not shape or rows == 0:
         return [(0, rows, 0)] if shape else [(0, 0, 0)]
     seg = _device_process_segments(shape, sharding)
@@ -397,6 +426,10 @@ def owned_ranges(shape: Tuple[int, ...], ctx: ProcessContext,
     import numpy as np
     row = int(np.prod(shape[1:])) if len(shape) > 1 else 1
     n = int(np.prod(shape)) if shape else 1
+    if isinstance(sharding, HostPinned):
+        # must run before the scalar branch: a pinned scalar (a session's
+        # decode position) belongs to its owner, not to the leader
+        return [(0, n)] if ctx.index == sharding.owner % ctx.count else []
     if not shape:
         return [(0, 1)] if ctx.index == 0 else []
     out = []

@@ -130,7 +130,7 @@ def _mixer_train(cfg, kind, p, x, positions):
 
 
 def apply_block_train(cfg, kind, p, x, positions, enc_out=None,
-                      enc_positions=None):
+                      enc_positions=None, train=False):
     h = apply_norm(cfg, p["norm1"], x)
     h = _mixer_train(cfg, kind, p, h, positions)
     if cfg.post_norm:
@@ -144,7 +144,7 @@ def apply_block_train(cfg, kind, p, x, positions, enc_out=None,
     if "ffn" in p or "moe" in p:
         h = apply_norm(cfg, p["norm2"], x)
         if "moe" in p:
-            h, aux = moe_mod.apply_moe(cfg, p["moe"], h)
+            h, aux = moe_mod.apply_moe(cfg, p["moe"], h, train=train)
         else:
             h = apply_ffn(cfg, p["ffn"], h)
         if cfg.post_norm:
@@ -398,7 +398,7 @@ def _sp_constraint(h):
 
 
 def _run_segments(cfg, params, x, positions, enc_out=None, enc_positions=None,
-                  remat=None):
+                  remat=None, train=False):
     segs = plan_segments(layer_kinds(cfg))
     aux_total = jnp.zeros((), jnp.float32)
     use_remat = cfg.remat if remat is None else remat
@@ -410,7 +410,8 @@ def _run_segments(cfg, params, x, positions, enc_out=None, enc_positions=None,
             for ui, kind in enumerate(unit):
                 h = _sp_constraint(h)
                 h, a = apply_block_train(cfg, kind, p_l[f"u{ui}"], h,
-                                         positions, enc_out, enc_positions)
+                                         positions, enc_out, enc_positions,
+                                         train=train)
                 aux = aux + a
             return (h, aux), None
 
@@ -441,7 +442,10 @@ def loss_fn(cfg, params, batch):
     enc_out = enc_pos = None
     if cfg.enc_dec:
         enc_out, enc_pos = _run_encoder(cfg, params, batch["frames"])
-    x, aux = _run_segments(cfg, params, x, positions, enc_out, enc_pos)
+    # train=True turns on MoE capacity dropping (a throughput device that is
+    # row-length dependent, so eval/prefill/decode paths run dropless).
+    x, aux = _run_segments(cfg, params, x, positions, enc_out, enc_pos,
+                           train=True)
     x = apply_norm(cfg, params["final_norm"], x)
     if offset:
         x = x[:, offset:]

@@ -63,8 +63,20 @@ def _experts_ffn(wi, wg, wo, x):  # x: (E, C, d)
     return jnp.einsum("ecf,efd->ecd", h, wo.astype(x.dtype))
 
 
-def apply_moe(cfg, p, x: jnp.ndarray, *, capacity_factor: float = CAPACITY_FACTOR):
+def apply_moe(cfg, p, x: jnp.ndarray, *,
+              capacity_factor: float = CAPACITY_FACTOR, train: bool = False):
     """x: (B, T, d) → (out (B, T, d), aux_loss scalar).
+
+    ``train`` gates capacity dropping.  Dropping is a *training-throughput*
+    device (step time never depends on the most oversubscribed expert), but
+    it makes a token's output depend on the row length and on every other
+    token's routing: the same prefix run at T and T+1 tokens routes
+    differently, so prefill+decode could never reproduce the forward pass
+    bit-for-bit (and a migrated decode could never match an uninterrupted
+    one).  Inference therefore runs dropless — capacity = S, every routed
+    slot is processed — which is also what serving stacks do in practice.
+    Long-prompt prefill should chunk T if the (B, E, S, d) dropless buffer
+    gets large.
 
     Perf iteration (EXPERIMENTS.md §Perf/olmoe): dispatch is **row-local**.
     A global argsort over B·T·K slots forces XLA to reshard the whole token
@@ -81,7 +93,7 @@ def apply_moe(cfg, p, x: jnp.ndarray, *, capacity_factor: float = CAPACITY_FACTO
     S = T * K                                             # slots per row
 
     if _DISPATCH == "global":
-        return _apply_moe_global(cfg, p, x, capacity_factor)
+        return _apply_moe_global(cfg, p, x, capacity_factor, train)
 
     logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,T,E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -95,7 +107,7 @@ def apply_moe(cfg, p, x: jnp.ndarray, *, capacity_factor: float = CAPACITY_FACTO
     aux = m.aux_loss_coef * E * jnp.sum(me * ce)
 
     # --- row-local sort-based dispatch ----------------------------------
-    C = max(1, int(S / E * capacity_factor))
+    C = max(1, int(S / E * capacity_factor)) if train else S
     flat_e = top_e.reshape(B, S)
     order = jnp.argsort(flat_e, axis=1)                   # per-row, local
     e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
@@ -139,7 +151,7 @@ def apply_moe(cfg, p, x: jnp.ndarray, *, capacity_factor: float = CAPACITY_FACTO
     return out, aux
 
 
-def _apply_moe_global(cfg, p, x, capacity_factor):
+def _apply_moe_global(cfg, p, x, capacity_factor, train=False):
     """Baseline dispatch (perf-log 'before'): one global argsort over all
     B·T·K slots — correct, but the global sort/scatter reshards the whole
     token stream across the mesh (§Perf/olmoe)."""
@@ -156,7 +168,7 @@ def _apply_moe_global(cfg, p, x, capacity_factor):
     ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (N * K)
     aux = m.aux_loss_coef * E * jnp.sum(me * ce)
 
-    C = max(1, int(N * K / E * capacity_factor))
+    C = max(1, int(N * K / E * capacity_factor)) if train else N * K
     flat_e = top_e.reshape(N * K)
     order = jnp.argsort(flat_e)
     e_sorted = flat_e[order]

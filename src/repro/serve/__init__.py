@@ -1,0 +1,13 @@
+"""Serving: batched decode engine + preemption-safe session management
+(scrutinized KV snapshots, live migration, degraded-mode adoption)."""
+
+from repro.serve.engine import Engine
+from repro.serve.migrate import (AdoptionReport, adopt_sessions,
+                                 manifest_sessions, restore_sessions,
+                                 session_owners)
+from repro.serve.sessions import SessionManager
+
+__all__ = [
+    "Engine", "SessionManager", "AdoptionReport", "adopt_sessions",
+    "manifest_sessions", "restore_sessions", "session_owners",
+]

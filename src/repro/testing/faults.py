@@ -200,6 +200,48 @@ def shard_files(step_dir: str) -> List[str]:
                   if f.endswith(".bin"))
 
 
+def session_shard_files(root: str, step: int,
+                        sid: Optional[str] = None) -> List[str]:
+    """Shard files holding a *session snapshot*'s payload bytes.
+
+    Session checkpoints name their leaves ``sessions/<sid>/…``; this
+    resolves which committed *data* shard files carry a given session's
+    segments (all sessions when ``sid`` is None) so tests can aim
+    ``tear_file`` / ``corrupt_crc`` at exactly one session's durable
+    bytes.  Coordinated segments name their per-host file directly;
+    plain single-host layouts record a numbered shard index instead
+    (``shard_<k>.bin``).  Parity files are never returned — damaging
+    those would test nothing.
+    """
+    from repro.checkpoint.coordinator import GlobalManifest
+    gm = GlobalManifest.load(root, step)
+    prefix = "sessions/" + (f"{sid}/" if sid else "")
+    step_dir = os.path.join(root, f"step_{step}")
+    files = set()
+    for name, e in gm.leaves().items():
+        if not name.startswith(prefix):
+            continue
+        for s in GlobalManifest.segments_of(e):
+            if s.get("file"):
+                files.add(os.path.join(step_dir, s["file"]))
+            elif s.get("shard") is not None:
+                files.add(os.path.join(step_dir,
+                                       f"shard_{int(s['shard'])}.bin"))
+    return sorted(files)
+
+
+def tear_session_shard(root: str, step: int, sid: str,
+                       frac: float = 0.5) -> str:
+    """Tear (truncate) the first shard file carrying ``sid``'s snapshot —
+    the torn-write-under-a-session fault.  Returns the damaged path."""
+    files = session_shard_files(root, step, sid)
+    if not files:
+        raise FileNotFoundError(
+            f"no shard files for session {sid!r} at step {step} in {root}")
+    tear_file(files[0], frac=frac)
+    return files[0]
+
+
 # --------------------------------------------------------------------------
 # I/O-path patches: stalled writers and dying partners
 # --------------------------------------------------------------------------

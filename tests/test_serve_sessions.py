@@ -1,0 +1,403 @@
+"""Preemption-safe serving: scrutinized session snapshots, live migration,
+and degraded-mode decode under fault injection.
+
+The acceptance contract (ISSUE 9): N concurrent decode sessions snapshot
+through the coordinated pipeline carrying only logit-affecting KV bytes,
+restore on the same host or a different one, and continue greedy decode
+**bit-identically** to an uninterrupted run — including when the owning
+host is killed mid-protocol and survivors adopt its sessions from L2
+partner replicas.
+"""
+
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from test_coordinated import run_hosts
+
+from repro.checkpoint import (CoordinatedCheckpointManager, GlobalManifest,
+                              Level, read_manifest)
+from repro.checkpoint.levels import L2_PARTNER, L3_PARITY, L4_STORE
+from repro.configs import get_config
+from repro.distributed.collective import (HostPinned, ProcessContext,
+                                          owned_ranges, process_segments)
+from repro.models import init_params
+from repro.serve import migrate
+from repro.serve.engine import Engine
+from repro.serve.sessions import SessionManager
+from repro.testing.faults import (FaultInjector, session_shard_files,
+                                  tear_session_shard)
+
+MAX_LEN = 24
+PROMPT_T = 6
+BARRIER_S = 5.0
+TIMEOUT_S = 120.0
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, MAX_LEN)
+
+
+def mk_batch(engine, seed, T=PROMPT_T):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                         (1, T), 0, engine.cfg.vocab)}
+
+
+def mk_sm(engine, root, mode="full", collective=None, **kw):
+    kw.setdefault("pack_use_kernel", False)
+    kw.setdefault("pack_interpret", True)
+    return SessionManager(
+        engine, [Level(str(root), keep_n=3,
+                       max_chain=8 if mode == "delta" else 0,
+                       **kw.pop("level_kw", {}))],
+        collective=collective, rescrutinize_every=4,
+        delta_chunk_bytes=64, **kw)
+
+
+def reference_tokens(engine, seed, n_steps):
+    """Uninterrupted greedy decode: per-step tokens after the prefill."""
+    state = engine.start(mk_batch(engine, seed))
+    out = []
+    for _ in range(n_steps):
+        state, tok = engine.step(state)
+        out.append(np.asarray(tok))
+    return np.stack(out, axis=1)
+
+
+# --------------------------------------------------------------------------
+# HostPinned ownership
+# --------------------------------------------------------------------------
+
+def test_hostpinned_ownership():
+    pin1 = HostPinned(1)
+    # vector leaf: all rows to the owner, nothing elsewhere
+    assert process_segments((8, 4), 3, pin1) == [(0, 8, 1)]
+    assert owned_ranges((8, 4), ProcessContext(1, 3), pin1) == [(0, 32)]
+    assert owned_ranges((8, 4), ProcessContext(0, 3), pin1) == []
+    # scalar leaf: pinned to the owner, NOT collapsed to the leader
+    assert owned_ranges((), ProcessContext(1, 3), pin1) == [(0, 1)]
+    assert owned_ranges((), ProcessContext(0, 3), pin1) == []
+    # duck-types as a sharding leaf for the flattening layers
+    assert hasattr(pin1, "spec")
+    with pytest.raises(ValueError):
+        HostPinned(-1)
+
+
+# --------------------------------------------------------------------------
+# matrix: {1,4,16} sessions x {full, delta} x same-host resume
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["full", "delta"])
+@pytest.mark.parametrize("n_sessions", [1, 4, 16])
+def test_matrix_same_host(engine, tmp_path, n_sessions, mode):
+    sids = [f"s{i}" for i in range(n_sessions)]
+    sm = mk_sm(engine, tmp_path, mode)
+    for i, sid in enumerate(sids):
+        sm.open(sid, mk_batch(engine, i))
+        sm.decode(sid, 2)
+    sm.snapshot(0, block=True)
+    if mode == "delta":
+        # per-step differential snapshots riding the chain
+        for step in (1, 2):
+            for sid in sids:
+                sm.step(sid)
+            sm.snapshot(step, block=True)
+    at_snap = {sid: dict(sm.sessions[sid]) for sid in sids}
+    cont = {sid: sm.decode(sid, 3) for sid in sids}
+    sm.close()
+
+    last = 2 if mode == "delta" else 0
+    gm = GlobalManifest.load(str(tmp_path), last)
+    assert bool(gm.chain) == (mode == "delta")
+    assert sorted(migrate.manifest_sessions(gm)) == sorted(sids)
+
+    sm2 = mk_sm(engine, tmp_path, mode)
+    missing = []
+    assert sm2.restore(missing_out=missing) == last
+    assert missing == []
+    assert sorted(sm2.sessions) == sorted(sids)
+    # restored state is bit-identical to the live state at snapshot time
+    # (scrutinized-away KV slots were zero in the live cache too)
+    for sid in sids:
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)),
+            at_snap[sid], sm2.sessions[sid])
+    for sid in sids:
+        np.testing.assert_array_equal(sm2.decode(sid, 3), cont[sid],
+                                      err_msg=f"session {sid}")
+    sm2.close()
+
+
+def test_masks_bit_identical_after_restore(engine, tmp_path):
+    """Scrutiny masks recomputed on the restored state match the live
+    run's masks exactly — restore loses no logit-affecting byte."""
+    sm = mk_sm(engine, tmp_path)
+    sm.open("s0", mk_batch(engine, 3))
+    sm.decode("s0", 2)
+    sm.snapshot(0, block=True)
+    live_masks = {
+        n: lr.mask.copy() for n, lr in
+        sm._scrutinize_tree(sm.state_tree()).leaves.items()}
+    assert any(not m.all() for m in live_masks.values())  # non-vacuous
+    sm.close()
+
+    sm2 = mk_sm(engine, tmp_path)
+    sm2.restore()
+    restored_masks = {
+        n: lr.mask for n, lr in
+        sm2._scrutinize_tree(sm2.state_tree()).leaves.items()}
+    assert sorted(restored_masks) == sorted(live_masks)
+    for name, m in live_masks.items():
+        np.testing.assert_array_equal(restored_masks[name], m,
+                                      err_msg=f"mask {name}")
+    sm2.close()
+
+
+# --------------------------------------------------------------------------
+# matrix: cross-host migrate (coordinated 2-host save -> fresh host B)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["full", "delta"])
+@pytest.mark.parametrize("n_sessions", [1, 4, 16])
+def test_matrix_migrate(engine, tmp_path, n_sessions, mode):
+    root = str(tmp_path)
+    sids = [f"s{i}" for i in range(n_sessions)]
+    by_host = {0: sids[0::2], 1: sids[1::2]}
+    cont = {}
+
+    def host(p, coll):
+        sm = mk_sm(engine, root, mode, collective=coll, save_mode="device")
+        for sid in by_host[p]:
+            sm.open(sid, mk_batch(engine, int(sid[1:])))
+            sm.decode(sid, 2)
+        sm.snapshot(0, block=True)
+        if mode == "delta":
+            for step in (1, 2):
+                for sid in by_host[p]:
+                    sm.step(sid)
+                sm.snapshot(step, block=True)
+        out = {sid: sm.decode(sid, 3) for sid in by_host[p]}
+        sm.close()
+        return out
+
+    results, errors = run_hosts(2, host, timeout=TIMEOUT_S)
+    assert not any(errors), [e for e in errors if e]
+    for r in results:
+        cont.update(r)
+
+    # host B: fresh single-process manager, never saw the sessions
+    smB = mk_sm(engine, tmp_path, mode)
+    step = smB.restore()
+    assert step == (2 if mode == "delta" else 0)
+    assert sorted(smB.sessions) == sorted(sids)
+    for sid in sids:
+        np.testing.assert_array_equal(smB.decode(sid, 3), cont[sid],
+                                      err_msg=f"session {sid}")
+    # session ownership is readable straight off the manifest
+    owners = migrate.session_owners(
+        GlobalManifest.load(root, step))
+    assert owners == {sid: p for p, ss in by_host.items() for sid in ss}
+    smB.close()
+
+
+# --------------------------------------------------------------------------
+# elastic missing-session accounting (sessions opened after dispatch)
+# --------------------------------------------------------------------------
+
+def test_restore_missing_sessions_elastic(engine, tmp_path):
+    sm = mk_sm(engine, tmp_path)
+    sm.open("old", mk_batch(engine, 1))
+    sm.decode("old", 2)
+    sm.snapshot(0, block=True)
+    # opened between snapshot dispatch and restore
+    sm.open("new", mk_batch(engine, 2))
+    new_live = dict(sm.sessions["new"])
+    missing = []
+    assert sm.restore(missing_out=missing) == 0
+    # the manifest's session restored, the younger one kept live + reported
+    assert [m["sid"] for m in missing] == ["new"]
+    assert missing[0]["reason"].startswith("opened after snapshot")
+    assert sm.sessions["new"] is not None
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        new_live, sm.sessions["new"])
+    # explicit sid targeting reports unknown sessions the same way
+    missing2 = []
+    assert sm.restore(sids=["old", "ghost"], missing_out=missing2) == 0
+    assert [m["sid"] for m in missing2] == ["ghost"]
+    sm.close()
+
+
+def test_restore_without_snapshot_reports_all(engine, tmp_path):
+    sm = mk_sm(engine, tmp_path)
+    sm.open("a", mk_batch(engine, 1))
+    missing = []
+    assert sm.restore(missing_out=missing) is None
+    assert [m["sid"] for m in missing] == ["a"]
+    assert missing[0]["step"] is None
+    sm.close()
+
+
+# --------------------------------------------------------------------------
+# session-shard faults: torn files restore through parity / partner
+# --------------------------------------------------------------------------
+
+def test_torn_session_shard_restores_via_parity(engine, tmp_path):
+    """A truncated session shard file rebuilds from the XOR parity shard
+    (single-host levels carry parity; no partner ring exists)."""
+    sm = mk_sm(engine, tmp_path, level_kw={"shards": 2, "parity": True})
+    for i in range(2):
+        sm.open(f"s{i}", mk_batch(engine, i))
+        sm.decode(f"s{i}", 2)
+    sm.snapshot(0, block=True)
+    cont = {sid: sm.decode(sid, 3) for sid in ("s0", "s1")}
+    sm.close()
+
+    files = session_shard_files(str(tmp_path), 0, "s0")
+    assert files and all(os.path.exists(f) for f in files)
+    # tear the whole shard: every byte of it must come back via parity
+    torn = tear_session_shard(str(tmp_path), 0, "s0", frac=0.0)
+    assert torn in files and os.path.getsize(torn) == 0
+
+    sm2 = mk_sm(engine, tmp_path, level_kw={"shards": 2, "parity": True})
+    assert sm2.restore() == 0
+    stats = sm2.ckpt.last_restore_stats
+    assert stats["level_served"][L3_PARITY] > 0
+    for sid in ("s0", "s1"):
+        np.testing.assert_array_equal(sm2.decode(sid, 3), cont[sid])
+    sm2.close()
+
+
+def test_torn_session_shard_restores_via_partner(engine, tmp_path):
+    """With the shared-store copy torn, a ring member restores the damaged
+    session from its node-local L2 partner replica — zero store reads for
+    the replicated segments."""
+    root = str(tmp_path)
+    cont = {}
+
+    def save_host(p, coll):
+        sm = mk_sm(engine, root, collective=coll, save_mode="device")
+        sid = f"h{p}"
+        sm.open(sid, mk_batch(engine, p))
+        sm.decode(sid, 2)
+        sm.snapshot(0, block=True)
+        out = sm.decode(sid, 3)
+        sm.close()
+        return {sid: out}
+
+    results, errors = run_hosts(2, save_host, timeout=TIMEOUT_S)
+    assert not any(errors), [e for e in errors if e]
+    for r in results:
+        cont.update(r)
+
+    tear_session_shard(root, 0, "h0")
+
+    def restore_host(p, coll):
+        if p != 1:      # only the partner of host 0 restores
+            return None
+        sm = mk_sm(engine, root, collective=coll)
+        missing = []
+        assert sm.restore(missing_out=missing) == 0
+        assert missing == []
+        stats = dict(sm.ckpt.last_restore_stats)
+        toks = {sid: sm.decode(sid, 3) for sid in ("h0", "h1")}
+        sm.close()
+        return stats, toks
+
+    results, errors = run_hosts(2, restore_host, timeout=TIMEOUT_S)
+    assert not any(errors), [e for e in errors if e]
+    stats, toks = results[1]
+    assert stats["level_served"][L2_PARTNER] > 0
+    assert stats["bytes_read_store"] == 0       # pure partner restore
+    for sid in ("h0", "h1"):
+        np.testing.assert_array_equal(toks[sid], cont[sid])
+
+
+# --------------------------------------------------------------------------
+# acceptance: kill host A mid-decode; survivors adopt and keep serving
+# --------------------------------------------------------------------------
+
+def test_kill_host_mid_decode_adopt_and_continue(engine, tmp_path):
+    """Host 0 dies mid-protocol during the step-2 snapshot (after its L2
+    replica landed).  The survivor commits the step degraded, adopts host
+    0's sessions from the partner replica (zero shared-store reads), and
+    continues every session bit-identically to an uninterrupted decode —
+    with no checkpoint left uncommitted."""
+    root = str(tmp_path)
+    by_host = {0: ["a0", "a1"], 1: ["b0"]}
+    adopter_out = {}
+
+    def host(p, coll):
+        inj = FaultInjector().kill_at("after_replicate", match="q2") \
+            if p == 0 else None
+        sm = mk_sm(engine, root, collective=coll, save_mode="device",
+                   barrier_timeout_s=BARRIER_S, fault_injector=inj)
+        for sid in by_host[p]:
+            sm.open(sid, mk_batch(engine, int(sid[1:]) + 10 * p))
+            sm.decode(sid, 2)
+        sm.snapshot(1, block=True)          # healthy coordinated snapshot
+        for sid in by_host[p]:
+            sm.step(sid)
+        sm.snapshot(2, block=True)          # host 0 dies inside this one
+        # --- only the survivor gets here -------------------------------
+        rep = migrate.adopt_sessions(sm, dead_host=0)
+        assert rep.step == 2
+        assert rep.adopted == ["a0", "a1"]
+        assert rep.shed == [] and rep.missing == []
+        assert rep.partner_served, rep.read_stats   # all bytes from L2
+        out = {sid: sm.decode(sid, 3)
+               for sid in by_host[1] + rep.adopted}
+        sm.close()
+        return out
+
+    results, errors = run_hosts(2, host, timeout=TIMEOUT_S)
+    assert errors[0] is not None            # host 0 really died
+    assert errors[1] is None, errors[1]
+    adopter_out.update(results[1])
+
+    # degraded step 2 committed; nothing left pending
+    assert not [d for d in os.listdir(root) if d.startswith(".pending")]
+    man = read_manifest(root, 2)
+    assert [int(h) for h in man["degraded"]["missing"]] == [0]
+    assert int(man["degraded"]["recovered_from"]["0"]) == 1
+
+    # bit-identical to an uninterrupted decode of every session
+    for p, sids in by_host.items():
+        for sid in sids:
+            ref = reference_tokens(engine, int(sid[1:]) + 10 * p, 6)
+            np.testing.assert_array_equal(adopter_out[sid], ref[:, 3:],
+                                          err_msg=f"session {sid}")
+
+
+def test_adoption_load_shedding(engine, tmp_path):
+    """A survivor at capacity adopts deterministically and sheds the rest."""
+    root = str(tmp_path)
+
+    def host(p, coll):
+        sm = mk_sm(engine, root, collective=coll, save_mode="device")
+        sids = [f"h{p}s{i}" for i in range(3 if p == 0 else 1)]
+        for i, sid in enumerate(sids):
+            sm.open(sid, mk_batch(engine, 10 * p + i))
+        sm.snapshot(0, block=True)
+        sm.close()
+
+    _, errors = run_hosts(2, host, timeout=TIMEOUT_S)
+    assert not any(errors), [e for e in errors if e]
+
+    sm = mk_sm(engine, tmp_path, max_sessions=3)
+    sm.open("own", mk_batch(engine, 99))
+    rep = migrate.adopt_sessions(sm, dead_host=0)
+    assert rep.adopted == ["h0s0", "h0s1"]      # capacity 3, 1 occupied
+    assert rep.shed == ["h0s2"]
+    # opening beyond capacity is refused (shedding, not oversubscription)
+    with pytest.raises(RuntimeError, match="capacity"):
+        sm.open("overflow", mk_batch(engine, 98))
+    sm.close()
