@@ -315,6 +315,132 @@ def bench_coordinated(out, quick: bool, hosts: int = 2):
 
 
 # --------------------------------------------------------------------------
+# 1c) observability: no-op overhead, trace export, fused telemetry
+# --------------------------------------------------------------------------
+
+def bench_obs(out, quick: bool, trace_path: str | None = None,
+              telemetry_path: str | None = None):
+    """Cost of the telemetry fabric on the save hot path.
+
+    ``obs_overhead_frac`` is the fractional slowdown of the device-packed
+    save with tracing *enabled* vs *disabled* (best-of-k both sides) — the
+    gate keeping the instrumented hot paths honest (< 2 %, enforced by
+    check_bench_regression's absolute floor).  ``trace_export_s`` times
+    the Chrome-trace JSON export of the buffer those saves filled.  A
+    2-host coordinated mini-run then exercises the leader-fused
+    ``telemetry.json`` path; pass ``--trace``/``--telemetry`` to keep the
+    artifacts (CI uploads them from the quick run).
+    """
+    import threading
+
+    from repro import obs as obs_mod
+    from repro.checkpoint import (CheckpointManager,
+                                  CoordinatedCheckpointManager, Level)
+    from repro.distributed.collective import FileCollective, ProcessContext
+
+    # the overhead *ratio* needs a denominator large enough that the
+    # fabric's constant per-save cost (~0.2 ms: span snapshot, frozen
+    # publish, drift fast path) can't masquerade as percents — quick mode
+    # keeps a bigger state here than the other quick sections
+    n = 1 << (22 if quick else 23)
+    rng = np.random.RandomState(0)
+    crit = 0.148
+    state = {
+        "w": jnp.asarray(rng.randn(n), jnp.float32),
+        "b": jnp.asarray(rng.randn(n // 8), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    masks = {"w": rng.rand(n) < crit, "b": rng.rand(n // 8) < crit}
+    report = _report_for(state, masks)
+    out("== observability overhead (device-packed save) ==")
+
+    root = tempfile.mkdtemp(prefix="bench_obs_")
+    was_enabled = obs_mod.enabled()
+    try:
+        # interleaved best-of: alternating enabled/disabled saves keeps
+        # thermal/frequency drift from biasing one side of the ratio
+        obs_mod.reset()
+        mgrs = {}
+        for label in ("off", "on"):
+            mgrs[label] = CheckpointManager(
+                [Level(os.path.join(root, label), keep_n=1)],
+                scrutiny_fn=lambda s, report=report: report,
+                save_mode="device")
+
+        def one(label: str) -> float:
+            (obs_mod.enable if label == "on" else obs_mod.disable)()
+            t0 = time.perf_counter()
+            mgrs[label].save(1, state, block=True)
+            return time.perf_counter() - t0
+
+        one("off"), one("on")                       # warm both paths
+        t_off = t_on = float("inf")
+        for _ in range(10 if quick else 5):
+            t_off = min(t_off, one("off"))
+            t_on = min(t_on, one("on"))
+        for mgr in mgrs.values():
+            mgr.close()
+        obs_mod.enable()       # buffer now holds the enabled runs' spans
+        overhead = max(0.0, t_on / t_off - 1.0)
+        out(f"save disabled {t_off*1e3:8.2f} ms  enabled "
+            f"{t_on*1e3:8.2f} ms  overhead {overhead:.2%} "
+            f"({'OK' if overhead < 0.02 else 'HIGH'})")
+
+        tp = trace_path or os.path.join(root, "trace.json")
+        t0 = time.perf_counter()
+        n_events = obs_mod.get_obs().buffer.export(tp)
+        trace_export_s = time.perf_counter() - t0
+        out(f"trace export: {n_events} events in {trace_export_s*1e3:.2f} ms"
+            + (f" -> {tp}" if trace_path else ""))
+
+        # fused telemetry: 2-host coordinated save with tracing on
+        hosts = 2
+        croot = os.path.join(root, "coord")
+        rdv = os.path.join(root, "rdv")
+        errs = []
+
+        def host(p):
+            try:
+                coll = FileCollective(rdv, ctx=ProcessContext(p, hosts),
+                                      timeout_s=120)
+                mgr = CoordinatedCheckpointManager(
+                    [Level(croot, keep_n=1)], collective=coll,
+                    scrutiny_fn=lambda s, report=report: report,
+                    save_mode="device")
+                mgr.save(1, state)
+                mgr.wait()
+                mgr.close()
+            except Exception as e:  # noqa: BLE001 - surfaced below
+                errs.append(e)
+
+        ths = [threading.Thread(target=host, args=(p,))
+               for p in range(hosts)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join()
+        if errs:
+            raise errs[0]
+        fused = os.path.join(croot, "step_1", "telemetry.json")
+        with open(fused) as f:
+            doc = json.load(f)
+        n_hosts = len(doc.get("hosts", {}))
+        out(f"fused telemetry.json: {n_hosts} host fragments")
+        if telemetry_path:
+            shutil.copyfile(fused, telemetry_path)
+            out(f"telemetry -> {telemetry_path}")
+        return {"t_disabled_s": t_off, "t_enabled_s": t_on,
+                "obs_overhead_frac": overhead,
+                "trace_export_s": trace_export_s,
+                "trace_events": int(n_events),
+                "telemetry_hosts": int(n_hosts)}
+    finally:
+        (obs_mod.enable if was_enabled else obs_mod.disable)()
+        obs_mod.reset()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# --------------------------------------------------------------------------
 # 2) host pack_leaf: vectorized vs seed per-region loop
 # --------------------------------------------------------------------------
 
@@ -388,7 +514,8 @@ def bench_kernel(out, quick: bool):
 
 
 def run(out=print, quick: bool = False, json_path: str | None = None,
-        only_coordinated: bool = False):
+        only_coordinated: bool = False, trace_path: str | None = None,
+        telemetry_path: str | None = None):
     results = {"quick": quick}
     if not only_coordinated:
         results["kernel"] = bench_kernel(out, quick)
@@ -398,6 +525,10 @@ def run(out=print, quick: bool = False, json_path: str | None = None,
         results["save_modes"] = bench_save_modes(out, quick)
         out("")
     results["coordinated"] = bench_coordinated(out, quick)
+    if not only_coordinated:
+        out("")
+        results["obs"] = bench_obs(out, quick, trace_path=trace_path,
+                                   telemetry_path=telemetry_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)
@@ -413,6 +544,11 @@ if __name__ == "__main__":
                     help="run only the coordinated-save row")
     ap.add_argument("--json", default=None,
                     help="write results to this JSON file")
+    ap.add_argument("--trace", default=None,
+                    help="export the obs bench's Chrome trace JSON here")
+    ap.add_argument("--telemetry", default=None,
+                    help="copy the obs bench's fused telemetry.json here")
     args = ap.parse_args()
     run(quick=args.quick, json_path=args.json,
-        only_coordinated=args.coordinated)
+        only_coordinated=args.coordinated, trace_path=args.trace,
+        telemetry_path=args.telemetry)

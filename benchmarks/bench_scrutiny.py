@@ -55,9 +55,19 @@ def _best_of(fn, k=2):
     return best
 
 
-def run(out=print, quick: bool = False, json_path: str | None = None):
+def run(out=print, quick: bool = False, json_path: str | None = None,
+        trace_path: str | None = None):
+    from repro import obs as obs_mod
     from repro.core import DeviceReport, ScrutinyConfig, scrutinize
     from repro.launch.compile_cache import enable_persistent_cache
+
+    # the whole bench runs with tracing on: scrutinize() itself emits
+    # prepass/sweep spans and feeds scrutiny.sweep_s / scrutiny.d2h_bytes,
+    # and the rows below land in the same registry (exported in the JSON)
+    was_obs = obs_mod.enabled()
+    obs_mod.reset()
+    obs_mod.enable()
+    reg = obs_mod.get_obs().registry
 
     # persistent compilation cache, armed on a fresh dir so the first
     # compile below is a true cold measurement that *populates* it
@@ -118,6 +128,9 @@ def run(out=print, quick: bool = False, json_path: str | None = None):
             "host_d2h_bytes": int(host_d2h), "device_d2h_bytes": int(dev_d2h),
             "d2h_frac": frac, "device_compile_s": compile_s,
         }
+        reg.histogram(f"bench.sweep.device_s.p{probes}").observe(dev_s)
+        reg.histogram(f"bench.sweep.host_s.p{probes}").observe(host_s)
+        reg.gauge(f"bench.sweep.compile_s.p{probes}").set(compile_s)
     # --- persistent compilation cache: cold vs warm compile --------------
     # clearing the in-process executable cache forces the next compile to
     # be served from the on-disk persistent cache — the *relaunch* regime
@@ -136,6 +149,8 @@ def run(out=print, quick: bool = False, json_path: str | None = None):
         "cold_compile_s": cold_s, "warm_compile_s": warm_s,
         "speedup": cold_s / max(warm_s, 1e-9),
     }
+    reg.gauge("bench.compile_cache.cold_s").set(cold_s)
+    reg.gauge("bench.compile_cache.warm_s").set(warm_s)
     # back to the durable default dir before dropping the measurement dir
     enable_persistent_cache()
     shutil.rmtree(cache_dir, ignore_errors=True)
@@ -211,6 +226,13 @@ def run(out=print, quick: bool = False, json_path: str | None = None):
     out("(CPU 'device' is the same memory space, so the wall-clock gap is "
         "pure compiled-sweep vs eager-loop overhead; on TPU the D2H column "
         "is the dominant term and follows the byte counts exactly)")
+    results["obs_registry"] = reg.to_dict()
+    if trace_path:
+        n_ev = obs_mod.get_obs().buffer.export(trace_path)
+        out(f"trace: {n_ev} events -> {trace_path}")
+    if not was_obs:
+        obs_mod.disable()
+    obs_mod.reset()
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)
@@ -224,5 +246,7 @@ if __name__ == "__main__":
                     help="small sizes for CI smoke runs")
     ap.add_argument("--json", default=None,
                     help="write results to this JSON file")
+    ap.add_argument("--trace", default=None,
+                    help="export the run's Chrome trace JSON here")
     args = ap.parse_args()
-    run(quick=args.quick, json_path=args.json)
+    run(quick=args.quick, json_path=args.json, trace_path=args.trace)

@@ -63,6 +63,12 @@ HEADLINES = {
         # two local writes (own + partner store) of the packed payload
         ("coordinated.partner_replicate_s", "lower", TIMING_TOLERANCE,
          0.30),
+        # telemetry fabric: the instrumented hot paths must stay no-op
+        # cheap — fractional save slowdown with tracing enabled vs
+        # disabled (interleaved best-of), hard-floored at the 2 % budget;
+        # trace export is one json.dump of the span buffer
+        ("obs.obs_overhead_frac", "lower", TIMING_TOLERANCE, 0.02),
+        ("obs.trace_export_s", "lower", TIMING_TOLERANCE, 0.25),
     ],
     "restore": [
         ("restore_modes.device.h2d_bytes", "lower"),
@@ -135,7 +141,11 @@ def check_pair(baseline_path: str, current_path: str, out=print) -> list:
             out(f"[skip] {name}:{path}: baseline has no quick_baseline "
                 f"entry for a cross-mode comparison")
             continue
-        if cur is None or base is None or base == 0:
+        # base == 0 leaves the ratio undefined, but a "lower" metric with
+        # an absolute floor is still gateable (obs_overhead_frac baselines
+        # at 0.0 and must stay under its 2 % budget)
+        if cur is None or base is None or (
+                base == 0 and (direction == "higher" or floor == 0.0)):
             out(f"[skip] {name}:{path}: metric missing "
                 f"(baseline={base} current={cur})")
             continue

@@ -90,6 +90,8 @@ from repro.checkpoint.store import (ALIVE_FILE, ShardReader, _delta_entry,
                                     segment_mask, sweep_retention,
                                     tmp_writer_alive, write_commit_marker,
                                     write_host_entries)
+from repro import obs as obs_mod
+from repro.obs.trace import _NULL_HANDLE
 from repro.core.criticality import _path_str
 from repro.distributed.collective import (BarrierTimeout, Collective,
                                           get_collective, owned_ranges,
@@ -280,6 +282,16 @@ class _CoordSnapshot:
         self._lock = threading.Lock()
         self._result = None
         self.d2h_bytes = 0
+        # save-stats tree + the lock every writer-thread mutation of it
+        # holds (freezing a published snapshot iterates the tree, so any
+        # concurrent key insert must be excluded); obs fields are filled
+        # in by save() at dispatch
+        self.stats: Dict[str, Any] = {}
+        self.stats_lock = threading.Lock()
+        self.obs_handle: Any = _NULL_HANDLE
+        self.obs_mark = 0
+        self.jobs_left = 0
+        self.fused_levels: List[Any] = []   # levels this host leads
         layout = []
         for name, leaf, sh in mgr._flat_state(state)[0]:
             shape = tuple(getattr(leaf, "shape", ()))
@@ -485,6 +497,13 @@ class CoordinatedCheckpointManager:
             raise ValueError(f"unknown pipeline_engine {pipeline_engine!r}")
         self.coll = collective if collective is not None else get_collective()
         self.ctx = self.coll.ctx
+        # per-host telemetry bundle: own registry + drift tracker, shared
+        # enabled switch and trace buffer (thread-simulated hosts merge
+        # into one Perfetto-loadable trace); the collective reports its
+        # barrier waits through the same registry
+        self.obs = obs_mod.scoped(process=self.ctx.index,
+                                  process_name=f"host{self.ctx.index}")
+        self.coll.obs = self.obs
         self.levels = list(levels)
         self.scrutiny_fn = scrutiny_fn
         self.rescrutinize_every = rescrutinize_every
@@ -549,6 +568,7 @@ class CoordinatedCheckpointManager:
         self._l1 = ResidentCache(keep_n=l1_keep_n)
         self._l2_stacks: Dict[str, L2Stack] = {}
         self._faults = fault_injector
+        self._live_save_stats: Optional[Dict[str, Any]] = None
         self.last_save_stats: Optional[Dict[str, Any]] = None
         self.last_restore_stats: Optional[Dict[str, Any]] = None
         self.last_scrutiny_stats: Optional[Dict[str, Any]] = None
@@ -584,10 +604,12 @@ class CoordinatedCheckpointManager:
             self._closed = True
             self.coll.close()
 
-    def wait(self) -> None:
+    def wait(self):
         """Block until every in-flight save has landed; raise the first
         writer error (each error is raised exactly once — a drained
-        future is removed before its result is collected)."""
+        future is removed before its result is collected).  Returns the
+        *finalized* ``last_save_stats`` snapshot (writer-thread phase
+        timings included)."""
         if self._inner is not None:
             return self._inner.wait()
         futs = list(self._inflight.values())
@@ -601,6 +623,7 @@ class CoordinatedCheckpointManager:
                     first = e
         if first is not None:
             raise first
+        return self.last_save_stats
 
     # --- scrutiny --------------------------------------------------------
 
@@ -609,11 +632,17 @@ class CoordinatedCheckpointManager:
         ``manager.update_report``; every host runs it locally, and
         determinism of ``scrutiny_fn`` keeps decisions aligned — the
         leader additionally validates at fuse time)."""
-        new, ran = update_report(self.scrutiny_fn, self._report,
-                                 self._saves, self.rescrutinize_every,
-                                 state, check=self.soundness_check)
+        with self.obs.tracer.span("scrutiny", saves=self._saves):
+            new, ran = update_report(self.scrutiny_fn, self._report,
+                                     self._saves, self.rescrutinize_every,
+                                     state, check=self.soundness_check)
         if ran:
+            # live view, deliberately not frozen: device reports account
+            # their lazy mask D2H into these stats after publication
             self.last_scrutiny_stats = getattr(new, "stats", None)
+            if new is not None and self.obs.enabled:
+                with self.obs.tracer.span("scrutiny.drift"):
+                    self.obs.drift.observe(new, step=self._saves)
         self._report = new
         return self._report
 
@@ -636,18 +665,23 @@ class CoordinatedCheckpointManager:
         if self._closed:
             raise RuntimeError("CoordinatedCheckpointManager is closed")
         t0 = time.perf_counter()
+        obs_mark = self.obs.buffer.mark()
         report = self._maybe_report(state)
         self._saves += 1
         stats = {"mode": "coordinated", "process": self.ctx.index,
                  "process_count": self.ctx.count, "levels": {},
                  "host_bytes_written": 0, "d2h_bytes": 0, "blocked_s": 0.0}
-        self.last_save_stats = stats
-        snap = _CoordSnapshot(self, state, report)
+        with self.obs.tracer.span("save.snapshot", step=step):
+            snap = _CoordSnapshot(self, state, report)
+        snap.stats = stats
+        snap.obs_mark = obs_mark
+        snap.obs_handle = self.obs.tracer.begin(
+            f"save/step_{step}", step=step, mode="coordinated")
         fired: List[Level] = []
         futs: List[cf.Future] = []
-        for lv in self.levels:
-            if step % lv.interval:
-                continue
+        due = [lv for lv in self.levels if step % lv.interval == 0]
+        snap.jobs_left = len(due)
+        for lv in due:
             # double buffer: drain the previous in-flight save for this
             # level on the caller thread (its error propagates here, once)
             prev = self._inflight.pop(lv.directory, None)
@@ -657,12 +691,23 @@ class CoordinatedCheckpointManager:
             seq = self._seq
             tag = f"q{seq}.L{self.levels.index(lv)}"
             plan = self._plan_level(lv, step, report, snap)
-            fut = self._pool.submit(self._run_level, lv, step, seq, tag,
-                                    snap, plan, stats)
+            fut = self._pool.submit(self._run_level_job, lv, step, seq,
+                                    tag, snap, plan, stats)
             self._inflight[lv.directory] = fut
             fired.append(lv)
             futs.append(fut)
-        stats["blocked_s"] = time.perf_counter() - t0
+        with snap.stats_lock:
+            stats["blocked_s"] = time.perf_counter() - t0
+        # dispatch snapshot: an immutable view of what the caller blocked
+        # for; the finalized snapshot (writer phase timings) replaces it
+        # when the level jobs drain (wait() returns that one)
+        with self._lock:
+            self._live_save_stats = stats
+        with snap.stats_lock:
+            self.last_save_stats = self.obs.registry.publish("save", stats)
+        self.obs.registry.counter("save.dispatches").inc()
+        if not due:
+            snap.obs_handle.finish()
         if block:
             first: Optional[BaseException] = None
             for lv, fut in zip(fired, futs):
@@ -743,6 +788,8 @@ class CoordinatedCheckpointManager:
             prev_sources = cs.sources
             cs.chain.append(step)
             cs.sources = None       # set again when this write lands
+            self.obs.registry.gauge("save.delta_chain_len").set(
+                len(cs.chain))
             return {"kind": "delta", "chain": chain,
                     "prev_sources": prev_sources, "cs": cs}
         target = None
@@ -782,6 +829,7 @@ class CoordinatedCheckpointManager:
                                  f"L{self.levels.index(lv)}")
                     if self.l2_root else default_l2_root(lv.directory))
             st = L2Stack(root, self.ctx.index, self.ctx.count)
+            st.obs = self.obs
             self._l2_stacks[lv.directory] = st
         return st
 
@@ -790,6 +838,35 @@ class CoordinatedCheckpointManager:
             if lv.directory == root:
                 return self._l2_stack(lv)
         return None
+
+    def _run_level_job(self, lv: Level, step: int, seq: int, tag: str,
+                       snap: _CoordSnapshot, plan: Dict[str, Any], stats):
+        """Writer-thread wrapper: run the level, then finalize this
+        save's published stats when its last level job drains (success
+        *or* failure — a failed save still finalizes what it measured)."""
+        try:
+            return self._run_level(lv, step, seq, tag, snap, plan, stats)
+        finally:
+            self._level_done(snap, step)
+
+    def _level_done(self, snap: _CoordSnapshot, step: int) -> None:
+        with snap.stats_lock:
+            snap.jobs_left -= 1
+            done = snap.jobs_left <= 0
+        if not done:
+            return
+        if snap.obs_handle is not None:
+            snap.obs_handle.finish()
+        # identity-guarded: a newer save's dispatch snapshot must not be
+        # clobbered by this (older) save's finalization
+        with self._lock:
+            live = self._live_save_stats is snap.stats
+        if live:
+            with snap.stats_lock:
+                self.last_save_stats = self.obs.registry.publish(
+                    "save", snap.stats)
+        for lv in snap.fused_levels:
+            self._fuse_telemetry(lv, step, snap)
 
     def _run_level(self, lv: Level, step: int, seq: int, tag: str,
                    snap: _CoordSnapshot, plan: Dict[str, Any], stats):
@@ -807,23 +884,32 @@ class CoordinatedCheckpointManager:
         l2 = self._l2_stack(lv)
         survivors = list(range(self.ctx.count))
         lv_stats: Dict[str, Any] = {"kind": kind}
-        with self._lock:
+        with snap.stats_lock:
             stats["levels"][lv.directory] = lv_stats
+        h = snap.obs_handle
         try:
             tp = time.perf_counter()
-            items, sources = snap.materialize(heartbeat=alive)
-            lv_stats["pack_s"] = time.perf_counter() - tp
-            with self._lock:
+            with h.stage("pack", level=lv.directory):
+                items, sources = snap.materialize(heartbeat=alive)
+            with snap.stats_lock:
+                lv_stats["pack_s"] = time.perf_counter() - tp
+                d2h_delta = snap.d2h_bytes - stats["d2h_bytes"]
                 stats["d2h_bytes"] = snap.d2h_bytes
+            if d2h_delta > 0:       # memoized materialization: count once
+                self.obs.registry.counter("save.d2h_bytes").inc(
+                    int(d2h_delta))
             self._fire("pack_done", name=tag, step=step)
             if l2 is not None:
                 tr = time.perf_counter()
-                rep = l2.replicate(step, items)
-                with self._lock:
+                with h.stage("replicate", level=lv.directory):
+                    rep = l2.replicate(step, items)
+                rep_bytes = rep["l2_local_bytes"] + rep["l2_partner_bytes"]
+                with snap.stats_lock:
                     stats.setdefault("l2_bytes_replicated", 0)
-                    stats["l2_bytes_replicated"] += (
-                        rep["l2_local_bytes"] + rep["l2_partner_bytes"])
+                    stats["l2_bytes_replicated"] += rep_bytes
                 rep["replicate_s"] = time.perf_counter() - tr
+                self.obs.registry.counter(
+                    "save.l2_bytes_replicated").inc(int(rep_bytes))
             else:
                 rep = {}
             alive()
@@ -831,6 +917,8 @@ class CoordinatedCheckpointManager:
             if kind == "delta":
                 prev_sources = plan["prev_sources"]
                 entries = []
+                delta_span = h.stage("delta", level=lv.directory)
+                delta_span.__enter__()
                 for name, flo, fhi, meta, payload in items:
                     curr = sources[(name, flo, fhi)]
                     prev = prev_sources[(name, flo, fhi)]
@@ -847,6 +935,7 @@ class CoordinatedCheckpointManager:
                               stop=meta["stop"])
                     entries.append((dm, len(d.payload),
                                     BytesSource(bytes(d.payload))))
+                delta_span.__exit__(None, None, None)
             else:
                 # zero-copy chunked streams over the packed host payloads
                 # (stage-2 reuse: the writer consumes ViewSource chunks)
@@ -858,32 +947,54 @@ class CoordinatedCheckpointManager:
             if chain:
                 extra["chain"] = [int(s) for s in chain[:-1]]
             tw = time.perf_counter()
-            write_host_entries(pending, self.ctx.index, entries,
-                               shards=lv.shards, extra=extra,
-                               submit=self._submit_io())
+            with h.stage("write", level=lv.directory):
+                write_host_entries(pending, self.ctx.index, entries,
+                                   shards=lv.shards, extra=extra,
+                                   submit=self._submit_io())
             written = sum(int(n) for _, n, _ in entries)
-            with self._lock:
+            with snap.stats_lock:
                 stats["host_bytes_written"] += written
-            lv_stats["host_bytes_written"] = written
-            lv_stats["write_s"] = time.perf_counter() - tw
-            lv_stats.update(rep)
+                lv_stats["host_bytes_written"] = written
+                lv_stats["write_s"] = time.perf_counter() - tw
+                lv_stats.update(rep)
+            self.obs.registry.counter("save.host_bytes_written").inc(written)
             self._fire("after_land_write", name=tag, step=step)
+            # phase-1 telemetry fragment: lands with the shards so the
+            # leader can fuse it post-commit (this host may not survive
+            # to the commit barrier); referenced in _fuse_and_commit so
+            # the prune keeps it
+            if self.obs.enabled:
+                self._write_host_telemetry(pending, snap)
 
             t1 = time.perf_counter()
-            survivors, degraded, recovered = self._land(
-                tag, lv, step, pending, kind, l2, lv_stats,
-                heartbeat=alive)
-            lv_stats["land_barrier_s"] = time.perf_counter() - t1
+            with h.stage("land", level=lv.directory):
+                survivors, degraded, recovered = self._land(
+                    tag, lv, step, pending, kind, l2, lv_stats,
+                    snap.stats_lock, heartbeat=alive)
+            with snap.stats_lock:
+                lv_stats["land_barrier_s"] = time.perf_counter() - t1
+            if degraded is not None:
+                self.obs.registry.counter("save.degraded").inc()
             if self.ctx.index == survivors[0]:
                 t2 = time.perf_counter()
-                self._fuse_and_commit(lv, step, pending, kind, chain,
-                                      host_manifests_override=recovered,
-                                      degraded=degraded)
-                lv_stats["commit_s"] = time.perf_counter() - t2
+                with h.stage("commit", level=lv.directory):
+                    self._fuse_and_commit(lv, step, pending, kind, chain,
+                                          host_manifests_override=recovered,
+                                          degraded=degraded)
+                with snap.stats_lock:
+                    lv_stats["commit_s"] = time.perf_counter() - t2
             self._fire("before_commit_barrier", name=tag, step=step)
-            self._commit_barrier(tag, lv, step, survivors, lv_stats,
-                                 heartbeat=alive)
+            with h.stage("commit_barrier", level=lv.directory):
+                self._commit_barrier(tag, lv, step, survivors, lv_stats,
+                                     snap.stats_lock, heartbeat=alive)
             self._fire("after_commit", name=tag, step=step)
+            if self.obs.enabled and self.ctx.index != survivors[0]:
+                # non-leaders refresh their committed fragment with the
+                # land/commit-barrier timings (the leader's own fragment
+                # is refreshed in-memory at fusion time)
+                final = os.path.join(lv.directory, f"step_{step}")
+                if os.path.isdir(final):
+                    self._write_host_telemetry(final, snap)
         except BaseException:
             # the chain must never reference a step that did not commit
             self._drop_chain(lv, plan["cs"])
@@ -892,6 +1003,11 @@ class CoordinatedCheckpointManager:
             if plan["cs"] is not None \
                     and self._chains.get(lv.directory) is plan["cs"]:
                 plan["cs"].sources = sources
+        if self.obs.enabled and self.ctx.index == survivors[0]:
+            # fusion is deferred to _level_done so the fused fragment
+            # carries the finalized stats and the span's async-end event
+            with snap.stats_lock:
+                snap.fused_levels.append(lv)
         self._l1.put(lv.directory, step, items)
         self._cleanup_barriers(lv, seq)
         if self.ctx.index == survivors[0]:
@@ -902,7 +1018,60 @@ class CoordinatedCheckpointManager:
             # not the store listing, so it cannot race the leader's _gc
             steps = committed_steps(lv.directory)
             l2.gc(steps[-lv.keep_n:] if lv.keep_n else steps)
-        lv_stats["total_s"] = time.perf_counter() - t0
+        with snap.stats_lock:
+            lv_stats["total_s"] = time.perf_counter() - t0
+
+    # --- telemetry -------------------------------------------------------
+
+    def _write_host_telemetry(self, dirpath: str,
+                              snap: _CoordSnapshot) -> None:
+        """This host's telemetry fragment into ``dirpath`` (the pending
+        dir in phase 1, the committed dir for the post-commit refresh).
+        The published save snapshot is refreshed first so the fragment's
+        stats carry the phase timings measured so far; the write is
+        atomic (tmp + replace) because the leader's fusion may read the
+        file while a post-commit refresh lands."""
+        with snap.stats_lock:
+            self.obs.registry.publish("save", snap.stats)
+        frag = self.obs.telemetry_fragment(since_mark=snap.obs_mark)
+        path = os.path.join(dirpath,
+                            f"telemetry.host{self.ctx.index}.json")
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(frag, f)
+            os.replace(tmp, path)
+        except OSError:
+            pass
+
+    def _fuse_telemetry(self, lv: Level, step: int,
+                        snap: _CoordSnapshot) -> None:
+        """Leader, post-commit: fuse every host's phase-1 fragment into
+        the committed step's ``telemetry.json``.  The leader's own
+        fragment is refreshed so it carries the land/commit timings;
+        writing into the committed dir after the rename is safe — the
+        commit marker, not the dir contents, governs validity."""
+        final = os.path.join(lv.directory, f"step_{step}")
+        if not os.path.isdir(final):
+            return
+        hosts: Dict[str, Any] = {}
+        for p in range(self.ctx.count):
+            path = os.path.join(final, f"telemetry.host{p}.json")
+            try:
+                with open(path) as f:
+                    hosts[str(p)] = json.load(f)
+            except (OSError, ValueError):
+                continue
+        with snap.stats_lock:
+            self.obs.registry.publish("save", snap.stats)
+        hosts[str(self.ctx.index)] = self.obs.telemetry_fragment(
+            since_mark=snap.obs_mark)
+        doc = {"step": int(step), "kind": "save", "hosts": hosts}
+        try:
+            with open(os.path.join(final, "telemetry.json"), "w") as f:
+                json.dump(doc, f)
+        except OSError:
+            pass
 
     def _cleanup_barriers(self, lv: Level, seq: int) -> None:
         """Barrier-file cleanup threshold for concurrent per-level saves:
@@ -922,7 +1091,7 @@ class CoordinatedCheckpointManager:
     # --- failure detection & degraded commit -----------------------------
 
     def _land(self, tag: str, lv: Level, step: int, pending: str,
-              kind: str, l2: Optional[L2Stack], lv_stats,
+              kind: str, l2: Optional[L2Stack], lv_stats, stats_lock,
               heartbeat: Optional[Any] = None):
         """The land barrier, with degradation: on a ``BarrierTimeout`` the
         surviving quorum recovers the dead hosts' current-step segments
@@ -954,7 +1123,8 @@ class CoordinatedCheckpointManager:
                                 f"host {d}'s partner {holder} is also "
                                 f"dead — no L2 replica reachable")
                         recovered[d] = self._recover_host(
-                            lv, step, pending, kind, d, holder, lv_stats)
+                            lv, step, pending, kind, d, holder, lv_stats,
+                            stats_lock)
                 except (OSError, ValueError) as rec_err:
                     # recovery impossible (host died before replicating,
                     # replica corrupt, partner dead too): the save fails
@@ -974,7 +1144,8 @@ class CoordinatedCheckpointManager:
                 survivors = [int(p) for p in degraded["survivors"]]
                 if self.ctx.index not in survivors:
                     raise
-            lv_stats["degraded"] = degraded
+            with stats_lock:
+                lv_stats["degraded"] = degraded
             self.coll.barrier(f"{name}2", timeout=self.barrier_timeout_s,
                               participants=survivors, heartbeat=heartbeat)
             return survivors, degraded, recovered
@@ -1002,7 +1173,8 @@ class CoordinatedCheckpointManager:
         raise orig
 
     def _recover_host(self, lv: Level, step: int, pending: str, kind: str,
-                      dead: int, holder: int, lv_stats) -> Dict[str, Any]:
+                      dead: int, holder: int, lv_stats,
+                      stats_lock) -> Dict[str, Any]:
         """Materialize a dead host's segments into the pending dir from
         its partner's CRC-verified L2 replica.  The replica holds the full
         current-step packed payloads, so even mid-delta-chain the
@@ -1020,14 +1192,15 @@ class CoordinatedCheckpointManager:
                  "kind": kind, "recovered_from": int(holder)}
         write_host_entries(pending, dead, entries, shards=lv.shards,
                            extra=extra, prefix=f"l2r_h{dead}_")
-        lv_stats.setdefault("l2_recovered_bytes", 0)
-        lv_stats["l2_recovered_bytes"] += sum(len(r) for _, r in pairs)
+        with stats_lock:
+            lv_stats.setdefault("l2_recovered_bytes", 0)
+            lv_stats["l2_recovered_bytes"] += sum(len(r) for _, r in pairs)
         with open(os.path.join(pending,
                                f"manifest.host{dead}.json")) as f:
             return json.load(f)
 
     def _commit_barrier(self, tag: str, lv: Level, step: int,
-                        survivors: List[int], lv_stats,
+                        survivors: List[int], lv_stats, stats_lock,
                         heartbeat: Optional[Any] = None) -> None:
         """The commit barrier tolerates members dying *after* the commit
         marker landed: the step is durably visible, so survivors report
@@ -1042,7 +1215,8 @@ class CoordinatedCheckpointManager:
         except BarrierTimeout as e:
             if not is_step_committed(lv.directory, step):
                 raise
-            lv_stats["commit_barrier_missing"] = list(e.missing)
+            with stats_lock:
+                lv_stats["commit_barrier_missing"] = list(e.missing)
 
     def _fuse_and_commit(self, lv: Level, step: int, pending: str,
                          kind: str, chain: List[int],
@@ -1088,6 +1262,11 @@ class CoordinatedCheckpointManager:
         # dir; only files the fused manifest references may be committed.
         referenced = {"manifest.json"}
         referenced.update(f"manifest.host{p}.json"
+                          for p in range(self.ctx.count))
+        # phase-1 telemetry fragments ride along (only present when
+        # observability is enabled); the post-commit fusion reads them
+        referenced.add("telemetry.json")
+        referenced.update(f"telemetry.host{p}.json"
                           for p in range(self.ctx.count))
         for leaf in manifest["leaves"]:
             referenced.update(s["file"] for s in leaf["segments"])
@@ -1182,7 +1361,8 @@ class CoordinatedCheckpointManager:
             except (OSError, ValueError, KeyError) as e:
                 skipped.append({"step": step, "root": root, "error": str(e)})
                 continue
-        self.last_restore_stats = {"skipped": skipped, "step": None}
+        self.last_restore_stats = self.obs.registry.publish(
+            "restore", {"skipped": skipped, "step": None})
         return None
 
     def _restore_step(self, root, step, state_like, shardings, fill, mode,
@@ -1220,7 +1400,8 @@ class CoordinatedCheckpointManager:
         entries = gm.leaves()
         d = os.path.join(root, f"step_{step}")
         out = []
-        with ShardReader(d, int(gm.manifest.get("shards", 0) or 1)) as rd:
+        with self.obs.tracer.span("restore.read", step=step), \
+                ShardReader(d, int(gm.manifest.get("shards", 0) or 1)) as rd:
             fetcher = _LevelFetcher(self, root, step, rd,
                                     self._l2_for_root(root),
                                     gm.process_count, stats)
@@ -1236,7 +1417,15 @@ class CoordinatedCheckpointManager:
                 out.append(self._restore_leaf(fetcher, e, leaf, sh, fill,
                                               mode, stats, chain_packed,
                                               local_only))
-        self.last_restore_stats = stats
+        self.last_restore_stats = self.obs.registry.publish(
+            "restore", stats)
+        reg = self.obs.registry
+        reg.counter("restore.h2d_bytes").inc(int(stats["h2d_bytes"]))
+        reg.counter("restore.bytes_read").inc(int(stats["bytes_read"]))
+        if stats["bytes_read_store"] == 0 and (stats["bytes_read_l2"]
+                                               or stats["bytes_l1"]):
+            # the zero-shared-store-read guarantee of a partner restore
+            reg.counter("restore.partner_served").inc()
         return step, jax.tree_util.tree_unflatten(treedef, out)
 
     def _target_ranges(self, shape, sh, local_only=False):

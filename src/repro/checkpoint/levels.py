@@ -52,6 +52,8 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import _NULL_SPAN
+
 L1_RESIDENT = "l1_resident"
 L2_PARTNER = "l2_partner"
 L3_PARITY = "l3_parity"
@@ -333,6 +335,8 @@ class L2Stack:
         self.root = root
         self.index = int(index)
         self.count = int(count)
+        #: optional per-host telemetry bundle (set by the coordinator)
+        self.obs: Optional[Any] = None
 
     def store_of(self, host: int) -> PartnerStore:
         return PartnerStore(os.path.join(self.root, f"h{int(host)}"),
@@ -342,13 +346,26 @@ class L2Stack:
     def own(self) -> PartnerStore:
         return self.store_of(self.index)
 
+    def _span(self, name: str, **args):
+        obs = self.obs
+        if obs is None:
+            return _NULL_SPAN
+        return obs.tracer.span(name, **args)
+
     def replicate(self, step: int, items: List[Tuple]) -> Dict[str, int]:
-        own_bytes = self.own.replicate(step, self.index, items)
+        with self._span("l2.replicate.local", step=int(step)):
+            own_bytes = self.own.replicate(step, self.index, items)
         partner = partner_of(self.index, self.count)
         rep_bytes = 0
         if partner != self.index:
-            rep_bytes = self.store_of(partner).replicate(
-                step, self.index, items)
+            with self._span("l2.replicate.partner", step=int(step),
+                            partner=partner):
+                rep_bytes = self.store_of(partner).replicate(
+                    step, self.index, items)
+        if self.obs is not None and self.obs.enabled:
+            reg = self.obs.registry
+            reg.counter("l2.local_bytes").inc(int(own_bytes))
+            reg.counter("l2.partner_bytes").inc(int(rep_bytes))
         return {"l2_local_bytes": int(own_bytes),
                 "l2_partner_bytes": int(rep_bytes),
                 "l2_partner": int(partner)}
@@ -373,7 +390,10 @@ class L2Stack:
         st = self.store_of(holder)
         e = st.entry_for(step, owner, key)
         if e is not None:
-            return st, owner, e, holder != self.index
+            fetch = holder != self.index
+            if fetch and self.obs is not None and self.obs.enabled:
+                self.obs.registry.counter("l2.fabric_fetches").inc()
+            return st, owner, e, fetch
         return None
 
     def gc(self, keep_steps: Iterable[int]) -> None:

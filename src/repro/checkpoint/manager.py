@@ -69,14 +69,22 @@ asynchronous save engine**.
 
 ``last_save_stats`` adds pipeline observability: ``blocked_s`` (how long
 ``save()`` held the caller), ``stages`` (per-stage seconds), and
-``engine``.  Timing fields are finalized when the write lands (always the
-case after ``save(..., block=True)`` / ``wait()``).
+``engine``.  Stats are **immutable snapshots** published through the
+``repro.obs`` metrics registry: an early snapshot at dispatch time (with
+whatever stages have run synchronously) and a finalized one — also
+returned by ``wait()`` — when the level jobs drain.  Writer threads only
+ever mutate the snapshot's private working dict, so a reader between
+``save(block=False)`` and ``wait()`` can no longer observe a torn,
+half-updated ``stages`` table.  With ``repro.obs`` enabled the save is
+additionally traced (a cross-thread span per save, stage sub-spans on the
+writer/io threads) and a ``telemetry.json`` lands next to the manifest.
 """
 
 from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import json
 import os
 import shutil
 import threading
@@ -88,6 +96,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.checkpoint.packing import (DeltaLeaf, PackedLeaf,
                                       delta_encode_host, leaf_mask,
                                       pack_leaf, packed_leaf_stub,
@@ -246,6 +255,10 @@ class _SaveSnapshot:
         self.use_stream = False       # set by the manager before jobs run
         self.stats: Optional[Dict[str, Any]] = None
         self._stats_lock = threading.Lock()
+        self.obs_handle = None        # cross-thread save span (repro.obs)
+        self.obs_mark = 0             # trace-buffer mark at dispatch
+        self.jobs_left = 0            # level jobs still to drain
+        self.fired_levels: List[Level] = []
 
     # stats are shared by every level job of this save: guard the
     # read-modify-write updates so concurrent jobs don't drop each other's
@@ -257,6 +270,10 @@ class _SaveSnapshot:
         with self._stats_lock:
             stages = self.stats["stages"]
             stages[name] = max(stages.get(name, 0.0), v)
+
+    def stat_level(self, level: str, key: str, v) -> None:
+        with self._stats_lock:
+            self.stats["levels"][level][key] = v
 
     # ---------------- stage 1: pin + batched pack dispatch ----------------
 
@@ -596,11 +613,17 @@ class CheckpointManager:
         self._io_pool: Optional[cf.ThreadPoolExecutor] = \
             cf.ThreadPoolExecutor(max_workers=self.io_threads)
         self._inflight: Dict[str, cf.Future] = {}
+        self._tel_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._tel_futs: List[cf.Future] = []
         self._chains: Dict[str, _ChainState] = {}
         self._lock = threading.Lock()
+        # telemetry bundle (tracer + metrics registry + drift tracker);
+        # the coordinator overrides this with a per-host scoped bundle
+        self.obs = obs_mod.get_obs()
         self.last_save_stats: Optional[Dict[str, Any]] = None
         self.last_restore_stats: Optional[Dict[str, Any]] = None
         self.last_scrutiny_stats: Optional[Dict[str, Any]] = None
+        self._live_save_stats: Optional[Dict[str, Any]] = None
 
     # --- lifecycle -------------------------------------------------------
 
@@ -621,12 +644,17 @@ class CheckpointManager:
             self._pool.shutdown(wait=True)
             if self._io_pool is not None:
                 self._io_pool.shutdown(wait=True)
+            if self._tel_pool is not None:
+                self._tel_pool.shutdown(wait=True)
             self._pool = None
             self._io_pool = None
+            self._tel_pool = None
 
     def wait(self):
         """Block until every in-flight write lands.  Clears the in-flight
-        table first, so each writer exception propagates exactly once."""
+        table first, so each writer exception propagates exactly once.
+        Returns the finalized ``last_save_stats`` snapshot (the level jobs
+        republish it as they drain), or None if nothing was saved."""
         futs = list(self._inflight.values())
         self._inflight.clear()
         errs = []
@@ -635,8 +663,13 @@ class CheckpointManager:
                 f.result()
             except Exception as e:      # noqa: BLE001 - re-raised below
                 errs.append(e)
+        with self._lock:
+            tel, self._tel_futs = self._tel_futs, []
+        for f in tel:
+            f.result()          # best-effort writes never raise
         if errs:
             raise errs[0]
+        return self.last_save_stats
 
     # --- save ------------------------------------------------------------
 
@@ -648,11 +681,17 @@ class CheckpointManager:
         no-op re-scrutiny returns the identical report object — which is
         what keeps differential chains (`_delta_ok` keys on report
         identity) alive across ``rescrutinize_every=1``."""
-        new, ran = update_report(self.scrutiny_fn, self._report,
-                                 self._saves, self.rescrutinize_every,
-                                 state, check=self.soundness_check)
+        with self.obs.tracer.span("scrutiny", saves=self._saves):
+            new, ran = update_report(self.scrutiny_fn, self._report,
+                                     self._saves, self.rescrutinize_every,
+                                     state, check=self.soundness_check)
         if ran:
+            # live view, not frozen: device reports account their lazy
+            # mask D2H into this dict when materialized
             self.last_scrutiny_stats = getattr(new, "stats", None)
+            if new is not None and self.obs.enabled:
+                with self.obs.tracer.span("scrutiny.drift"):
+                    self.obs.drift.observe(new, step=self._saves)
         self._report = new
         return self._report
 
@@ -683,10 +722,12 @@ class CheckpointManager:
         t0 = time.perf_counter()
         if self._pool is None:
             raise RuntimeError("CheckpointManager is closed")
+        obs_mark = self.obs.buffer.mark()
         report = self.maybe_report(state)
         self._saves += 1
         t1 = time.perf_counter()
-        snap = _SaveSnapshot(self, state, report)
+        with self.obs.tracer.span("save.snapshot", step=step):
+            snap = _SaveSnapshot(self, state, report)
         level_stats: Dict[str, Any] = {}
         stats = {
             "mode": "device" if snap.device else "host",
@@ -699,8 +740,11 @@ class CheckpointManager:
             "stages": {"snapshot_s": time.perf_counter() - t1},
             "blocked_s": 0.0,
         }
-        self.last_save_stats = stats
         snap.stats = stats
+        snap.obs_mark = obs_mark
+        snap.obs_handle = self.obs.tracer.begin(
+            f"save/step_{step}", step=step, mode=stats["mode"],
+            engine=stats["engine"])
         plans: List[Tuple[Level, Callable[[], str]]] = []
         any_base = False
         for lv in self.levels:
@@ -721,6 +765,8 @@ class CheckpointManager:
                 level_stats[lv.directory] = {
                     "kind": "delta", "base_step": cs.base_step,
                     "chain_len": len(cs.chain)}
+                self.obs.registry.gauge("save.delta_chain_len").set(
+                    len(cs.chain))
 
                 def write(lv=lv, step=step, snap=snap, cs=cs, chain=chain,
                           prev_sources=prev_sources):
@@ -754,12 +800,26 @@ class CheckpointManager:
         stats["d2h_bytes"] = (snap.d2h_estimate(delta_only=not any_base)
                               if plans else 0)
 
+        snap.jobs_left = len(plans)
+        snap.fired_levels = [lv for lv, _ in plans]
         futs = []
         for lv, write in plans:
-            fut = self._pool.submit(write)
+            fut = self._pool.submit(self._run_job, write, snap, step)
             self._inflight[lv.directory] = fut
             futs.append(fut)
         stats["blocked_s"] = time.perf_counter() - t0
+        # dispatch-time snapshot: immutable, safe to read before wait();
+        # the level jobs republish a finalized snapshot as they drain.
+        # Writers mutate only under snap._stats_lock, so the deep-freeze
+        # below never iterates a dict another thread is resizing.
+        with self._lock:
+            self._live_save_stats = stats
+        with snap._stats_lock:
+            self.last_save_stats = self.obs.registry.publish("save", stats)
+        self.obs.registry.counter("save.dispatches").inc()
+        self.obs.registry.counter("save.d2h_bytes").inc(stats["d2h_bytes"])
+        if not plans:
+            snap.obs_handle.finish()
         if block:
             errs = []
             for f in futs:
@@ -782,13 +842,72 @@ class CheckpointManager:
     def _submit_io(self):
         return self._io_pool.submit if self._io_pool is not None else None
 
+    def _run_job(self, write, snap: _SaveSnapshot, step: int):
+        """One level job + drain bookkeeping: when the last job of a save
+        finishes (even on failure) its cross-thread span is closed and the
+        finalized stats snapshot is republished."""
+        try:
+            return write()
+        finally:
+            self._job_done(snap, step)
+
+    def _job_done(self, snap: _SaveSnapshot, step: int) -> None:
+        with snap._stats_lock:
+            snap.jobs_left -= 1
+            done = snap.jobs_left <= 0
+        if not done:
+            return
+        if snap.obs_handle is not None:
+            snap.obs_handle.finish()
+        with self._lock:
+            live = self._live_save_stats is snap.stats
+        if live:
+            with snap._stats_lock:
+                self.last_save_stats = self.obs.registry.publish(
+                    "save", snap.stats)
+        if self.obs.enabled:
+            # spans snapshot now (so the next save's events don't smear
+            # in); serialization + write go to a dedicated single-thread
+            # executor — telemetry is best-effort and must ride neither
+            # the blocked save path nor the data-path io pool (where it
+            # would steal a thread from the next save's D2H/shard writes)
+            events = self.obs.span_snapshot(snap.obs_mark)
+            with self._lock:
+                if self._tel_pool is None:
+                    self._tel_pool = cf.ThreadPoolExecutor(
+                        max_workers=1,
+                        thread_name_prefix="ckpt-telemetry")
+                pool = self._tel_pool
+                self._tel_futs.append(
+                    pool.submit(self._write_telemetry, snap, step, events))
+
+    def _write_telemetry(self, snap: _SaveSnapshot, step: int,
+                         events: Optional[List[Dict[str, Any]]] = None
+                         ) -> None:
+        """Single-host telemetry.json next to each committed manifest.
+        Only written with observability enabled, so default-off runs keep
+        byte-identical checkpoint directories."""
+        doc = {"step": int(step), "kind": "save",
+               "hosts": {str(self.obs.process): self.obs.telemetry_fragment(
+                   since_mark=snap.obs_mark, events=events)}}
+        for lv in snap.fired_levels:
+            final = os.path.join(lv.directory, f"step_{step}")
+            if not os.path.isdir(final):
+                continue
+            try:
+                with open(os.path.join(final, "telemetry.json"), "w") as f:
+                    json.dump(doc, f)
+            except OSError:
+                pass                   # telemetry is best-effort
+
     def _run_base(self, lv: Level, step: int, snap: _SaveSnapshot,
                   capture: Optional[_ChainState]) -> str:
         try:
             t0 = time.perf_counter()
-            entries = snap.entries_all()
-            if capture is not None:
-                capture.sources = snap.chain_sources()
+            with snap.obs_handle.stage("pack", level=lv.directory):
+                entries = snap.entries_all()
+                if capture is not None:
+                    capture.sources = snap.chain_sources()
             snap.stage_max("pack_s", time.perf_counter() - t0)
             producer = None
             order = None
@@ -799,24 +918,26 @@ class CheckpointManager:
             err: Optional[BaseException] = None
             t1 = time.perf_counter()
             path = None
-            try:
-                path = save_checkpoint(lv.directory, step, None,
-                                       precision=self.precision,
-                                       shards=lv.shards, parity=lv.parity,
-                                       stream=entries,
-                                       submit=self._submit_io(),
-                                       order=order, owner=self._owner)
-            except BaseException as e:   # noqa: BLE001 - re-raised below
-                err = e
-                snap.abort()             # unblock a producer on full queues
-            if producer is not None:
+            with snap.obs_handle.stage("write", level=lv.directory):
                 try:
-                    producer.result()
-                except BaseException as pe:  # noqa: BLE001
-                    if err is None:
-                        err = pe
-            if err is not None:
-                raise err
+                    path = save_checkpoint(lv.directory, step, None,
+                                           precision=self.precision,
+                                           shards=lv.shards,
+                                           parity=lv.parity,
+                                           stream=entries,
+                                           submit=self._submit_io(),
+                                           order=order, owner=self._owner)
+                except BaseException as e:   # noqa: BLE001 - re-raised below
+                    err = e
+                    snap.abort()         # unblock a producer on full queues
+                if producer is not None:
+                    try:
+                        producer.result()
+                    except BaseException as pe:  # noqa: BLE001
+                        if err is None:
+                            err = pe
+                if err is not None:
+                    raise err
             snap.stage_max("write_s", time.perf_counter() - t1)
         except BaseException:
             if capture is not None:
@@ -830,18 +951,22 @@ class CheckpointManager:
                    prev_sources: Dict[str, Any]) -> str:
         try:
             t0 = time.perf_counter()
-            deltas, moved = snap.build_deltas(prev_sources,
-                                              self.delta_chunk_bytes)
-            cs.sources = snap.chain_sources()
+            with snap.obs_handle.stage("delta", level=lv.directory):
+                deltas, moved = snap.build_deltas(prev_sources,
+                                                  self.delta_chunk_bytes)
+                cs.sources = snap.chain_sources()
             snap.stat_add("d2h_bytes", int(moved))
+            self.obs.registry.counter("save.d2h_bytes").inc(int(moved))
             snap.stage_max("delta_s", time.perf_counter() - t0)
-            snap.stats["levels"][lv.directory]["delta_bytes"] = int(
-                sum(_entry_nbytes(d) for d in deltas.values()))
+            snap.stat_level(lv.directory, "delta_bytes", int(
+                sum(_entry_nbytes(d) for d in deltas.values())))
             t1 = time.perf_counter()
-            path = save_delta_checkpoint(lv.directory, step, deltas, chain,
-                                         shards=lv.shards, parity=lv.parity,
-                                         submit=self._submit_io(),
-                                         owner=self._owner)
+            with snap.obs_handle.stage("write", level=lv.directory):
+                path = save_delta_checkpoint(lv.directory, step, deltas,
+                                             chain, shards=lv.shards,
+                                             parity=lv.parity,
+                                             submit=self._submit_io(),
+                                             owner=self._owner)
             snap.stage_max("write_s", time.perf_counter() - t1)
         except BaseException:
             self._drop_chain(lv, cs)
@@ -930,15 +1055,17 @@ class CheckpointManager:
         for step, root in self._candidates():
             io_stats: Dict[str, int] = {}
             try:
-                step, packed, _ = load_checkpoint_raw(root, step,
-                                                      io_stats=io_stats)
+                with self.obs.tracer.span("restore.read", step=step):
+                    step, packed, _ = load_checkpoint_raw(root, step,
+                                                          io_stats=io_stats)
             except (OSError, ValueError, KeyError) as e:
                 skipped.append({"step": step, "root": root, "error": str(e)})
                 continue
             return self._materialize(state_like, shardings, packed, fill,
                                      mode, step, skipped, io_stats)
         if skipped:
-            self.last_restore_stats = {"skipped": skipped, "step": None}
+            self.last_restore_stats = self.obs.registry.publish(
+                "restore", {"skipped": skipped, "step": None})
         return None
 
     def _materialize(self, state_like, shardings, packed, fill, mode,
@@ -988,7 +1115,7 @@ class CheckpointManager:
         io_stats = io_stats or {}
         parity = int(io_stats.get("parity_bytes", 0))
         read = int(io_stats.get("bytes_read", 0))
-        self.last_restore_stats = {
+        self.last_restore_stats = self.obs.registry.publish("restore", {
             "step": step, "mode": mode, "h2d_bytes": int(h2d),
             "full_bytes": int(full), "device_leaves": device_leaves,
             "missing_leaves": missing, "skipped": skipped,
@@ -996,5 +1123,8 @@ class CheckpointManager:
             # resilience-level attribution: bytes served by the XOR
             # parity rebuild (L3) vs plain shared-store reads (L4)
             "level_bytes": {"l3_parity": parity, "l4_store": read - parity},
-            "resilience_level": "l3_parity" if parity else "l4_store"}
+            "resilience_level": "l3_parity" if parity else "l4_store"})
+        reg = self.obs.registry
+        reg.counter("restore.h2d_bytes").inc(int(h2d))
+        reg.counter("restore.bytes_read").inc(read)
         return step, jax.tree_util.tree_unflatten(treedef, out)

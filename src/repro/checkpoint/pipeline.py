@@ -237,16 +237,18 @@ def fetch_to_host(dev_flats: Sequence[Any],
     step).  ``heartbeat`` (a zero-arg callable) is invoked once per chunk
     so a long transfer on a writer thread can keep liveness tokens fresh
     without owning the loop."""
+    from repro import obs as obs_mod
     total = sum(int(a.shape[0]) * np.dtype(a.dtype).itemsize
                 for a in dev_flats)
     out = np.empty(total, np.uint8)
     off = 0
-    for arr in dev_flats:
-        for h in device_chunks(arr, chunk_bytes):
-            out[off:off + h.nbytes] = h
-            off += h.nbytes
-            if heartbeat is not None:
-                heartbeat()
+    with obs_mod.get_obs().tracer.span("d2h.fetch", bytes=total):
+        for arr in dev_flats:
+            for h in device_chunks(arr, chunk_bytes):
+                out[off:off + h.nbytes] = h
+                off += h.nbytes
+                if heartbeat is not None:
+                    heartbeat()
     return out
 
 
@@ -255,10 +257,13 @@ def run_transfers(streams: Sequence[TransferStream]) -> int:
     writer's consumption order — one producer for the whole save keeps the
     bounded queues deadlock-free regardless of pool size).  On error every
     unclosed sink is failed so the consumer raises instead of hanging."""
+    from repro import obs as obs_mod
     moved = 0
     try:
-        for st in streams:
-            moved += st.run()
+        with obs_mod.get_obs().tracer.span("d2h.stream") as sp:
+            for st in streams:
+                moved += st.run()
+            sp.set(bytes=moved)
     except BaseException as e:
         for st in streams:
             for sink, _, _ in st.sinks:

@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -45,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core.bitset import BitMask
 from repro.core.policy import LeafPolicy, PrecisionPolicy, ScrutinyConfig
 from repro.core.regions import RegionTable
@@ -781,14 +783,27 @@ def scrutinize(
     leaves = [jnp.asarray(l) for _, l in leaves_with_path]
     policies = [config.leaf_policy(l) for l in leaves]
 
-    pre = _prepass_for(fn, state, names, leaves, policies, config)
+    obs = obs_mod.get_obs()
+    with obs.tracer.span("scrutiny.prepass", leaves=len(leaves)):
+        pre = _prepass_for(fn, state, names, leaves, policies, config)
     eng = _engine_for(fn, treedef, names, leaves, policies, config,
                       pre.dead)
-    if engine == "host":
-        return _scrutinize_host(eng, names, leaves, policies, config, key,
-                                pre)
-    return _scrutinize_device(eng, names, leaves, policies, config, key,
-                              mask_shardings, pre)
+    t0 = time.perf_counter()
+    with obs.tracer.span("scrutiny.sweep", engine=engine,
+                         probes=eng.probes, leaves=len(eng.ad_idx)):
+        if engine == "host":
+            rep = _scrutinize_host(eng, names, leaves, policies, config,
+                                   key, pre)
+        else:
+            rep = _scrutinize_device(eng, names, leaves, policies, config,
+                                     key, mask_shardings, pre)
+    if obs.enabled:
+        reg = obs.registry
+        reg.histogram("scrutiny.sweep_s").observe(time.perf_counter() - t0)
+        # sweep-time D2H only; lazy host-mask materialization accrues on
+        # the report's own stats dict afterwards
+        reg.counter("scrutiny.d2h_bytes").inc(int(rep.stats["d2h_bytes"]))
+    return rep
 
 
 def _scrutinize_device(eng: _SweepEngine, names, leaves, policies,

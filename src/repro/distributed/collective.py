@@ -97,11 +97,15 @@ class BarrierTimeout(TimeoutError):
     """
 
     def __init__(self, name: str, missing: Sequence[int], expected: int,
-                 waited_s: float):
+                 waited_s: float, arrivals: Optional[dict] = None):
         self.barrier_name = name
         self.missing = sorted(int(m) for m in missing)
         self.expected = int(expected)
         self.waited_s = float(waited_s)
+        # per-host first-seen arrival delay (seconds after this process
+        # entered the barrier); absent hosts have no entry — the gap data
+        # feeding the heartbeat-gap gauges even on the failure path
+        self.arrivals = dict(arrivals or {})
         hosts = ", ".join(f"host {m}" for m in self.missing)
         super().__init__(
             f"barrier {name!r}: processes {self.missing} of "
@@ -121,6 +125,9 @@ class Collective:
 
     def __init__(self, ctx: ProcessContext):
         self.ctx = ctx
+        # optional repro.obs.Observability bundle; backends that poll
+        # record barrier waits / per-host arrival gaps through it
+        self.obs: Optional[Any] = None
 
     def barrier(self, name: str, timeout: Optional[float] = None,
                 participants: Optional[Sequence[int]] = None,
@@ -232,21 +239,32 @@ class FileCollective(Collective):
         with open(mine, "w") as f:
             f.write(str(self.ctx.index))
         wait_s = self.timeout_s if timeout is None else float(timeout)
-        deadline = time.monotonic() + wait_s
+        t0 = time.monotonic()
+        deadline = t0 + wait_s
         poll = self.poll_s
         last_missing = len(procs)
+        arrivals = {self.ctx.index: 0.0}    # host -> first-seen delay (s)
         while True:
             if heartbeat is not None:
                 heartbeat()
+            now = time.monotonic()
             missing = [j for j in procs
                        if not os.path.exists(self._path(name, j))]
+            for j in procs:
+                if j not in missing:
+                    arrivals.setdefault(j, now - t0)
             if not missing:
+                self._record_barrier(time.monotonic() - t0, arrivals,
+                                     timed_out=False)
                 return
             if self.ctx.index in missing:   # swept by a leader cleanup
                 with open(mine, "w") as f:
                     f.write(str(self.ctx.index))
             if time.monotonic() > deadline:
-                raise BarrierTimeout(name, missing, len(procs), wait_s)
+                self._record_barrier(time.monotonic() - t0, arrivals,
+                                     timed_out=True)
+                raise BarrierTimeout(name, missing, len(procs), wait_s,
+                                     arrivals=arrivals)
             if len(missing) < last_missing:     # progress: stay responsive
                 poll = self.poll_s
             last_missing = len(missing)
@@ -254,6 +272,21 @@ class FileCollective(Collective):
             # herd of pollers hitting the shared directory
             time.sleep(poll * (0.75 + 0.5 * random.random()))
             poll = min(poll * 2.0, self.max_poll_s)
+
+    def _record_barrier(self, waited_s: float, arrivals: dict,
+                        timed_out: bool) -> None:
+        """Feed the barrier wait + per-host arrival gaps to the attached
+        telemetry registry (success *and* timeout paths — slow-peer gap
+        maxima are most interesting right before a death)."""
+        obs = self.obs
+        if obs is None or not obs.enabled:
+            return
+        reg = obs.registry
+        reg.histogram("barrier.wait_s").observe(waited_s)
+        for j, gap in sorted(arrivals.items()):
+            reg.gauge(f"barrier.arrival_gap_s.host{j}").set(gap)
+        if timed_out:
+            reg.counter("barrier.timeouts").inc()
 
     def cleanup(self, before_seq: int) -> None:
         """Unlink this process's *own* files for barriers tagged

@@ -1,0 +1,205 @@
+"""Criticality-drift tracker: how much do the masks move between sweeps?
+
+The paper's key qualitative result is the *visualization* of critical /
+uncritical patterns at one instant; this module extends it over time.
+Each time a new criticality report is computed the tracker diffs every
+leaf's bitmask against the previous sweep's:
+
+* **device reports** — the diff runs *on device* over the bit-packed
+  mask words (``words_dev``): bitwise XOR + ``lax.population_count``,
+  summed per leaf, with one batched ``device_get`` for the whole report.
+  Tail pad bits are zero in both operands so they never contribute.
+* **host reports** — ``np.packbits`` + the same XOR/popcount in numpy
+  (this is also the oracle the device path is tested against).
+* **policy leaves** (no element mask, all-or-nothing) — a flip is the
+  whole leaf changing its critical bit.
+
+Per leaf it records the element **flip rate** (changed mask bits / n)
+and **word churn** (packed 8-bit words containing ≥1 flip / total words
+— the region-granularity signal: low flip rate + high churn means the
+changes are scattered, which is what breaks delta-chain locality).
+History accumulates on the tracker (it rides into ``telemetry.json``)
+and headline rates feed the metrics registry.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def _packed_words(leaf) -> Any:
+    """Device ``words_dev`` if present, else host-packed mask, else None."""
+    words = getattr(leaf, "words_dev", None)
+    if words is not None:
+        return words
+    mask = getattr(leaf, "mask", None)
+    if mask is None:
+        return None
+    return np.packbits(np.asarray(mask, dtype=bool))
+
+
+def _is_device(words) -> bool:
+    return not isinstance(words, np.ndarray)
+
+
+class DriftTracker:
+    """Diffs successive criticality reports; one instance per manager."""
+
+    def __init__(self, registry=None):
+        self.registry = registry
+        self._prev: Dict[str, Any] = {}
+        self._prev_leaves: Optional[Any] = None
+        self.history: List[Dict[str, Any]] = []
+        self.last: Optional[Dict[str, Any]] = None
+
+    def _observe_identical(self, step: Optional[int]) -> Dict[str, Any]:
+        """The same report object re-observed: every mask is bitwise
+        unchanged by construction, so record a zero-flip sweep without
+        re-packing or diffing anything (keeps tracing overhead off the
+        save hot path when scrutiny is reused between checkpoints)."""
+        rec_leaves: Dict[str, Dict[str, Any]] = {}
+        for name, prev_e in self.last["leaves"].items():
+            e = {k: prev_e[k] for k in
+                 ("n", "words", "policy", "critical_count",
+                  "critical_fraction") if k in prev_e}
+            e.update(flips=0, flip_rate=0.0, word_churn=0.0)
+            if "words" in prev_e:
+                e["changed_words"] = 0
+            rec_leaves[name] = e
+        rec = {"step": step, "sweep": len(self.history),
+               "leaves": rec_leaves, "total_flips": 0,
+               "total_elements": self.last["total_elements"],
+               "flip_rate": 0.0}
+        self.history.append(rec)
+        self.last = rec
+        if self.registry is not None:
+            self.registry.counter("drift.sweeps").inc()
+            self.registry.histogram("drift.flip_rate").observe(0.0)
+        return rec
+
+    def observe(self, report, step: Optional[int] = None) -> Dict[str, Any]:
+        """Record one report; returns the drift record for this sweep."""
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        leaves = getattr(report, "leaves", report)
+        if leaves is self._prev_leaves and self.last is not None:
+            return self._observe_identical(step)
+        self._prev_leaves = leaves
+        rec_leaves: Dict[str, Dict[str, Any]] = {}
+        # device scalars batched into one transfer: (kind, name, jnp scalar)
+        pending: List[Any] = []
+
+        def defer(val):
+            pending.append(val)
+            return len(pending) - 1
+
+        cur: Dict[str, Any] = {}
+        for name, leaf in leaves.items():
+            n = int(getattr(leaf, "n", 0) or
+                    int(np.prod(getattr(leaf, "shape", ()) or (1,))))
+            words = _packed_words(leaf)
+            entry: Dict[str, Any] = {"n": n}
+            if words is None:
+                crit = bool(getattr(leaf, "critical", True))
+                cur[name] = ("policy", crit, n)
+                prev = self._prev.get(name)
+                entry["policy"] = True
+                entry["critical_fraction"] = 1.0 if crit else 0.0
+                if prev is None or prev[0] != "policy":
+                    entry["new"] = True
+                    entry["flips"] = 0
+                else:
+                    entry["flips"] = n if prev[1] != crit else 0
+                entry["flip_rate"] = entry["flips"] / max(n, 1)
+                entry["word_churn"] = 1.0 if entry["flips"] else 0.0
+                rec_leaves[name] = entry
+                continue
+
+            total_words = int(words.shape[0])
+            entry["words"] = total_words
+            dev = _is_device(words)
+            # current critical count → critical_fraction gauge
+            if dev:
+                entry["_crit_idx"] = defer(jnp.sum(
+                    lax.population_count(words).astype(jnp.uint32)))
+            else:
+                entry["critical_count"] = int(
+                    np.unpackbits(words)[:n].sum())
+            cur[name] = ("words", words, n)
+            prev = self._prev.get(name)
+            same = (prev is not None and prev[0] == "words"
+                    and prev[2] == n
+                    and getattr(prev[1], "shape", None) == words.shape)
+            if not same:
+                entry["new"] = True
+                entry["flips"] = 0
+                entry["changed_words"] = 0
+            elif prev[1] is words:
+                # identical report object reused (incremental re-scrutiny
+                # kept the leaf): zero flips without touching the device
+                entry["flips"] = 0
+                entry["changed_words"] = 0
+            elif dev and _is_device(prev[1]):
+                x = jnp.bitwise_xor(words, prev[1])
+                entry["_flips_idx"] = defer(jnp.sum(
+                    lax.population_count(x).astype(jnp.uint32)))
+                entry["_churn_idx"] = defer(jnp.sum(
+                    (x != 0).astype(jnp.uint32)))
+            else:
+                w0 = prev[1] if isinstance(prev[1], np.ndarray) \
+                    else np.asarray(jax.device_get(prev[1]))
+                w1 = words if isinstance(words, np.ndarray) \
+                    else np.asarray(jax.device_get(words))
+                x = np.bitwise_xor(w0, w1)
+                entry["flips"] = int(np.unpackbits(x).sum())
+                entry["changed_words"] = int(np.count_nonzero(x))
+            rec_leaves[name] = entry
+
+        fetched = jax.device_get(pending) if pending else []
+
+        total_flips = 0
+        total_elements = 0
+        for name, entry in rec_leaves.items():
+            if "_crit_idx" in entry:
+                entry["critical_count"] = int(fetched[entry.pop("_crit_idx")])
+            if "_flips_idx" in entry:
+                entry["flips"] = int(fetched[entry.pop("_flips_idx")])
+                entry["changed_words"] = int(fetched[entry.pop("_churn_idx")])
+            n = entry["n"]
+            if "critical_count" in entry:
+                entry["critical_fraction"] = entry["critical_count"] / max(n, 1)
+            if "flip_rate" not in entry:
+                entry["flip_rate"] = entry["flips"] / max(n, 1)
+            if "word_churn" not in entry and "words" in entry:
+                entry["word_churn"] = (entry.get("changed_words", 0)
+                                       / max(entry["words"], 1))
+            total_flips += entry["flips"]
+            total_elements += n
+
+        self._prev = cur
+        rec = {
+            "step": step,
+            "sweep": len(self.history),
+            "leaves": rec_leaves,
+            "total_flips": int(total_flips),
+            "total_elements": int(total_elements),
+            "flip_rate": total_flips / max(total_elements, 1),
+        }
+        self.history.append(rec)
+        self.last = rec
+        if self.registry is not None:
+            self.registry.counter("drift.sweeps").inc()
+            self.registry.histogram("drift.flip_rate").observe(
+                rec["flip_rate"])
+            for name, entry in rec_leaves.items():
+                if "critical_fraction" in entry:
+                    self.registry.gauge(
+                        f"scrutiny.critical_fraction.{name}").set(
+                            entry["critical_fraction"])
+                self.registry.gauge(f"drift.flip_rate.{name}").set(
+                    entry["flip_rate"])
+        return rec

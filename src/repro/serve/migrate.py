@@ -34,8 +34,13 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint.coordinator import GlobalManifest
+from repro.obs.trace import _NULL_SPAN
 
 SESSIONS_PREFIX = "sessions/"
+
+
+def _null_span():
+    return _NULL_SPAN
 
 
 def manifest_sessions(gm: GlobalManifest) -> Dict[str, Dict[str, Dict[str, Any]]]:
@@ -113,7 +118,11 @@ def restore_sessions(ckpt, sids: Optional[List[str]] = None,
         _, state = got
         return step, dict(state["sessions"]), missing
     if sids is not None:
-        ckpt.last_restore_stats = {"skipped": skipped, "step": None}
+        obs = getattr(ckpt, "obs", None)
+        stats = {"skipped": skipped, "step": None}
+        ckpt.last_restore_stats = (
+            obs.registry.publish("restore", stats) if obs is not None
+            else stats)
     return None
 
 
@@ -147,29 +156,46 @@ def adopt_sessions(manager, dead_host: int,
     serving its own sessions throughout; restore I/O is attributed in
     ``read_stats`` (a partner adoption shows ``bytes_read_store == 0``).
     """
+    import time
+
     ckpt = manager.ckpt
+    obs = getattr(ckpt, "obs", None)
+    t0 = time.perf_counter()
     latest = ckpt.latest()
     if latest is None:
         return AdoptionReport(step=None, dead_host=dead_host, adopted=[],
                               shed=[], missing=sorted(sids or []))
     step, root = latest
-    owners = session_owners(GlobalManifest.load(root, step))
-    dead = sorted(s for s, h in owners.items()
-                  if h == dead_host and s not in manager.sessions)
-    if sids is not None:
-        dead = [s for s in dead if s in sids]
-    cap = (None if manager.max_sessions is None
-           else max(manager.max_sessions - len(manager.sessions), 0))
-    take = dead if cap is None else dead[:cap]
-    shed = dead[len(take):]
-    res = restore_sessions(ckpt, sids=take) if take else (step, {}, [])
-    if res is None:
-        return AdoptionReport(step=None, dead_host=dead_host, adopted=[],
-                              shed=shed, missing=take)
-    got_step, restored, missing = res
-    for sid, state in restored.items():
-        manager.sessions[sid] = state
-    return AdoptionReport(step=got_step, dead_host=dead_host,
-                          adopted=sorted(restored), shed=shed,
-                          missing=missing,
-                          read_stats=ckpt.last_restore_stats)
+    with (obs.tracer.span("serve.adopt", dead_host=dead_host)
+          if obs is not None else _null_span()):
+        owners = session_owners(GlobalManifest.load(root, step))
+        dead = sorted(s for s, h in owners.items()
+                      if h == dead_host and s not in manager.sessions)
+        if sids is not None:
+            dead = [s for s in dead if s in sids]
+        cap = (None if manager.max_sessions is None
+               else max(manager.max_sessions - len(manager.sessions), 0))
+        take = dead if cap is None else dead[:cap]
+        shed = dead[len(take):]
+        res = restore_sessions(ckpt, sids=take) if take else (step, {}, [])
+        if res is None:
+            return AdoptionReport(step=None, dead_host=dead_host,
+                                  adopted=[], shed=shed, missing=take)
+        got_step, restored, missing = res
+        for sid, state in restored.items():
+            manager.sessions[sid] = state
+    report = AdoptionReport(step=got_step, dead_host=dead_host,
+                            adopted=sorted(restored), shed=shed,
+                            missing=missing,
+                            read_stats=ckpt.last_restore_stats)
+    if obs is not None and obs.enabled:
+        reg = obs.registry
+        # downtime proxy: manifest walk + level-cascade restore, i.e. how
+        # long the adopted sessions were unservable on this host
+        reg.gauge("serve.migration_downtime_s").set(
+            time.perf_counter() - t0)
+        reg.counter("serve.adopted").inc(len(report.adopted))
+        reg.counter("serve.shed").inc(len(report.shed))
+        if report.partner_served:
+            reg.counter("serve.partner_served").inc()
+    return report

@@ -170,26 +170,29 @@ class SessionManager:
         needed until the next re-scrutiny — the soundness condition for
         re-using it across delta-chain snapshots of a growing cache.
         """
+        obs = self.ckpt.obs
         leaves: Dict[str, LeafReport] = {}
         stats: Dict[str, Any] = {"sessions": {}}
-        for sid, state in tree["sessions"].items():
-            probe = dict(state)
-            if self.mask_headroom:
-                cap = max(int(self.engine.max_len) - self.horizon, 0)
-                probe["pos"] = jnp.minimum(
-                    state["pos"] + self.mask_headroom, cap).astype(
-                        state["pos"].dtype)
-            rep = scrutinize(self._resume, probe,
-                             config=self.scrutiny_config)
-            for name, lr in rep.leaves.items():
-                full = f"sessions/{sid}/{name}"
-                leaves[full] = _renamed_leaf(lr, full)
-            stats["sessions"][sid] = {
-                "total": rep.total_elements,
-                "uncritical": rep.uncritical_elements,
-                "uncritical_rate": rep.uncritical_rate,
-            }
-        self.last_session_stats = stats
+        with obs.tracer.span("serve.scrutinize",
+                             sessions=len(tree["sessions"])):
+            for sid, state in tree["sessions"].items():
+                probe = dict(state)
+                if self.mask_headroom:
+                    cap = max(int(self.engine.max_len) - self.horizon, 0)
+                    probe["pos"] = jnp.minimum(
+                        state["pos"] + self.mask_headroom, cap).astype(
+                            state["pos"].dtype)
+                rep = scrutinize(self._resume, probe,
+                                 config=self.scrutiny_config)
+                for name, lr in rep.leaves.items():
+                    full = f"sessions/{sid}/{name}"
+                    leaves[full] = _renamed_leaf(lr, full)
+                stats["sessions"][sid] = {
+                    "total": rep.total_elements,
+                    "uncritical": rep.uncritical_elements,
+                    "uncritical_rate": rep.uncritical_rate,
+                }
+        self.last_session_stats = obs.registry.publish("sessions", stats)
         return CriticalityReport(leaves=leaves, stats=stats)
 
     # --- snapshot / restore ----------------------------------------------
@@ -206,12 +209,19 @@ class SessionManager:
         ``Level(max_chain=K)`` consecutive snapshots between re-scrutinies
         ride a differential chain (append-only KV → near-zero deltas).
         """
-        tree = self.state_tree()
-        # session sets change between saves: re-pin the shardings tree to
-        # match (safe — the coordinator reads it synchronously in save())
-        self.ckpt.shardings = jax.tree_util.tree_map(
-            lambda _: HostPinned(self.ctx.index), tree)
-        return self.ckpt.save(step, tree, block=block)
+        obs = self.ckpt.obs
+        with obs.tracer.span("serve.snapshot", step=int(step),
+                             sessions=len(self.sessions)):
+            tree = self.state_tree()
+            # session sets change between saves: re-pin the shardings tree
+            # to match (safe — the coordinator reads it synchronously in
+            # save())
+            self.ckpt.shardings = jax.tree_util.tree_map(
+                lambda _: HostPinned(self.ctx.index), tree)
+            out = self.ckpt.save(step, tree, block=block)
+        if obs.enabled:
+            obs.registry.gauge("serve.sessions").set(len(self.sessions))
+        return out
 
     def restore(self, sids: Optional[List[str]] = None,
                 missing_out: Optional[List[Dict[str, Any]]] = None) -> Optional[int]:
@@ -227,7 +237,8 @@ class SessionManager:
         committed snapshot exists).
         """
         from repro.serve import migrate
-        res = migrate.restore_sessions(self.ckpt, sids=sids)
+        with self.ckpt.obs.tracer.span("serve.restore"):
+            res = migrate.restore_sessions(self.ckpt, sids=sids)
         if res is None:
             if missing_out is not None:
                 for sid in (sids if sids is not None

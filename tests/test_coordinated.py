@@ -783,8 +783,13 @@ def test_crash_mid_pipeline_nonleader_degraded_commit(tmp_path):
             pack_use_kernel=False, pack_interpret=True,
             barrier_timeout_s=3.0, fault_injector=inj)
         mgr.save(1, make_state())
-        stats = dict(mgr.last_save_stats)
-        mgr.close()                  # drains; the victim raises here
+        # stats are published as immutable snapshots: the dispatch-time
+        # snapshot has no writer-thread phase data, so read the finalized
+        # one after the drain (close() drains; the victim raises there)
+        try:
+            mgr.close()
+        finally:
+            stats = dict(mgr.last_save_stats)
         return stats
 
     results, errors = run_hosts(3, host)
